@@ -1,0 +1,39 @@
+"""Communication volume: quorum vs ring vs all-gather sequence-parallel
+attention (the beyond-paper application; paper section 1.2 comparison axis).
+
+Counts, per device, the bytes moved by each strategy's collective schedule
+for one attention layer at the long_500k geometry, plus the number of
+serialized collective phases (latency proxy — ring needs P-1 dependent
+steps, quorum needs k-1 + k with k ~ sqrt(P)).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.scheduler import build_causal_schedule, build_schedule
+
+
+def run(csv_rows, seq: int = 524_288, kv_heads: int = 8, hd: int = 128,
+        dtype_bytes: int = 2):
+    for P in [16, 32, 64, 256]:
+        block = seq // P
+        kv_block_bytes = 2 * block * kv_heads * hd * dtype_bytes  # K and V
+        q_block_bytes = kv_block_bytes // 2
+
+        cs = build_causal_schedule(P)
+        k = cs.k
+        # quorum: gather k-1 shifted (q,k,v) blocks + route k partial (o,m,l)
+        out_part_bytes = q_block_bytes + 2 * block * kv_heads * dtype_bytes
+        quorum = (k - 1) * (kv_block_bytes + q_block_bytes) + k * out_part_bytes
+        quorum_steps = (k - 1) + k
+        # ring: P-1 rotations of (k, v)
+        ring = (P - 1) * kv_block_bytes
+        ring_steps = P - 1
+        # all-gather: every device receives all P-1 remote kv blocks
+        ag = (P - 1) * kv_block_bytes
+        csv_rows.append((
+            f"attn_comm_P{P}", f"{quorum/1e6:.1f}",
+            f"quorum_MB;ring_MB={ring/1e6:.1f};allgather_MB={ag/1e6:.1f};"
+            f"steps={quorum_steps}v{ring_steps};k={k};"
+            f"byte_ratio={quorum/ring:.2f}"))

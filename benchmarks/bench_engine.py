@@ -1,0 +1,48 @@
+"""Engine microbenchmarks: quorum vs all-gather all-pairs wall time (CPU,
+subprocess-isolated fake devices) on the n-body kernel — the paper's
+motivating algorithm family."""
+
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+SRC = Path(__file__).resolve().parents[1] / "src"
+
+_CHILD = r"""
+import json, sys, time
+import numpy as np, jax, jax.numpy as jnp
+from repro.apps.nbody import distributed_forces
+P = int(sys.argv[1]); N = int(sys.argv[2])
+rng = np.random.default_rng(0)
+bodies = np.concatenate([rng.normal(size=(N,3)),
+                         rng.uniform(0.5,2,(N,1))], -1).astype(np.float32)
+mesh = jax.make_mesh((P,), ("q",), axis_types=(jax.sharding.AxisType.Auto,))
+out = {}
+for strat in ["quorum", "atom"]:
+    distributed_forces(jnp.asarray(bodies), mesh, strategy=strat)  # warmup
+    t0 = time.perf_counter()
+    for _ in range(5):
+        distributed_forces(jnp.asarray(bodies), mesh, strategy=strat).block_until_ready()
+    out[strat] = (time.perf_counter() - t0) / 5
+print(json.dumps(out))
+"""
+
+
+def run(csv_rows, N: int = 4096):
+    for P in [4, 8]:
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={P}"
+        env["PYTHONPATH"] = str(SRC)
+        r = subprocess.run([sys.executable, "-c", _CHILD, str(P), str(N)],
+                           env=env, capture_output=True, text=True,
+                           timeout=900)
+        assert r.returncode == 0, r.stderr[-2000:]
+        res = json.loads(r.stdout.strip().splitlines()[-1])
+        csv_rows.append((
+            f"nbody_engine_P{P}", f"{res['quorum']*1e6:.0f}",
+            f"quorum_us;atom_us={res['atom']*1e6:.0f};"
+            f"ratio={res['quorum']/res['atom']:.2f}"))

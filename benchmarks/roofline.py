@@ -1,0 +1,106 @@
+"""Roofline analysis from the dry-run JSON (deliverable g).
+
+Per (arch x shape x mesh):
+  compute    = HLO_FLOPs / peak_FLOP/s          (per chip; extrapolated)
+  memory     = HLO_bytes / HBM_bw               (per chip)
+  collective = wire_bytes / (links * link_bw)   (per chip)
+plus MODEL_FLOPS = 6*N_active*D (train) or 2*N_active*D (inference) and the
+useful-compute ratio MODEL_FLOPS / HLO_FLOPs_total.
+
+Hardware constants (TPU v5e per chip): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI with 4 links usable per chip on the 2-D torus (we charge
+the ICI term conservatively against ONE link — the schedule rarely balances
+all links).
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.roofline results/dryrun_all.json [--md]
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+PEAK_FLOPS = 197e12        # bf16 / chip
+HBM_BW = 819e9             # B/s / chip
+ICI_BW = 50e9              # B/s / link (1 link charged)
+
+
+def analyze(cell: dict) -> dict | None:
+    if "error" in cell or "cost" not in cell:
+        return None
+    chips = 1
+    for v in cell["mesh"].values():
+        chips *= v
+    flops_dev = cell["cost"]["flops"]          # per-device (SPMD module)
+    bytes_dev = cell["cost"]["bytes"]
+    wire_dev = cell["cost"]["collectives"]["wire_total"]
+
+    t_compute = flops_dev / PEAK_FLOPS
+    t_memory = bytes_dev / HBM_BW
+    t_coll = wire_dev / ICI_BW
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    bottleneck = max(terms, key=terms.get)
+    model_flops_dev = cell["model_flops"] / chips
+    ratio = model_flops_dev / flops_dev if flops_dev else 0.0
+    t_bound = max(terms.values())
+    if cell["kind"] == "decode":
+        # decode is bandwidth-bound by construction: the ideal step streams
+        # the resident state (params shard + caches = argument bytes) from
+        # HBM exactly once; roofline fraction = ideal stream time / bound.
+        t_ideal = cell["memory"]["argument_bytes"] / HBM_BW
+        frac = t_ideal / t_bound if t_bound else 0.0
+    else:
+        # train/prefill: useful model FLOP/s achievable under the dominant
+        # term, as a fraction of peak compute.
+        frac = (model_flops_dev / t_bound) / PEAK_FLOPS if t_bound else 0.0
+    return {
+        "arch": cell["arch"], "shape": cell["shape"],
+        "mesh": "x".join(str(v) for v in cell["mesh"].values()),
+        "chips": chips, "accum": cell.get("accum", 1),
+        "fits": cell.get("fits_hbm"),
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_collective_s": t_coll, "bottleneck": bottleneck,
+        "model_flops": cell["model_flops"],
+        "hlo_flops_dev": flops_dev,
+        "useful_ratio": ratio,
+        "roofline_frac": frac,
+        "mem_gib": (cell["memory"]["argument_bytes"]
+                    + cell["memory"]["temp_bytes"]) / 2 ** 30,
+    }
+
+
+def render_md(rows) -> str:
+    hdr = ("| arch | shape | mesh | fits | accum | compute s | memory s | "
+           "collective s | bottleneck | 6ND/HLO | roofline |\n"
+           "|---|---|---|---|---|---|---|---|---|---|---|\n")
+    out = [hdr]
+    for r in rows:
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+            f"{'Y' if r['fits'] else 'N'} | {r['accum']} | "
+            f"{r['t_compute_s']:.3e} | {r['t_memory_s']:.3e} | "
+            f"{r['t_collective_s']:.3e} | **{r['bottleneck']}** | "
+            f"{r['useful_ratio']:.2f} | {r['roofline_frac']:.1%} |\n")
+    return "".join(out)
+
+
+def main(argv=None):
+    argv = argv or sys.argv[1:]
+    path = Path(argv[0] if argv else "results/dryrun_all.json")
+    cells = json.loads(path.read_text())
+    rows = [a for a in (analyze(c) for c in cells) if a]
+    if "--md" in argv:
+        print(render_md(rows))
+        return rows
+    for r in rows:
+        print(f"{r['arch']:26s} {r['shape']:12s} {r['mesh']:8s} "
+              f"cmp={r['t_compute_s']:.2e} mem={r['t_memory_s']:.2e} "
+              f"col={r['t_collective_s']:.2e} -> {r['bottleneck']:10s} "
+              f"useful={r['useful_ratio']:.2f} roof={r['roofline_frac']:.1%}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows:
+  bench_quorum         — quorum size table (paper section 3.2)
+  bench_memory         — Fig. 2 right: memory/process vs P
+  bench_pcit_speedup   — Fig. 2 left: PCIT runtime + speedup vs P
+  bench_engine         — n-body quorum vs atom-decomposition wall time
+  bench_attention_comm — comm-volume model: quorum vs ring vs all-gather
+
+Roofline extraction from the dry-run lives in benchmarks/roofline.py (it
+needs the 512-device dry-run JSON, produced by repro.launch.dryrun --all).
+"""
+
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from . import (bench_attention_comm, bench_attention_hlo, bench_engine,
+                   bench_memory, bench_pcit_speedup, bench_quorum)
+    rows = [("name", "us_per_call", "derived")]
+    modules = [bench_quorum, bench_memory, bench_attention_comm,
+               bench_attention_hlo, bench_engine, bench_pcit_speedup]
+    fast = "--fast" in sys.argv
+    if fast:
+        modules = modules[:3]
+    for mod in modules:
+        try:
+            mod.run(rows)
+        except Exception:
+            traceback.print_exc()
+            rows.append((mod.__name__, "ERROR", ""))
+    for r in rows:
+        print(",".join(str(x) for x in r))
+
+
+if __name__ == "__main__":
+    main()

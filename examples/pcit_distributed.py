@@ -1,0 +1,61 @@
+"""The paper's experiment (section 5), reproduced end-to-end: PCIT gene
+co-expression network reconstruction with cyclic quorum distribution —
+including the speedup/memory summary of Fig. 2 and a failover demo.
+
+Run:  PYTHONPATH=src python examples/pcit_distributed.py
+"""
+
+import os
+import sys
+
+if "XLA_FLAGS" not in os.environ:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    os.execv(sys.executable, [sys.executable] + sys.argv)
+
+import time  # noqa: E402
+
+import numpy as np  # noqa: E402
+import jax  # noqa: E402
+
+from repro.apps.pcit import pcit_reference, run_quorum_pcit  # noqa: E402
+from repro.core.scheduler import build_schedule, reassign  # noqa: E402
+
+
+def main():
+    rng = np.random.default_rng(0)
+    N, G = 128, 40
+    # synthetic co-expression: 10 latent regulators drive the genes
+    Z = rng.normal(size=(10, G))
+    X = (rng.normal(size=(N, 10)) @ Z
+         + 0.5 * rng.normal(size=(N, G))).astype(np.float32)
+
+    print("single-node O(N^3) PCIT oracle ...")
+    t0 = time.perf_counter()
+    ref = pcit_reference(X)
+    t_ref = time.perf_counter() - t0
+
+    for P in [4, 8]:
+        mesh = jax.make_mesh((P,), ("q",),
+                             axis_types=(jax.sharding.AxisType.Auto,))
+        run_quorum_pcit(X, mesh)  # warm compile
+        t0 = time.perf_counter()
+        corr, keep = run_quorum_pcit(X, mesh)
+        t_q = time.perf_counter() - t0
+        s = build_schedule(P)
+        assert (keep == ref).all()
+        print(f"P={P}: exact match; quorum runtime {t_q*1e3:.1f} ms "
+              f"(oracle {t_ref*1e3:.0f} ms); memory/process = "
+              f"{s.k}/{P} = {s.k/P:.2%} of all-data")
+
+    # failover: device 3 dies — quorum redundancy reassigns its pairs
+    s = build_schedule(8)
+    plan = reassign(s, [3])
+    print(f"\nfailover(P=8, dead=[3]): {plan.n_recovered} pairs reassigned "
+          f"({sum(map(len, plan.extra_pairs.values()))} free, "
+          f"{sum(map(len, plan.fetch_pairs.values()))} with one block fetch) "
+          "— no recompute of surviving work, no restart")
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

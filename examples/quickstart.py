@@ -1,0 +1,69 @@
+"""Quickstart: the paper in 60 seconds.
+
+1. Build a cyclic quorum set and verify the all-pairs property (Theorem 1).
+2. Run the paper's PCIT application distributed over 8 (virtual) processes
+   with O(N/sqrt(P)) memory per process, and check it against the O(N^3)
+   single-node oracle.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+(This script re-execs itself with 8 fake XLA host devices.)
+"""
+
+import os
+import sys
+
+if "XLA_FLAGS" not in os.environ:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    os.execv(sys.executable, [sys.executable] + sys.argv)
+
+import numpy as np  # noqa: E402
+import jax  # noqa: E402
+
+from repro.core.quorum import (cyclic_quorums, difference_set,  # noqa: E402
+                               verify_all_pairs_property)
+from repro.core.scheduler import build_schedule  # noqa: E402
+from repro.apps.pcit import (correlation_reference, pcit_reference,  # noqa: E402
+                             run_quorum_pcit)
+
+
+def main():
+    P = 8
+    A = difference_set(P)
+    Q = cyclic_quorums(P)
+    print(f"P = {P} processes")
+    print(f"relaxed ({P},{len(A)})-difference set A = {A}")
+    print(f"quorums (each size k={len(A)}, vs all-data size {P}):")
+    for i, S in enumerate(Q):
+        print(f"  S_{i} = {S}")
+    assert verify_all_pairs_property(Q, P)
+    print("all-pairs property verified: every block pair is co-resident "
+          "in >= 1 quorum (paper Theorem 1)\n")
+
+    s = build_schedule(P)
+    print(f"static schedule: every device computes exactly {s.n_pairs} "
+          f"block pairs (perfect balance)\n")
+
+    # --- the paper's application: PCIT gene co-expression -----------------
+    rng = np.random.default_rng(0)
+    N, G = 64, 24
+    Z = rng.normal(size=(6, G))
+    X = (rng.normal(size=(N, 6)) @ Z
+         + 0.4 * rng.normal(size=(N, G))).astype(np.float32)
+
+    mesh = jax.make_mesh((P,), ("q",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    corr, keep = run_quorum_pcit(X, mesh)
+    np.testing.assert_allclose(corr, correlation_reference(X),
+                               rtol=1e-4, atol=1e-5)
+    assert (keep == pcit_reference(X)).all()
+    kept = keep.mean()
+    mem_frac = s.k / P
+    print(f"quorum PCIT on {N} genes x {G} samples across {P} processes:")
+    print(f"  kept edge fraction      : {kept:.3f} (== single-node oracle)")
+    print(f"  memory per process      : {mem_frac:.2%} of all-data baseline"
+          f" (k/P = {s.k}/{P})")
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""Embed the dry-run + roofline tables into EXPERIMENTS.md.
+
+Usage: PYTHONPATH=src:. python scripts/finalize_experiments.py results/dryrun_all.json
+Replaces the <!-- DRYRUN_TABLE --> and <!-- ROOFLINE_TABLE --> markers.
+"""
+
+from __future__ import annotations
+
+import io
+import json
+import sys
+from contextlib import redirect_stdout
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(ROOT))
+sys.path.insert(0, str(ROOT / "src"))
+
+from scripts.render_experiments import main as render_main  # noqa: E402
+
+
+def main():
+    path = sys.argv[1] if len(sys.argv) > 1 else "results/dryrun_all.json"
+    buf = io.StringIO()
+    sys.argv = ["render", path]
+    with redirect_stdout(buf):
+        render_main()
+    out = buf.getvalue()
+    dry, _, roof = out.partition("### Roofline terms")
+    roof = "### Roofline terms" + roof
+
+    md = (ROOT / "EXPERIMENTS.md").read_text()
+    md = md.replace("<!-- DRYRUN_TABLE -->", dry.strip())
+    md = md.replace("<!-- ROOFLINE_TABLE -->", roof.strip())
+    (ROOT / "EXPERIMENTS.md").write_text(md)
+    print("EXPERIMENTS.md updated")
+
+
+if __name__ == "__main__":
+    main()

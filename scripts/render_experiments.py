@@ -1,0 +1,66 @@
+"""Render EXPERIMENTS.md sections Dry-run and Roofline from the sweep JSON.
+
+Usage: PYTHONPATH=src python scripts/render_experiments.py results/dryrun_all.json
+Prints markdown to stdout; EXPERIMENTS.md embeds the output.
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from benchmarks.roofline import analyze  # noqa: E402
+
+
+def gib(b):
+    return f"{b/2**30:.2f}"
+
+
+def main():
+    path = Path(sys.argv[1] if len(sys.argv) > 1 else "results/dryrun_all.json")
+    cells = json.loads(path.read_text())
+
+    print("### Dry-run table (memory proof; per-device bytes)\n")
+    print("| arch | shape | mesh | compile s | accum | args GiB | temp GiB "
+          "| fits 16GiB | collectives (raw count) |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for c in cells:
+        if "error" in c:
+            print(f"| {c['arch']} | {c['shape']} | "
+                  f"{'2x16x16' if c['multi_pod'] else '16x16'} | ERROR |  |  |  |  | "
+                  f"{c['error'][:60]} |")
+            continue
+        mesh = "x".join(str(v) for v in c["mesh"].values())
+        m = c["memory"]
+        print(f"| {c['arch']} | {c['shape']} | {mesh} | {c['compile_s']} | "
+              f"{c.get('accum',1)} | {gib(m['argument_bytes'])} | "
+              f"{gib(m['temp_bytes'])} | "
+              f"{'Y' if c.get('fits_hbm') else 'N'} | "
+              f"{c['collectives_raw']['count']} |")
+
+    print("\n### Roofline terms (single-pod 16x16; per-chip, "
+          "trip-count-extrapolated)\n")
+    rows = [a for a in (analyze(c) for c in cells)
+            if a and a["mesh"] == "16x16"]
+    print("| arch | shape | compute s | memory s | collective s | "
+          "bottleneck | 6ND/HLO | roofline frac |")
+    print("|---|---|---|---|---|---|---|---|")
+    for r in rows:
+        print(f"| {r['arch']} | {r['shape']} | {r['t_compute_s']:.2e} | "
+              f"{r['t_memory_s']:.2e} | {r['t_collective_s']:.2e} | "
+              f"**{r['bottleneck']}** | {r['useful_ratio']:.2f} | "
+              f"{r['roofline_frac']:.1%} |")
+
+    # summary stats
+    ok = [c for c in cells if "error" not in c]
+    fit = [c for c in ok if c.get("fits_hbm")]
+    print(f"\n{len(ok)}/{len(cells)} cells compiled; "
+          f"{len(fit)}/{len(ok)} fit 16 GiB/chip as-configured.")
+
+
+if __name__ == "__main__":
+    main()

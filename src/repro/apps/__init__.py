@@ -1,0 +1,6 @@
+"""All-pairs application instances built on the quorum engine:
+
+  pcit.py      — the paper's own evaluation app (gene co-expression, section 5)
+  attention.py — quorum sequence-parallel block attention (beyond-paper)
+  nbody.py     — direct-interaction n-body forces (paper's motivating family)
+"""

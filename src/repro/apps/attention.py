@@ -1,0 +1,229 @@
+"""Quorum sequence-parallel block attention (beyond-paper application).
+
+Causal attention over sequence blocks IS the all-pairs problem (triangular):
+every (q-block, kv-block) pair with kv <= q must meet in some device's memory.
+Ring attention solves this with P-1 sequential ppermute steps; the quorum
+schedule needs only k-1 ~ sqrt(P) gather shifts plus a k-shift partial-result
+reduce — Theta(sqrt(P)) fewer collective steps and a 2-phase (not P-phase)
+dependency structure (DESIGN.md section 2).
+
+Partial softmax results combine with the exact flash-attention monoid
+(m, l, o): associative and commutative, so quorum_scatter order is irrelevant.
+
+Both the quorum and ring variants are validated against plain full attention.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from ..core.allpairs import quorum_gather
+from ..core.scheduler import CausalSchedule, build_causal_schedule
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Block-pair flash attention (jnp path; kernels/flash_attention.py on TPU)
+# ---------------------------------------------------------------------------
+
+def flash_block(q, k, v, *, causal_diag: bool):
+    """Partial attention of one (q-block, kv-block) pair.
+
+    q: [B, Tq, H, hd]; k/v: [B, Tk, KV, hd].
+    Returns (o [B, Tq, H, hd] fp32 — UNNORMALIZED (o = sum exp(s - m) v),
+             m [B, Tq, H] row max, l [B, Tq, H] row sum-exp).
+    causal_diag: apply the triangular mask (the d=0 self block).
+    """
+    B, Tq, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, Tq, KV, G, hd)
+    s = jnp.einsum("bqkgh,bskh->bkgqs", qg.astype(jnp.float32) / math.sqrt(hd),
+                   k.astype(jnp.float32))                  # [B,KV,G,Tq,Tk]
+    if causal_diag:
+        Tk = k.shape[1]
+        msk = np.tril(np.ones((Tq, Tk), np.bool_))
+        s = jnp.where(msk, s, NEG_INF)
+    m = jnp.max(s, axis=-1)                                # [B,KV,G,Tq]
+    p = jnp.exp(s - m[..., None])
+    l = jnp.sum(p, axis=-1)
+    o = jnp.einsum("bkgqs,bskh->bkgqh", p, v.astype(jnp.float32))
+    # reshape to [B, Tq, H, ...]
+    o = o.reshape(B, KV * G, Tq, hd).transpose(0, 2, 1, 3)
+    m = m.reshape(B, KV * G, Tq).transpose(0, 2, 1)
+    l = l.reshape(B, KV * G, Tq).transpose(0, 2, 1)
+    return o, m, l
+
+
+def merge_partials(a: Tuple, b: Tuple) -> Tuple:
+    """Exact flash monoid on (o, m, l) with unnormalized o."""
+    oa, ma, la = a
+    ob, mb, lb = b
+    m = jnp.maximum(ma, mb)
+    ca = jnp.exp(ma - m)
+    cb = jnp.exp(mb - m)
+    return (oa * ca[..., None] + ob * cb[..., None], m, la * ca + lb * cb)
+
+
+def empty_partial(shape_q, H, dtype=jnp.float32):
+    B, Tq, hd = shape_q
+    return (jnp.zeros((B, Tq, H, hd), dtype),
+            jnp.full((B, Tq, H), NEG_INF, dtype),
+            jnp.zeros((B, Tq, H), dtype))
+
+
+# ---------------------------------------------------------------------------
+# Quorum attention (inside shard_map; sequence sharded over axis_name)
+# ---------------------------------------------------------------------------
+
+def quorum_attention_local(q, k, v, valid_row, *, schedule: CausalSchedule,
+                           axis_name: str):
+    """Per-device body.  q/k/v: local sequence block [B, T/P, H|KV, hd];
+    valid_row: [n_pairs] this device's causal-validity mask
+    (schedule.valid[i]).  Returns normalized context [B, T/P, H, hd].
+    """
+    B, Tq, H, hd = q.shape
+    valid_row = valid_row.reshape(-1)
+    kq = quorum_gather(q, schedule, axis_name)   # [k, B, T, H, hd]
+    kk = quorum_gather(k, schedule, axis_name)
+    kv = quorum_gather(v, schedule, axis_name)
+    ksz = schedule.k
+
+    lo_s = schedule.pair_slots[:, 0]   # kv side (static numpy)
+    hi_s = schedule.pair_slots[:, 1]   # q side
+    diffs = schedule.pair_diff
+
+    acc = jax.tree.map(
+        lambda a: lax.pcast(jnp.zeros((ksz,) + a.shape, a.dtype), axis_name,
+                            to="varying"),
+        empty_partial((B, Tq, hd), H))
+    # m must start at NEG_INF, not 0
+    acc = (acc[0], acc[1] + NEG_INF, acc[2])
+
+    n_pairs = schedule.n_pairs
+    for s in range(n_pairs):  # static loop: pair count is ~P, bodies fuse
+        lo, hi, d = int(lo_s[s]), int(hi_s[s]), int(diffs[s])
+        qb, kb, vb = kq[hi], kk[lo], kv[lo]
+        o, m, l = flash_block(qb, kb, vb, causal_diag=(d == 0))
+        w = valid_row[s]
+        m = jnp.where(w > 0, m, NEG_INF)
+        o = o * w
+        l = l * w
+        part = (acc[0][hi], acc[1][hi], acc[2][hi])
+        o, m, l = merge_partials(part, (o, m, l))
+        acc = (acc[0].at[hi].set(o), acc[1].at[hi].set(m), acc[2].at[hi].set(l))
+
+    # route partials back to q-block owners with the flash monoid
+    P = schedule.P
+    shifts = [int(x) for x in schedule.shifts]
+
+    def shift_back(t, a):
+        if a == 0:
+            return t
+        perm = [(j, (j + a) % P) for j in range(P)]
+        return jax.tree.map(lambda x: lax.ppermute(x, axis_name, perm), t)
+
+    total = None
+    for slot, a in enumerate(shifts):
+        part = (acc[0][slot], acc[1][slot], acc[2][slot])
+        arrived = shift_back(part, a)
+        total = arrived if total is None else merge_partials(total, arrived)
+
+    o, m, l = total
+    return (o / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Ring attention baseline (P-1 sequential steps)
+# ---------------------------------------------------------------------------
+
+def ring_attention_local(q, k, v, *, axis_name: str, axis_size: int):
+    """Classic ring: rotate (k, v) P-1 times; accumulate causal partials."""
+    B, Tq, H, hd = q.shape
+    P = axis_size
+    i = lax.axis_index(axis_name)
+    perm = [(j, (j + 1) % P) for j in range(P)]
+
+    def step(carry, t):
+        (o, m, l), (kc, vc) = carry
+        src = (i - t) % P                     # global block id of current kv
+        is_diag = src == i
+        causal_ok = src <= i
+        ob, mb, lb = flash_block(q, kc, vc, causal_diag=False)
+        # diagonal needs the triangular mask; recompute masked version and
+        # select (uniform control flow across devices)
+        od, md, ld = flash_block(q, kc, vc, causal_diag=True)
+        ob = jnp.where(is_diag, od, ob)
+        mb = jnp.where(is_diag, md, mb)
+        lb = jnp.where(is_diag, ld, lb)
+        w = causal_ok.astype(jnp.float32)
+        mb = jnp.where(causal_ok, mb, NEG_INF)
+        ob = ob * w
+        lb = lb * w
+        o, m, l = merge_partials((o, m, l), (ob, mb, lb))
+        kc = lax.ppermute(kc, axis_name, perm)
+        vc = lax.ppermute(vc, axis_name, perm)
+        return ((o, m, l), (kc, vc)), None
+
+    acc = empty_partial((B, Tq, hd), H)
+    acc = jax.tree.map(lambda a: lax.pcast(a, axis_name, to="varying"), acc)
+    ((o, m, l), _), _ = lax.scan(step, (acc, (k, v)), jnp.arange(P))
+    return (o / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Drivers
+# ---------------------------------------------------------------------------
+
+def distributed_attention(q, k, v, mesh, *, axis_name: str = "q",
+                          strategy: str = "quorum"):
+    """q: [B, T, H, hd]; k/v: [B, T, KV, hd]; T sharded over axis_name.
+
+    Block layout: global sequence order = block-major (device i holds tokens
+    [i*T/P, (i+1)*T/P)), so cyclic block indices coincide with position order.
+    """
+    from jax.sharding import PartitionSpec as PS
+    P = mesh.shape[axis_name]
+    if strategy == "quorum":
+        sched = build_causal_schedule(P)
+        valid = sched.valid.astype(np.float32)
+
+        def body(qb, kb, vb, vr):
+            return quorum_attention_local(qb, kb, vb, vr, schedule=sched,
+                                          axis_name=axis_name)
+
+        return jax.jit(jax.shard_map(
+            body, mesh=mesh,
+            in_specs=(PS(None, axis_name), PS(None, axis_name),
+                      PS(None, axis_name), PS(axis_name)),
+            out_specs=PS(None, axis_name)))(q, k, v, valid)
+    elif strategy == "ring":
+        def body(qb, kb, vb):
+            return ring_attention_local(qb, kb, vb, axis_name=axis_name,
+                                        axis_size=P)
+        return jax.jit(jax.shard_map(
+            body, mesh=mesh,
+            in_specs=(PS(None, axis_name),) * 3,
+            out_specs=PS(None, axis_name)))(q, k, v)
+    raise ValueError(strategy)
+
+
+def reference_attention(q, k, v):
+    """Plain causal full attention oracle."""
+    B, T, H, hd = q.shape
+    KV = k.shape[2]
+    qg = q.reshape(B, T, KV, H // KV, hd)
+    s = jnp.einsum("bqkgh,bskh->bkgqs", qg.astype(jnp.float32) / math.sqrt(hd),
+                   k.astype(jnp.float32))
+    msk = np.tril(np.ones((T, T), np.bool_))
+    s = jnp.where(msk, s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskh->bkgqh", w, v.astype(jnp.float32))
+    return o.reshape(B, H, T, hd).transpose(0, 2, 1, 3).astype(q.dtype)

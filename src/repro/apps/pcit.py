@@ -1,0 +1,239 @@
+"""PCIT (partial correlation + information theory) — the paper's section 5 app.
+
+Pipeline (all inside one shard_map over the quorum axis):
+
+  phase 1  quorum-gather standardized expression blocks  (k ppermutes,
+           k*N/P*G floats resident — the paper's O(N/sqrt(P)) array)
+  phase 2  per owned block pair: correlation tile  r[Bx, By] = Xs_x @ Xs_y^T
+           (Pallas pairwise_corr kernel on TPU)
+  phase 3  tile->row assembly: local strip writes + quorum_scatter(sum) give
+           each block owner its full correlation rows R_b [block, N];
+           quorum_gather hands every device the rows of its k quorum blocks
+           (k*N/P*N floats — the N^2/sqrt(P) phase-2 footprint, vs N^2
+           single-node)
+  phase 4  per owned pair: PCIT significance filter over all z
+           (Pallas pcit_filter kernel), then the same strip/scatter route
+           returns the boolean adjacency strip to each block owner.
+
+Oracle: ``pcit_reference`` — direct O(N^3) numpy implementation of
+Reverter & Chan (2008) as described in the paper's refs [5, 6].
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from ..core.allpairs import pair_mask_table, quorum_gather, quorum_scatter
+from ..core.scheduler import PairSchedule, build_schedule
+
+EPS = 1e-12
+
+
+# ---------------------------------------------------------------------------
+# Reference implementation (numpy, single node)
+# ---------------------------------------------------------------------------
+
+def standardize(X: np.ndarray) -> np.ndarray:
+    """Rows -> zero mean, unit norm, so corr = Xs @ Xs.T exactly."""
+    Xc = X - X.mean(axis=1, keepdims=True)
+    nrm = np.linalg.norm(Xc, axis=1, keepdims=True)
+    return Xc / np.maximum(nrm, EPS)
+
+def correlation_reference(X: np.ndarray) -> np.ndarray:
+    Xs = standardize(X)
+    return Xs @ Xs.T
+
+
+def pcit_reference(X: np.ndarray) -> np.ndarray:
+    """Direct PCIT: keep[x, y] iff no z explains the (x, y) correlation.
+
+    For each trio (x, y, z):
+      r_xy.z = (r_xy - r_xz r_yz) / sqrt((1-r_xz^2)(1-r_yz^2))
+      eps    = (r_xy.z/r_xy + r_xz.y/r_xz + r_yz.x/r_yz) / 3
+      edge (x, y) is explained by z if |r_xy| <= |eps * r_xz| and
+                                       |r_xy| <= |eps * r_yz|.
+    """
+    r = correlation_reference(X)
+    N = r.shape[0]
+    keep = np.ones((N, N), bool)
+
+    def pc(a, b, c):  # r_ab.c
+        den = np.sqrt(max((1 - r[a, c] ** 2) * (1 - r[b, c] ** 2), EPS))
+        return (r[a, b] - r[a, c] * r[b, c]) / den
+
+    for x in range(N):
+        for y in range(N):
+            if x == y:
+                continue
+            for z in range(N):
+                if z == x or z == y:
+                    continue
+                rxy_z = pc(x, y, z)
+                rxz_y = pc(x, z, y)
+                ryz_x = pc(y, z, x)
+                eps = (rxy_z / (r[x, y] + EPS) + rxz_y / (r[x, z] + EPS)
+                       + ryz_x / (r[y, z] + EPS)) / 3.0
+                if (abs(r[x, y]) <= abs(eps * r[x, z])
+                        and abs(r[x, y]) <= abs(eps * r[y, z])):
+                    keep[x, y] = False
+                    break
+    np.fill_diagonal(keep, True)
+    return keep
+
+
+# ---------------------------------------------------------------------------
+# Vectorized tile primitives (jnp reference path; Pallas kernels in
+# repro.kernels are drop-in replacements for TPU)
+# ---------------------------------------------------------------------------
+
+def corr_tile(xs_i: jax.Array, xs_j: jax.Array) -> jax.Array:
+    """Correlation tile between standardized blocks [bm, G] x [bn, G]."""
+    return xs_i @ xs_j.T
+
+
+def pcit_tile(r_xy: jax.Array, rows_x: jax.Array, rows_y: jax.Array,
+              gx: jax.Array, gy: jax.Array) -> jax.Array:
+    """PCIT keep-mask for one tile.
+
+    r_xy:  [bm, bn] direct correlations of the pair tile.
+    rows_x:[bm, N] correlation rows of the x block; rows_y: [bn, N].
+    gx/gy: [bm]/[bn] global gene ids (to exclude z == x / z == y).
+    Returns keep [bm, bn] bool.
+    """
+    N = rows_x.shape[-1]
+    rxz = rows_x[:, None, :]            # [bm, 1, N]
+    ryz = rows_y[None, :, :]            # [1, bn, N]
+    rxy = r_xy[:, :, None]              # [bm, bn, 1]
+
+    den_z = jnp.sqrt(jnp.maximum((1 - rxz ** 2) * (1 - ryz ** 2), EPS))
+    rxy_z = (rxy - rxz * ryz) / den_z
+    den_y = jnp.sqrt(jnp.maximum((1 - rxy ** 2) * (1 - ryz ** 2), EPS))
+    rxz_y = (rxz - rxy * ryz) / den_y
+    den_x = jnp.sqrt(jnp.maximum((1 - rxy ** 2) * (1 - rxz ** 2), EPS))
+    ryz_x = (ryz - rxy * rxz) / den_x
+
+    eps = (rxy_z / (rxy + EPS) + rxz_y / (rxz + EPS) + ryz_x / (ryz + EPS)) / 3.0
+    explained = ((jnp.abs(rxy) <= jnp.abs(eps * rxz))
+                 & (jnp.abs(rxy) <= jnp.abs(eps * ryz)))
+    z_ids = jnp.arange(N)[None, None, :]
+    valid_z = (z_ids != gx[:, None, None]) & (z_ids != gy[None, :, None])
+    explained &= valid_z
+    keep = ~jnp.any(explained, axis=-1)
+    # diagonal (x == y) pairs are trivially kept
+    keep |= (gx[:, None] == gy[None, :])
+    return keep
+
+
+# ---------------------------------------------------------------------------
+# Distributed quorum PCIT (runs inside shard_map over axis `axis_name`)
+# ---------------------------------------------------------------------------
+
+def quorum_pcit_local(xs_block: jax.Array, mask: jax.Array, *,
+                      schedule: PairSchedule, axis_name: str,
+                      use_kernels: bool = False) -> Tuple[jax.Array, jax.Array]:
+    """Per-device body.  xs_block: [block, G] standardized rows (this
+    device's dataset block); mask: [n_pairs] dedup mask (pair_mask_table row).
+
+    Returns (corr_rows [block, N], keep_rows [block, N]) for the local block.
+    """
+    if use_kernels:
+        from ..kernels import ops as kops
+        _corr = kops.pairwise_corr
+        _pcit = kops.pcit_filter
+    else:
+        _corr, _pcit = corr_tile, pcit_tile
+
+    P = schedule.P
+    block = xs_block.shape[0]
+    N = P * block
+    mask = mask.reshape(-1)
+    i = lax.axis_index(axis_name)
+
+    xq = quorum_gather(xs_block, schedule, axis_name)      # [k, block, G]
+    k = schedule.k
+    shifts = jnp.asarray(schedule.shifts, jnp.int32)
+
+    # ---- phase 2+3: correlation tiles -> row strips ----------------------
+    strips = jnp.zeros((k, block, N), xs_block.dtype)
+    strips = lax.pcast(strips, axis_name, to="varying")
+
+    def corr_body(strips, inp):
+        lo, hi, w = inp
+        tile = _corr(jnp.take(xq, lo, axis=0), jnp.take(xq, hi, axis=0)) * w
+        glo = (i + jnp.take(shifts, lo)) % P
+        ghi = (i + jnp.take(shifts, hi)) % P
+        # write tile at strip[lo][:, ghi*block] and its transpose at
+        # strip[hi][:, glo*block]  (self pairs: same slot, same offset — the
+        # second write would double the diagonal tile, so zero it)
+        strips = lax.dynamic_update_slice(
+            strips, tile[None],
+            (lo, 0, ghi * block))
+        tile_t = jnp.where(lo == hi, jnp.zeros_like(tile), tile.T)
+        cur = lax.dynamic_slice(strips, (hi, 0, glo * block), (1, block, block))
+        strips = lax.dynamic_update_slice(strips, cur + tile_t[None],
+                                          (hi, 0, glo * block))
+        return strips, None
+
+    lo_s = jnp.asarray(schedule.pair_slots[:, 0])
+    hi_s = jnp.asarray(schedule.pair_slots[:, 1])
+    strips, _ = lax.scan(corr_body, strips, (lo_s, hi_s, mask))
+    corr_rows = quorum_scatter(strips, schedule, axis_name)   # [block, N]
+
+    # every device pulls the rows of its k quorum blocks
+    rows_q = quorum_gather(corr_rows, schedule, axis_name)    # [k, block, N]
+
+    # ---- phase 4: PCIT filter tiles -> keep strips -----------------------
+    keep_strips = jnp.zeros((k, block, N), jnp.float32)
+    keep_strips = lax.pcast(keep_strips, axis_name, to="varying")
+    base_ids = jnp.arange(block)
+
+    def pcit_body(ks, inp):
+        lo, hi, w = inp
+        glo = (i + jnp.take(shifts, lo)) % P
+        ghi = (i + jnp.take(shifts, hi)) % P
+        rows_x = jnp.take(rows_q, lo, axis=0)                 # [block, N]
+        rows_y = jnp.take(rows_q, hi, axis=0)
+        r_xy = lax.dynamic_slice(rows_x, (0, ghi * block), (block, block))
+        gx = glo * block + base_ids
+        gy = ghi * block + base_ids
+        keep = _pcit(r_xy, rows_x, rows_y, gx, gy).astype(jnp.float32) * w
+        ks = lax.dynamic_update_slice(ks, keep[None], (lo, 0, ghi * block))
+        keep_t = jnp.where(lo == hi, jnp.zeros_like(keep), keep.T)
+        cur = lax.dynamic_slice(ks, (hi, 0, glo * block), (1, block, block))
+        ks = lax.dynamic_update_slice(ks, cur + keep_t[None], (hi, 0, glo * block))
+        return ks, None
+
+    keep_strips, _ = lax.scan(pcit_body, keep_strips, (lo_s, hi_s, mask))
+    keep_rows = quorum_scatter(keep_strips, schedule, axis_name) > 0.5
+    return corr_rows, keep_rows
+
+
+def run_quorum_pcit(X: np.ndarray, mesh, axis_name: str = "q",
+                    use_kernels: bool = False):
+    """Driver: standardize on host, shard rows, run the quorum pipeline.
+
+    X: [N, G] expression matrix; N must divide by the mesh axis size.
+    Returns (corr [N, N], keep [N, N]) gathered to host.
+    """
+    from jax.sharding import PartitionSpec as PS
+    P = mesh.shape[axis_name]
+    N = X.shape[0]
+    assert N % P == 0, (N, P)
+    sched = build_schedule(P)
+    masks = pair_mask_table(sched)
+    Xs = standardize(np.asarray(X, np.float32))
+
+    def body(xb, mb):
+        return quorum_pcit_local(xb, mb, schedule=sched, axis_name=axis_name,
+                                 use_kernels=use_kernels)
+
+    fn = jax.jit(jax.shard_map(body, mesh=mesh,
+                               in_specs=(PS(axis_name), PS(axis_name)),
+                               out_specs=(PS(axis_name), PS(axis_name))))
+    corr, keep = fn(Xs, masks)
+    return np.asarray(corr), np.asarray(keep)

@@ -1,0 +1,2 @@
+from .checkpoint import (CheckpointManager, load_checkpoint,  # noqa: F401
+                         save_checkpoint)

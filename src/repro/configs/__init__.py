@@ -1,0 +1,3 @@
+"""Architecture configs (one module per assigned arch) and the shape cells."""
+
+from .registry import ARCHS, SHAPES, get_config, get_smoke_config, shape_cells  # noqa: F401

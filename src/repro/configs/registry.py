@@ -1,0 +1,75 @@
+"""Registry: arch id -> (full config, reduced smoke config), shape cells.
+
+Every assigned architecture is selectable via ``--arch <id>`` in the
+launchers.  ``shape_cells(arch)`` yields the (shape, kind) pairs that apply —
+skips are per DESIGN.md section 5 (long_500k only for SSM / hybrid / SWA).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Dict, Iterable, List, Tuple
+
+from ..models.config import ModelConfig
+
+ARCHS: List[str] = [
+    "mamba2_130m",
+    "starcoder2_3b",
+    "deepseek_coder_33b",
+    "qwen3_14b",
+    "h2o_danube_1_8b",
+    "jamba_v0_1_52b",
+    "whisper_large_v3",
+    "llama4_scout_17b_a16e",
+    "llama4_maverick_400b_a17b",
+    "qwen2_vl_72b",
+    # the paper's own application "architecture" (PCIT) lives in apps/, not
+    # here — it has no LM shape cells.
+]
+
+# canonical ids with dashes also accepted
+_ALIAS = {a.replace("_", "-"): a for a in ARCHS}
+
+
+@dataclasses.dataclass(frozen=True)
+class Shape:
+    name: str
+    kind: str        # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPES: Dict[str, Shape] = {
+    "train_4k": Shape("train_4k", "train", 4_096, 256),
+    "prefill_32k": Shape("prefill_32k", "prefill", 32_768, 32),
+    "decode_32k": Shape("decode_32k", "decode", 32_768, 128),
+    "long_500k": Shape("long_500k", "decode", 524_288, 1),
+}
+
+# archs allowed to run the sub-quadratic long-context cell
+LONG_OK = {"mamba2_130m", "jamba_v0_1_52b", "h2o_danube_1_8b"}
+
+
+def get_config(arch: str) -> ModelConfig:
+    arch = _ALIAS.get(arch, arch)
+    mod = importlib.import_module(f".{arch}", package=__package__)
+    return mod.CONFIG
+
+
+def get_smoke_config(arch: str) -> ModelConfig:
+    arch = _ALIAS.get(arch, arch)
+    mod = importlib.import_module(f".{arch}", package=__package__)
+    return mod.SMOKE
+
+
+def shape_cells(arch: str) -> Iterable[Shape]:
+    arch = _ALIAS.get(arch, arch)
+    for s in SHAPES.values():
+        if s.name == "long_500k" and arch not in LONG_OK:
+            continue  # pure full-attention arch: documented skip
+        yield s
+
+
+def all_cells() -> List[Tuple[str, Shape]]:
+    return [(a, s) for a in ARCHS for s in shape_cells(a)]

@@ -1,0 +1,287 @@
+"""Static all-pairs work schedules over cyclic quorums.
+
+The paper distributes the P*(P+1)/2 block pairings across P processes and
+relies on quorum symmetry for "equal work" (paper Eq. 12-13).  We make that
+static and exact with the *per-difference ownership rule* (DESIGN.md 3.2):
+
+For every cyclic difference ``d`` pick one canonical pair
+``(a_hi, a_lo) in A x A`` with ``a_hi - a_lo = d (mod P)`` (it exists by the
+difference-cover property).  Block pair ``(j, j+d)`` is then owned by device
+``i = (j - a_lo) mod P`` — device i holds both blocks since
+``j = i + a_lo in S_i`` and ``j + d = i + a_hi in S_i``.
+
+Consequences (all verified in tests):
+  * each device owns exactly one ordered pair per difference d, i.e.
+    perfect static balance across devices: same pair count, same local
+    quorum slot indices, zero control-flow divergence — pure SPMD,
+  * unordered coverage: scheduling d in {0..floor(P/2)} covers every
+    unordered pair exactly once (d and P-d name the same unordered pair),
+  * all schedules are pure functions of P — elastic resize just recomputes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Sequence, Tuple
+
+import numpy as np
+
+from .quorum import cyclic_quorums, difference_set
+
+__all__ = [
+    "PairSchedule",
+    "build_schedule",
+    "build_causal_schedule",
+    "reassign",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class PairSchedule:
+    """A static all-pairs schedule for P devices.
+
+    Attributes
+    ----------
+    P : number of block/devices on the quorum axis.
+    A : the relaxed (P,k)-difference set (sorted).
+    k : quorum size len(A).
+    shifts : np.ndarray [k] — cyclic shifts a device pulls its quorum blocks
+        from; local slot s of device i holds global block (i + shifts[s]) % P.
+    pair_slots : np.ndarray [n_pairs, 2] int32 — *local slot* index pairs
+        (lo_slot, hi_slot) each device computes.  Identical on every device
+        (SPMD); device i's s-th pair is global blocks
+        ((i + shifts[lo_slot]) % P, (i + shifts[hi_slot]) % P).
+    pair_diff : np.ndarray [n_pairs] — the cyclic difference each pair covers.
+    self_pair_index : position in pair_slots of the (0,0) self-pair.
+    """
+
+    P: int
+    A: Tuple[int, ...]
+    shifts: np.ndarray
+    pair_slots: np.ndarray
+    pair_diff: np.ndarray
+
+    @property
+    def k(self) -> int:
+        return len(self.A)
+
+    @property
+    def n_pairs(self) -> int:
+        return int(self.pair_slots.shape[0])
+
+    def owner_of(self, x: int, y: int) -> int:
+        """Global owner device of unordered block pair (x, y)."""
+        d = (y - x) % self.P
+        dd = min(d, (self.P - d) % self.P)
+        # find the schedule entry covering difference dd
+        idx = int(np.nonzero(self.pair_diff == dd)[0][0])
+        lo_slot = int(self.pair_slots[idx, 0])
+        a_lo = int(self.shifts[lo_slot])
+        j = x if d == dd or d == 0 else y  # lower endpoint of the canonical direction
+        if (y - x) % self.P != dd:
+            j = y
+        return (j - a_lo) % self.P
+
+    def global_pairs_of(self, i: int) -> List[Tuple[int, int]]:
+        """The global block pairs device i computes (for tests/debug)."""
+        out = []
+        for s in range(self.n_pairs):
+            lo = (i + int(self.shifts[self.pair_slots[s, 0]])) % self.P
+            hi = (i + int(self.shifts[self.pair_slots[s, 1]])) % self.P
+            out.append((lo, hi))
+        return out
+
+
+def _canonical_pairs(P: int, A: Sequence[int]) -> Dict[int, Tuple[int, int]]:
+    """difference d -> canonical (a_lo, a_hi) with a_hi - a_lo = d (mod P).
+
+    Chosen deterministically; preferring pairs that reuse low slot indices
+    keeps the gathered working set warm.
+    """
+    A = sorted(A)
+    table: Dict[int, Tuple[int, int]] = {}
+    for a_lo in A:
+        for a_hi in A:
+            d = (a_hi - a_lo) % P
+            if d not in table:
+                table[d] = (a_lo, a_hi)
+    missing = [d for d in range(P) if d not in table]
+    if missing:  # pragma: no cover - A is verified upstream
+        raise AssertionError(f"A not a difference cover, missing {missing}")
+    return table
+
+
+def build_schedule(P: int) -> PairSchedule:
+    """Full (symmetric) all-pairs schedule: one entry per d in 0..floor(P/2).
+
+    Every unordered pair {x, y} (including self-pairs x==y via d=0) is computed
+    by exactly one device, except d = P/2 for even P which is owned twice (the
+    cyclic rule cannot halve an odd orbit); the engine halves that pair's work
+    by masking (see core.allpairs), keeping exact single-coverage semantics.
+    """
+    A = difference_set(P)
+    table = _canonical_pairs(P, A)
+    slot_of = {a: s for s, a in enumerate(sorted(A))}
+
+    pair_slots: List[Tuple[int, int]] = []
+    pair_diff: List[int] = []
+    for d in range(P // 2 + 1):
+        a_lo, a_hi = table[d]
+        pair_slots.append((slot_of[a_lo], slot_of[a_hi]))
+        pair_diff.append(d)
+
+    return PairSchedule(
+        P=P,
+        A=tuple(sorted(A)),
+        shifts=np.asarray(sorted(A), dtype=np.int32),
+        pair_slots=np.asarray(pair_slots, dtype=np.int32),
+        pair_diff=np.asarray(pair_diff, dtype=np.int32),
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class CausalSchedule:
+    """Causal (triangular) all-pairs schedule for block attention.
+
+    Unlike the cyclic case, causality breaks shift invariance: pair (q, kv)
+    exists only for kv <= q, so per-device pair lists differ in *validity* but
+    not in length — we keep the SPMD one-pair-per-difference structure and mask
+    invalid pairs (valid[i, s] below), preserving uniform control flow.
+    """
+
+    P: int
+    A: Tuple[int, ...]
+    shifts: np.ndarray          # [k]
+    pair_slots: np.ndarray      # [n_pairs, 2] (kv_slot, q_slot) local slots
+    pair_diff: np.ndarray       # [n_pairs] difference d = q - kv >= 0
+    valid: np.ndarray           # [P, n_pairs] bool — device i computes pair s?
+
+    @property
+    def k(self) -> int:
+        return len(self.A)
+
+    @property
+    def n_pairs(self) -> int:
+        return int(self.pair_slots.shape[0])
+
+
+def build_causal_schedule(P: int) -> CausalSchedule:
+    """Schedule every causal block pair (q, kv), kv <= q, exactly once.
+
+    Differences d = q - kv range over 0..P-1 (no modular wraparound in
+    validity).  Device i's candidate pair for difference d is
+    q = (i + a_hi) % P, kv = (i + a_lo) % P with the canonical (a_lo, a_hi);
+    it is valid iff q - kv == d exactly (no wrap) — i.e. kv + d < P.
+    Each difference d has exactly P - d valid (q, kv) pairs and the cyclic
+    rule assigns each to a distinct device, so coverage is exact.
+    Load per device = sum over d of [valid] ~ (P+1)/2 on average; worst-case
+    imbalance is bounded by the quorum structure and reported by tests.
+    """
+    A = difference_set(P)
+    table = _canonical_pairs(P, A)
+    slot_of = {a: s for s, a in enumerate(sorted(A))}
+    shifts = np.asarray(sorted(A), dtype=np.int32)
+
+    pair_slots: List[Tuple[int, int]] = []
+    pair_diff: List[int] = []
+    valid = np.zeros((P, P), dtype=bool)
+    for d in range(P):
+        a_lo, a_hi = table[d]
+        pair_slots.append((slot_of[a_lo], slot_of[a_hi]))
+        pair_diff.append(d)
+        for i in range(P):
+            kv = (i + a_lo) % P
+            q = (i + a_hi) % P
+            valid[i, d] = (q - kv) == d  # no wraparound => causal pair exists
+    return CausalSchedule(
+        P=P,
+        A=tuple(sorted(A)),
+        shifts=shifts,
+        pair_slots=np.asarray(pair_slots, dtype=np.int32),
+        pair_diff=np.asarray(pair_diff, dtype=np.int32),
+        valid=valid,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Fault tolerance: straggler / failure reassignment (paper section 6 future work)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ReassignPlan:
+    """Recovery plan after device failures.
+
+    extra_pairs[i]   — pairs device i recomputes that are already co-resident
+                       in its quorum (zero extra communication).
+    fetch_pairs[i]   — (pair, missing_block, source_device) entries where
+                       device i holds one block and pulls the other from a
+                       live holder (one extra block transfer each).
+    """
+
+    extra_pairs: Dict[int, List[Tuple[int, int]]]
+    fetch_pairs: Dict[int, List[Tuple[Tuple[int, int], int, int]]]
+
+    @property
+    def n_recovered(self) -> int:
+        return (sum(len(v) for v in self.extra_pairs.values())
+                + sum(len(v) for v in self.fetch_pairs.values()))
+
+
+def reassign(schedule: PairSchedule, failed: Sequence[int]) -> ReassignPlan:
+    """Reassign failed devices' pair lists to quorum peers.
+
+    Two tiers (DESIGN.md section 8):
+      1. the pair is co-resident in a live quorum -> free reassignment.  The
+         all-pairs property guarantees >= 1 co-resident quorum; it may be
+         exactly the failed one, hence tier 2.
+      2. otherwise a live device holding one block fetches the other from any
+         live holder (each block lives in exactly k quorums, paper Eq. 13, so
+         a block is lost only if all k of its holders fail simultaneously —
+         then restart-from-checkpoint is the only correct response).
+    Greedy min-load assignment in both tiers.
+    """
+    failed_set = set(failed)
+    P = schedule.P
+    quorums = cyclic_quorums(P)
+    pair_holders: Dict[Tuple[int, int], List[int]] = {}
+    block_holders: Dict[int, List[int]] = {}
+    for i, S in enumerate(quorums):
+        if i in failed_set:
+            continue
+        sset = set(S)
+        for x in sset:
+            block_holders.setdefault(x, []).append(i)
+            for y in sset:
+                if x <= y:
+                    pair_holders.setdefault((x, y), []).append(i)
+
+    load = {i: float(schedule.n_pairs) for i in range(P) if i not in failed_set}
+    extra: Dict[int, List[Tuple[int, int]]] = {i: [] for i in load}
+    fetch: Dict[int, List[Tuple[Tuple[int, int], int, int]]] = {i: [] for i in load}
+    for f in sorted(failed_set):
+        for (x, y) in schedule.global_pairs_of(f):
+            key = (min(x, y), max(x, y))
+            cands = pair_holders.get(key, [])
+            if cands:
+                tgt = min(cands, key=lambda c: load[c])
+                load[tgt] += 1.0
+                extra[tgt].append(key)
+                continue
+            hx = block_holders.get(key[0], [])
+            hy = block_holders.get(key[1], [])
+            if not hx or not hy:
+                lost = key[0] if not hx else key[1]
+                raise RuntimeError(
+                    f"block {lost} lost: all {schedule.k} holding quorums "
+                    "failed; restore from checkpoint")
+            # device holding one block pulls the other (count fetch as extra load)
+            best = min(((c, key[1], key[0]) for c in hx), key=lambda t: load[t[0]])
+            alt = min(((c, key[0], key[1]) for c in hy), key=lambda t: load[t[0]])
+            tgt, missing, _have = best if load[best[0]] <= load[alt[0]] else alt
+            src = min(block_holders[missing], key=lambda c: load[c])
+            load[tgt] += 1.5
+            fetch[tgt].append((key, missing, src))
+    return ReassignPlan(
+        extra_pairs={i: v for i, v in extra.items() if v},
+        fetch_pairs={i: v for i, v in fetch.items() if v},
+    )

@@ -1,0 +1,121 @@
+"""Pallas TPU kernel: flash attention (online softmax, no T^2 HBM traffic).
+
+Used as the inner block-pair computation of quorum attention and as the
+training attention hot spot.  Layout: heads are flattened into the leading
+grid dimension ([BH, T, hd]); the q-tile (m, l, acc) running state lives in
+VMEM scratch across the sequential kv-tile grid dimension.
+
+Tiles (v5e): BQ = BK = 512, hd <= 256 -> q/k/v tiles 3 * 512 * hd * 4B plus
+acc (512, hd) fp32: ~2-3 MB VMEM; matmul dims multiples of 128.
+
+Causality is handled at block granularity: fully-masked kv tiles are
+skipped (mask_value write only), the diagonal tile applies the triangular
+mask, fully-visible tiles skip masking entirely.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+DEFAULT_BQ = 512
+DEFAULT_BK = 512
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  n_k: int, bq: int, bk: int, causal: bool, offset: int,
+                  scale: float):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0) + offset
+    k_pos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+
+    def compute(masked: bool):
+        q = q_ref[0].astype(jnp.float32) * scale            # [bq, hd]
+        k = k_ref[0].astype(jnp.float32)                    # [bk, hd]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        if masked:
+            s = jnp.where(k_pos <= q_pos, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        c = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_ref[...] = l_ref[...] * c + jnp.sum(p, axis=-1)
+        acc_ref[...] = acc_ref[...] * c[:, None] + jax.lax.dot_general(
+            p, v_ref[0].astype(jnp.float32), (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    if causal:
+        # block classification: beyond-diagonal blocks contribute nothing
+        first_q = qi * bq + offset
+        last_q = first_q + bq - 1
+        first_k = ki * bk
+
+        @pl.when(first_k <= last_q)
+        def _():
+            # diagonal-crossing block -> masked path; else unmasked
+            @pl.when(first_k + bk - 1 > first_q)
+            def _m():
+                compute(masked=True)
+
+            @pl.when(first_k + bk - 1 <= first_q)
+            def _u():
+                compute(masked=False)
+    else:
+        compute(masked=False)
+
+    @pl.when(ki == n_k - 1)
+    def _done():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, ...] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q, k, v, *, causal: bool = True,
+                           bq: int = DEFAULT_BQ, bk: int = DEFAULT_BK,
+                           interpret: bool = False):
+    """q: [BH, Tq, hd]; k/v: [BH, Tk, hd] (heads pre-flattened; GQA k/v
+    pre-broadcast — see ops.flash_attention for the 4-d entry point).
+
+    causal masking aligns the ends: query i attends keys <= i + (Tk - Tq).
+    """
+    BH, Tq, hd = q.shape
+    Tk = k.shape[1]
+    bq, bk = min(bq, Tq), min(bk, Tk)
+    assert Tq % bq == 0 and Tk % bk == 0, (Tq, Tk, bq, bk)
+    offset = Tk - Tq
+
+    return pl.pallas_call(
+        functools.partial(_flash_kernel, n_k=Tk // bk, bq=bq, bk=bk,
+                          causal=causal, offset=offset,
+                          scale=1.0 / math.sqrt(hd)),
+        grid=(BH, Tq // bq, Tk // bk),
+        in_specs=[
+            pl.BlockSpec((1, bq, hd), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, hd), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, hd), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, hd), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, Tq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,142 @@
+"""Jit'd public entry points for the Pallas kernels.
+
+On TPU backends the kernels run compiled; elsewhere (CPU tests, smoke) they
+run in interpret mode, which executes the kernel body in Python with
+identical block semantics — the per-kernel allclose sweeps in
+tests/test_kernels.py validate every (shape, dtype) cell against ref.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .flash_attention import flash_attention_pallas
+from .pairwise_corr import pairwise_corr_pallas
+from .pcit_filter import pcit_filter_pallas
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x, multiple, axis):
+    size = x.shape[axis]
+    pad = (-size) % multiple
+    if pad == 0:
+        return x, size
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), size
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def pairwise_corr(xs_i, xs_j, *, bm=128, bn=128, bk=128):
+    """Correlation tile [M, N] of standardized blocks [M, G] x [N, G].
+
+    Pads every dim up to the tile multiple and slices back, so arbitrary
+    shapes are accepted (padded K columns are zeros — exact for the dot).
+    """
+    xs_i, M = _pad_to(xs_i, bm, 0)
+    xs_j, N = _pad_to(xs_j, bn, 0)
+    xs_i, _ = _pad_to(xs_i, bk, 1)
+    xs_j, _ = _pad_to(xs_j, bk, 1)
+    out = pairwise_corr_pallas(xs_i, xs_j, bm=bm, bn=bn, bk=bk,
+                               interpret=_interpret())
+    return out[:M, :N]
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bz"))
+def pcit_filter(r_xy, rows_x, rows_y, gx, gy, *, bm=128, bn=128, bz=128):
+    """PCIT keep tile [M, N]; see kernels/pcit_filter.py.
+
+    Padded z columns get rows == 0 which yields eps ratios that never
+    explain an edge with |r_xy| > 0; padded z ids are also >= N so the
+    z-exclusion mask keeps them inert.  Padded x/y rows are sliced off.
+    """
+    (r_xy, M) = _pad_to(r_xy, bm, 0)
+    (r_xy, N) = _pad_to(r_xy, bn, 1)
+    rows_x, _ = _pad_to(rows_x, bm, 0)
+    rows_y, _ = _pad_to(rows_y, bn, 0)
+    rows_x, _ = _pad_to(rows_x, bz, 1)
+    rows_y, _ = _pad_to(rows_y, bz, 1)
+    # pad gene ids with sentinels that can't collide with real z indices
+    def pad_ids(g, to):
+        pad = to - g.shape[0]
+        if pad:
+            g = jnp.concatenate([g, jnp.full((pad,), -1, g.dtype)])
+        return g
+    gx = pad_ids(gx, rows_x.shape[0])
+    gy = pad_ids(gy, rows_y.shape[0])
+    out = pcit_filter_pallas(r_xy, rows_x, rows_y, gx, gy,
+                             bm=bm, bn=bn, bz=bz, interpret=_interpret())
+    return out[:M, :N]
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "bq", "bk"))
+def flash_attention(q, k, v, *, causal=True, bq=128, bk=128):
+    """4-d entry point: q [B, Tq, H, hd], k/v [B, Tk, KV, hd] (GQA).
+
+    K/V heads are broadcast to H before flattening to the kernel's [BH, T,
+    hd] layout.  (A production TPU kernel indexes kv-heads in the grid map
+    instead of materializing the broadcast; that variant changes only the
+    BlockSpec index_map — noted for the perf log.)
+    """
+    B, Tq, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    if G > 1:
+        k = jnp.repeat(k, G, axis=2)
+        v = jnp.repeat(v, G, axis=2)
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, Tq, hd)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * H, -1, hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * H, -1, hd)
+    out = flash_attention_pallas(qf, kf, vf, causal=causal, bq=bq, bk=bk,
+                                 interpret=_interpret())
+    return out.reshape(B, H, Tq, hd).transpose(0, 2, 1, 3)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def ssd_chunk(x, dt, A, Bm, Cm, *, chunk=256):
+    """Full SSD via the Pallas intra-chunk kernel + jnp inter-chunk scan.
+
+    x: [B, T, H, P]; dt: [B, T, H]; A: [H]; Bm/Cm: [B, T, N].
+    Returns y [B, T, H, P] float32 (parity with ref.ssd_chunk).
+    """
+    from .ssd_chunk import ssd_chunk_pallas
+    B, T, H, P = x.shape
+    N = Bm.shape[-1]
+    L = min(chunk, T)
+    assert T % L == 0
+    nc = T // L
+    # flatten (B, H) -> BH with per-bh A; B/C shared across heads
+    xf = x.transpose(0, 2, 1, 3).reshape(B * H, nc, L, P)
+    dtf = dt.transpose(0, 2, 1).reshape(B * H, nc, L)
+    Af = jnp.tile(A, (B,))
+    Bf = jnp.repeat(Bm.reshape(B, 1, nc, L, N), H, 1).reshape(B * H, nc, L, N)
+    Cf = jnp.repeat(Cm.reshape(B, 1, nc, L, N), H, 1).reshape(B * H, nc, L, N)
+    y_intra, S, cd = ssd_chunk_pallas(xf, dtf, Af, Bf, Cf,
+                                      interpret=_interpret())
+
+    # inter-chunk recurrence (tiny): h_c = cd_last * h_{c-1} + S_c
+    def step(h, inp):
+        s_c, cdl, c_c, cd_c = inp
+        y_int = jnp.einsum("bln,bl,bnp->blp", c_c, cd_c, h)
+        h = cdl[:, None, None] * h + s_c
+        return h, y_int
+
+    cd_last = cd[:, :, -1]                                # [BH, nc]
+    h0 = jnp.zeros((B * H, N, P), jnp.float32)
+    xs = (jnp.moveaxis(S, 1, 0), jnp.moveaxis(cd_last, 1, 0),
+          jnp.moveaxis(Cf.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(cd, 1, 0))
+    _, y_inter = jax.lax.scan(step, h0, xs)
+    y = y_intra + jnp.moveaxis(y_inter, 0, 1)
+    return y.reshape(B, H, T, P).transpose(0, 2, 1, 3)
+
+
+# re-export oracles for convenience in benchmarks/tests
+reference = ref

@@ -1,0 +1,81 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+EPS = 1e-12
+NEG_INF = -1e30
+
+
+def pairwise_corr(xs_i: jax.Array, xs_j: jax.Array) -> jax.Array:
+    """Correlation tile of standardized blocks: [bm, G] x [bn, G] -> [bm, bn]."""
+    return xs_i @ xs_j.T
+
+
+def pcit_filter(r_xy, rows_x, rows_y, gx, gy) -> jax.Array:
+    """PCIT keep-mask oracle — mirrors apps.pcit.pcit_tile."""
+    rxz = rows_x[:, None, :]
+    ryz = rows_y[None, :, :]
+    rxy = r_xy[:, :, None]
+    den_z = jnp.sqrt(jnp.maximum((1 - rxz ** 2) * (1 - ryz ** 2), EPS))
+    rxy_z = (rxy - rxz * ryz) / den_z
+    den_y = jnp.sqrt(jnp.maximum((1 - rxy ** 2) * (1 - ryz ** 2), EPS))
+    rxz_y = (rxz - rxy * ryz) / den_y
+    den_x = jnp.sqrt(jnp.maximum((1 - rxy ** 2) * (1 - rxz ** 2), EPS))
+    ryz_x = (ryz - rxy * rxz) / den_x
+    eps = (rxy_z / (rxy + EPS) + rxz_y / (rxz + EPS) + ryz_x / (ryz + EPS)) / 3.0
+    explained = ((jnp.abs(rxy) <= jnp.abs(eps * rxz))
+                 & (jnp.abs(rxy) <= jnp.abs(eps * ryz)))
+    N = rows_x.shape[-1]
+    z_ids = jnp.arange(N)[None, None, :]
+    explained &= (z_ids != gx[:, None, None]) & (z_ids != gy[None, :, None])
+    keep = ~jnp.any(explained, axis=-1)
+    keep |= gx[:, None] == gy[None, :]
+    return keep
+
+
+def flash_attention(q, k, v, *, causal: bool) -> jax.Array:
+    """Plain attention oracle: q [B, Tq, H, hd], k/v [B, Tk, KV, hd]."""
+    B, Tq, H, hd = q.shape
+    KV = k.shape[2]
+    qg = q.reshape(B, Tq, KV, H // KV, hd)
+    s = jnp.einsum("bqkgh,bskh->bkgqs", qg.astype(jnp.float32) / math.sqrt(hd),
+                   k.astype(jnp.float32))
+    if causal:
+        Tk = k.shape[1]
+        msk = np.tril(np.ones((Tq, Tk), np.bool_), k=Tk - Tq)
+        s = jnp.where(msk, s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskh->bkgqh", w, v.astype(jnp.float32))
+    return o.reshape(B, H, Tq, hd).transpose(0, 2, 1, 3).astype(q.dtype)
+
+
+def ssd_chunk(x, dt, A, Bm, Cm) -> jax.Array:
+    """Sequential (non-chunked) SSD oracle.
+
+    x: [B, T, H, P]; dt: [B, T, H]; A: [H]; Bm/Cm: [B, T, N].
+    Returns y [B, T, H, P] (fp32).
+    """
+    Bb, T, H, Pd = x.shape
+    N = Bm.shape[-1]
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp
+        a = jnp.exp(dtt * A)                              # [B, H]
+        h = a[:, :, None, None] * h + jnp.einsum(
+            "bh,bn,bhp->bhnp", dtt, bt, xt)
+        y = jnp.einsum("bn,bhnp->bhp", ct, h)
+        return h, y
+
+    h0 = jnp.zeros((Bb, H, N, Pd), jnp.float32)
+    xs = (jnp.moveaxis(x, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(dt, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(Bm, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(Cm, 1, 0).astype(jnp.float32))
+    _, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1)                         # [B, T, H, P]

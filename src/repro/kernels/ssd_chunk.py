@@ -1,0 +1,81 @@
+"""Pallas TPU kernel: Mamba2 SSD intra-chunk block (arXiv:2405.21060 alg. 1).
+
+Computes, per (batch*head, chunk) grid cell with chunk length L in VMEM:
+  cums   = cumsum(dt * A)                         [L]
+  y      = ((C B^T) .* exp(cums_i - cums_j) tril .* dt_j) x      [L, P]
+  S      = sum_j exp(cums_L - cums_j) dt_j B_j x_j^T             [N, P]
+  cd     = exp(cums)                                             [L]
+The O(1/L)-state inter-chunk recurrence (a tiny scan over nc chunks) stays
+in jnp — it is bandwidth-trivial; the matmul-dense intra-chunk work is what
+feeds the MXU.  Tiles: L = 256, P = 64, N = 128 -> ~0.6 MB VMEM/cell.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref,
+                y_ref, s_ref, cd_ref, *, L: int):
+    x = x_ref[0, 0].astype(jnp.float32)       # [L, P]
+    dt = dt_ref[0, 0].astype(jnp.float32)     # [L]
+    A = a_ref[0].astype(jnp.float32)          # scalar (per bh)
+    Bm = b_ref[0, 0].astype(jnp.float32)      # [L, N]
+    Cm = c_ref[0, 0].astype(jnp.float32)      # [L, N]
+
+    la = dt * A                               # [L]
+    cums = jnp.cumsum(la)                     # [L]
+
+    CB = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # [L, L]
+    seg = cums[:, None] - cums[None, :]
+    tril = jax.lax.broadcasted_iota(jnp.int32, (L, L), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (L, L), 1)
+    decay = jnp.where(tril, jnp.exp(seg), 0.0)
+    w = CB * decay * dt[None, :]
+    y_ref[0, 0, ...] = jax.lax.dot_general(
+        w, x, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32).astype(y_ref.dtype)
+
+    dend = jnp.exp(cums[L - 1] - cums) * dt   # [L]
+    s_ref[0, 0, ...] = jax.lax.dot_general(
+        Bm * dend[:, None], x, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32).astype(s_ref.dtype)
+    cd_ref[0, 0, ...] = jnp.exp(cums).astype(cd_ref.dtype)
+
+
+def ssd_chunk_pallas(x, dt, A_bh, Bm, Cm, *, interpret: bool = False):
+    """x: [BH, nc, L, P]; dt: [BH, nc, L]; A_bh: [BH]; Bm/Cm: [BH, nc, L, N].
+
+    Returns (y_intra [BH, nc, L, P] f32, S [BH, nc, N, P] f32,
+             cd [BH, nc, L] f32 — per-position decay exp(cumsum)).
+    """
+    BH, nc, L, P = x.shape
+    N = Bm.shape[-1]
+    grid = (BH, nc)
+    return pl.pallas_call(
+        functools.partial(_ssd_kernel, L=L),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, L, P), lambda b, c: (b, c, 0, 0)),
+            pl.BlockSpec((1, 1, L), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1,), lambda b, c: (b,)),
+            pl.BlockSpec((1, 1, L, N), lambda b, c: (b, c, 0, 0)),
+            pl.BlockSpec((1, 1, L, N), lambda b, c: (b, c, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, L, P), lambda b, c: (b, c, 0, 0)),
+            pl.BlockSpec((1, 1, N, P), lambda b, c: (b, c, 0, 0)),
+            pl.BlockSpec((1, 1, L), lambda b, c: (b, c, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((BH, nc, L, P), jnp.float32),
+            jax.ShapeDtypeStruct((BH, nc, N, P), jnp.float32),
+            jax.ShapeDtypeStruct((BH, nc, L), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, dt, A_bh, Bm, Cm)

@@ -1,0 +1,63 @@
+"""Elastic scaling + failure handling for the quorum all-pairs runtime.
+
+The quorum schedule is a pure function of P (core.quorum difference-set
+construction is O(ms), memo-cached), so the control plane here is small:
+
+  * ``rescale(P_old, P_new)``    — derive the new schedule + the minimal
+    block-movement plan (which devices must fetch which blocks to satisfy
+    their new quorum), used when a pod grows/shrinks.
+  * ``failover(schedule, failed)`` — wrap core.scheduler.reassign into a
+    runnable plan (paper section 6 "quorum redundancy" future work).
+
+Both return plain data (no jax state) — the launcher applies them by
+re-sharding with jax.device_put under the new mesh.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Sequence, Tuple
+
+from ..core.quorum import cyclic_quorums
+from ..core.scheduler import PairSchedule, ReassignPlan, build_schedule, reassign
+
+
+@dataclasses.dataclass(frozen=True)
+class RescalePlan:
+    P_old: int
+    P_new: int
+    schedule: PairSchedule
+    # device -> global block ids it must hold afterwards (its new quorum)
+    new_quorums: List[List[int]]
+    # device -> blocks it needs but cannot derive locally (must fetch)
+    fetches: Dict[int, List[int]]
+
+    @property
+    def total_fetch_blocks(self) -> int:
+        return sum(len(v) for v in self.fetches.values())
+
+
+def rescale(P_old: int, P_new: int) -> RescalePlan:
+    """Plan a quorum-axis resize.  Blocks are re-chunked to P_new equal
+    parts by the data layer; this plan reports which *new* quorum members
+    each device must obtain (an upper bound when old shards can be reused)."""
+    sched = build_schedule(P_new)
+    quorums = cyclic_quorums(P_new)
+    old_quorums = cyclic_quorums(P_old) if P_old > 0 else []
+    fetches: Dict[int, List[int]] = {}
+    for i, S in enumerate(quorums):
+        had = set(old_quorums[i]) if i < len(old_quorums) else set()
+        # block ids change meaning across resize; the conservative plan
+        # fetches everything not previously held under the same index map
+        need = [b for b in S if b not in had or P_old != P_new]
+        if need:
+            fetches[i] = need
+    return RescalePlan(P_old=P_old, P_new=P_new, schedule=sched,
+                       new_quorums=quorums, fetches=fetches)
+
+
+def failover(schedule: PairSchedule, failed: Sequence[int]) -> ReassignPlan:
+    """Work reassignment after device failure (no resize): quorum peers that
+    co-hold a failed device's pairs absorb them; pairs whose co-residency
+    died fetch one block from a surviving holder.  See scheduler.reassign."""
+    return reassign(schedule, failed)

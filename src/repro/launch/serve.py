@@ -1,0 +1,68 @@
+"""Serving driver: batched greedy decoding against a sharded KV cache.
+
+examples/serve_lm.py drives this on a smoke config; the decode_32k /
+long_500k dry-run cells lower the same serve_step on the production meshes.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs import get_config, get_smoke_config
+from ..configs.registry import ARCHS
+from ..models import lm
+from . import steps as steps_mod
+from .mesh import make_mesh
+
+
+def serve(arch: str, *, smoke: bool = True, batch: int = 4, prompt_len: int = 16,
+          gen_len: int = 32, seed: int = 0, greedy: bool = True):
+    cfg = get_smoke_config(arch) if smoke else get_config(arch)
+    if cfg.encdec:
+        raise SystemExit("enc-dec serving is exercised in tests (whisper)")
+    mesh = make_mesh((len(jax.devices()),), ("data",))
+    cfg = steps_mod.prepare_config(cfg, mesh, seq_shard=False)
+
+    params = lm.init_params(cfg, jax.random.PRNGKey(seed))
+    max_len = prompt_len + gen_len
+    state = lm.init_decode_state(cfg, batch, max_len)
+    step = jax.jit(steps_mod.build_serve_step(cfg), donate_argnums=(1,))
+
+    rng = np.random.default_rng(seed)
+    prompt = rng.integers(0, cfg.vocab_size, size=(batch, prompt_len))
+    toks = jnp.asarray(prompt[:, :1], jnp.int32)
+    out = [np.asarray(toks)]
+    t0 = time.time()
+    with mesh:
+        for t in range(max_len - 1):
+            logits, state = step(params, state, toks)
+            if t + 1 < prompt_len:           # teacher-forced prompt phase
+                toks = jnp.asarray(prompt[:, t + 1:t + 2], jnp.int32)
+            else:                            # greedy generation
+                toks = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+            out.append(np.asarray(toks))
+    dt = time.time() - t0
+    seqs = np.concatenate(out, axis=1)
+    tps = batch * (max_len - 1) / dt
+    print(f"decoded {batch}x{max_len} tokens in {dt:.2f}s ({tps:.1f} tok/s)")
+    return seqs
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list(ARCHS), required=True)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen-len", type=int, default=32)
+    args = ap.parse_args(argv)
+    serve(args.arch, batch=args.batch, prompt_len=args.prompt_len,
+          gen_len=args.gen_len)
+
+
+if __name__ == "__main__":
+    main()

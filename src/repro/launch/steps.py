@@ -1,0 +1,239 @@
+"""Step builders + ShapeDtypeStruct input specs for every (arch x shape) cell.
+
+Three lowered entry points per the shape kinds:
+  train   -> train_step(params, opt_state, batch)   (loss, grads, AdamW)
+  prefill -> prefill_step(params, batch)            (last-position logits)
+  decode  -> serve_step(params, state, tokens)      (one token, cached)
+
+All functions are pure and jit-able; the dry-run lowers them with
+ShapeDtypeStruct stand-ins (no allocation) under the production mesh.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+from jax.sharding import PartitionSpec as PS
+
+from ..models import lm, whisper
+from ..models.config import ModelConfig
+from ..optim import AdamWConfig, adamw_init, adamw_update
+from .mesh import dp_axes, resolve_spec_tree
+
+Tree = Any
+
+
+def model_module(cfg: ModelConfig):
+    return whisper if cfg.encdec else lm
+
+
+def prepare_config(cfg: ModelConfig, mesh: Mesh, *, unroll_inner=False,
+                   seq_shard=True) -> ModelConfig:
+    """Launcher-side config fixup: wire mesh axes into the model."""
+    return dataclasses.replace(
+        cfg, dp_axes=dp_axes(mesh), seq_shard=seq_shard,
+        unroll_inner=unroll_inner)
+
+
+# ---------------------------------------------------------------------------
+# Steps
+# ---------------------------------------------------------------------------
+
+def build_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig, *, accum: int = 1):
+    """One optimizer step; ``accum`` > 1 scans gradient-accumulation
+    microbatches (the activation-memory knob for the big train cells — see
+    EXPERIMENTS.md section Dry-run for the per-cell choice)."""
+    mod = model_module(cfg)
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(
+            lambda p: mod.loss_fn(cfg, p, batch), has_aux=True)(params)
+
+    def train_step(params, opt_state, batch):
+        if accum == 1:
+            (loss, metrics), grads = grads_of(params, batch)
+        else:
+            split = jax.tree.map(
+                lambda a: a.reshape((accum, a.shape[0] // accum) + a.shape[1:]),
+                batch)
+
+            def micro(carry, mb):
+                gacc, loss_acc = carry
+                (loss, metrics), g = grads_of(params, mb)
+                gacc = jax.tree.map(
+                    lambda acc, gg: acc + gg.astype(jnp.float32) / accum,
+                    gacc, g)
+                return (gacc, loss_acc + loss / accum), metrics
+
+            gacc0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss), metrics_all = jax.lax.scan(
+                micro, (gacc0, jnp.zeros((), jnp.float32)), split)
+            metrics = jax.tree.map(lambda m: m.mean(), metrics_all)
+        params, opt_state, gnorm = adamw_update(opt_cfg, grads, opt_state,
+                                                params)
+        metrics = dict(metrics, loss=loss, grad_norm=gnorm)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def build_prefill_step(cfg: ModelConfig):
+    """Returns last-position logits (the sampled-token distribution)."""
+    if cfg.encdec:
+        def prefill_step(params, batch):
+            memory = whisper.encode(cfg, params, batch["frames"])
+            logits = whisper.decode_train(cfg, params, batch["tokens"], memory)
+            return logits[:, -1]
+        return prefill_step
+
+    def prefill_step(params, batch):
+        x, _aux = lm.forward_hidden(cfg, params, batch)
+        unembed = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+        return (x[:, -1] @ unembed).astype(jnp.float32)
+
+    return prefill_step
+
+
+def build_serve_step(cfg: ModelConfig):
+    mod = model_module(cfg)
+
+    def serve_step(params, state, tokens):
+        return mod.decode_step(cfg, params, state, tokens)
+
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# Input specs (ShapeDtypeStruct + PartitionSpec), per shape kind
+# ---------------------------------------------------------------------------
+
+def _dp(mesh: Mesh) -> Tuple[str, ...]:
+    return dp_axes(mesh)
+
+
+def _dp_size(mesh: Mesh) -> int:
+    return int(np.prod([mesh.shape[a] for a in _dp(mesh)]))
+
+
+def _ax_if_div(n: int, axes, mesh: Mesh):
+    sz = int(np.prod([mesh.shape[a] for a in (axes if isinstance(axes, tuple)
+                                              else (axes,))]))
+    return axes if n % sz == 0 and n >= sz else None
+
+
+def batch_specs(cfg: ModelConfig, shape, mesh: Mesh, *, with_labels: bool):
+    """ShapeDtypeStructs + PartitionSpecs for a train/prefill batch."""
+    B, T = shape.global_batch, shape.seq_len
+    dp = _ax_if_div(B, _dp(mesh), mesh)
+    sds: Dict[str, jax.ShapeDtypeStruct] = {}
+    specs: Dict[str, PS] = {}
+    if cfg.frontend == "audio_frames":
+        Td = max(1, T // cfg.dec_ratio)
+        sds["frames"] = jax.ShapeDtypeStruct((B, T, cfg.d_model), jnp.bfloat16)
+        specs["frames"] = PS(dp, _ax_if_div(T, "model", mesh), None)
+        sds["tokens"] = jax.ShapeDtypeStruct((B, Td), jnp.int32)
+        specs["tokens"] = PS(dp, None)
+        if with_labels:
+            sds["labels"] = jax.ShapeDtypeStruct((B, Td), jnp.int32)
+            specs["labels"] = PS(dp, None)
+        return sds, specs
+    Tt = T
+    if cfg.frontend == "vision_patches":
+        vis = min(cfg.vis_tokens, T // 2)
+        Tt = T - vis
+        sds["vision_embeds"] = jax.ShapeDtypeStruct((B, vis, cfg.d_model),
+                                                    jnp.bfloat16)
+        specs["vision_embeds"] = PS(dp, None, None)
+    sds["tokens"] = jax.ShapeDtypeStruct((B, Tt), jnp.int32)
+    specs["tokens"] = PS(dp, None)
+    if with_labels:
+        sds["labels"] = jax.ShapeDtypeStruct((B, Tt), jnp.int32)
+        specs["labels"] = PS(dp, None)
+    return sds, specs
+
+
+def _cache_spec(cfg: ModelConfig, shape, mesh: Mesh, rank5: bool = True) -> PS:
+    """KV cache [n_sup, B, S, KV, hd] sharding for a decode cell.
+
+    B over dp when divisible (decode_32k); otherwise S over dp (long_500k).
+    Head sharding: KV axis over model if divisible, else head_dim (always a
+    multiple of 16 in the assigned archs).
+    """
+    B = shape.global_batch
+    dp = _ax_if_div(B, _dp(mesh), mesh)
+    seq_ax = None if dp is not None else _dp(mesh)
+    kv_ax = _ax_if_div(cfg.n_kv_heads, "model", mesh)
+    hd_ax = None if kv_ax is not None else "model"
+    return PS(None, dp, seq_ax, kv_ax, hd_ax)
+
+
+def decode_state_specs(cfg: ModelConfig, shape, mesh: Mesh):
+    """(state ShapeDtypeStruct tree, state PartitionSpec tree, token specs)."""
+    B, S = shape.global_batch, shape.seq_len
+    dp = _ax_if_div(B, _dp(mesh), mesh)
+
+    if cfg.encdec:
+        params_sds = jax.eval_shape(
+            functools.partial(whisper.init_params, cfg), jax.random.key(0))
+        mem_sds = jax.ShapeDtypeStruct((B, S, cfg.d_model), cfg.dtype)
+        max_dec = 1024
+        state_sds = jax.eval_shape(
+            lambda p, m: whisper.init_decode_state(cfg, p, B, max_dec, m),
+            params_sds, mem_sds)
+        cache = _cache_spec(cfg, shape, mesh)
+        state_specs = {
+            "pos": PS(),
+            "k": cache, "v": cache,
+            # cross K/V [L, B, S_enc, KV, hd]: S_enc over dp when B == 1
+            "xk": cache, "xv": cache,
+        }
+        tok_sds = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+        return state_sds, state_specs, tok_sds, PS(dp, None)
+
+    state_sds = jax.eval_shape(
+        lambda: lm.init_decode_state(cfg, B, S))
+    cache = _cache_spec(cfg, shape, mesh)
+    conv_ch = cfg.d_inner + 2 * cfg.ssm_state
+    layer_specs: Dict[str, Any] = {}
+    for j, kind in enumerate(cfg.pattern()):
+        if kind == "A":
+            layer_specs[f"pos{j}"] = {"k": cache, "v": cache}
+        else:
+            layer_specs[f"pos{j}"] = {
+                "conv": PS(None, dp, None, _ax_if_div(conv_ch, "model", mesh)),
+                "ssm": PS(None, dp, _ax_if_div(cfg.ssm_heads, "model", mesh),
+                          None, None),
+            }
+    state_specs = {"pos": PS(), "layers": layer_specs}
+    tok_sds = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    return state_sds, state_specs, tok_sds, PS(dp, None)
+
+
+def param_and_opt_specs(cfg: ModelConfig, mesh: Mesh):
+    from .mesh import fix_spec_tree
+    mod = model_module(cfg)
+    placeholders = mod.param_specs(cfg)
+    sds = param_shapes(cfg)
+    p_specs = fix_spec_tree(
+        sds, resolve_spec_tree(placeholders, cfg, mesh, zero1=False), mesh)
+    o_inner = fix_spec_tree(
+        sds, resolve_spec_tree(placeholders, cfg, mesh, zero1=True), mesh)
+    o_specs = {"m": o_inner, "v": o_inner, "count": PS()}
+    return p_specs, o_specs
+
+
+def param_shapes(cfg: ModelConfig):
+    mod = model_module(cfg)
+    return jax.eval_shape(functools.partial(mod.init_params, cfg),
+                          jax.random.key(0))
+
+
+def opt_shapes(params_sds):
+    return jax.eval_shape(adamw_init, params_sds)

@@ -1,0 +1,9 @@
+"""Model substrate: unified LM stack covering all assigned architectures.
+
+Pure JAX (no flax): params are nested dict pytrees, built from declarative
+ParamDef tables so init, sharding specs, and counting share one source of
+truth.  Layers are scanned (lax.scan over stacked params) so HLO size is
+O(1) in depth — essential for the 512-device dry-run compiles.
+"""
+
+from .config import ModelConfig  # noqa: F401

@@ -1,0 +1,247 @@
+"""GQA attention: training forward, cross-attention, and cached decode.
+
+The inner block-pair computation maps to the flash-attention Pallas kernel
+(kernels/flash_attention.py) on TPU; this module is the reference jnp path
+with identical semantics (used on CPU and as the kernel oracle).
+Sequence-parallel execution for long-context cells is provided by
+apps/attention.py (quorum schedule) and wired in at the launch layer.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import ParamDef, Tree, apply_mrope, apply_rope, rmsnorm
+
+NEG_INF = -1e30
+
+
+def attn_defs(cfg) -> Tree:
+    d, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    defs = {
+        "wq": ParamDef((d, H, hd), ("F", "T", None), fan_in=d),
+        "wk": ParamDef((d, KV, hd), ("F", "T", None), fan_in=d),
+        "wv": ParamDef((d, KV, hd), ("F", "T", None), fan_in=d),
+        "wo": ParamDef((H, hd, d), ("T", None, "F"), scale=cfg.out_scale,
+                       fan_in=H * hd),
+    }
+    if cfg.qk_norm:
+        defs["q_norm"] = ParamDef((hd,), (None,), "ones")
+        defs["k_norm"] = ParamDef((hd,), (None,), "ones")
+    return defs
+
+
+def causal_window_bias(Tq: int, Tk: int, *, causal: bool,
+                       window: Optional[int], q_offset=0) -> jnp.ndarray:
+    """[Tq, Tk] additive float32 mask.  q_offset = abs position of query 0
+    minus abs position of key 0 (decode / blockwise)."""
+    q = jnp.arange(Tq)[:, None] + q_offset
+    k = jnp.arange(Tk)[None, :]
+    ok = jnp.ones((Tq, Tk), bool)
+    if causal:
+        ok &= k <= q
+    if window is not None:
+        ok &= k > q - window
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def qkv_project(cfg, p: Tree, x, positions):
+    """x: [B, T, d] -> q [B, T, H, hd], k/v [B, T, KV, hd] with pos encoding.
+
+    positions: [B, T] int32, or [B, T, 3] for M-RoPE.
+    """
+    q = jnp.einsum("btd,dhk->bthk", x, p["wq"])
+    k = jnp.einsum("btd,dhk->bthk", x, p["wk"])
+    v = jnp.einsum("btd,dhk->bthk", x, p["wv"])
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"])
+        k = rmsnorm(k, p["k_norm"])
+    if cfg.pos == "rope":
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    elif cfg.pos == "mrope":
+        pos3 = positions if positions.ndim == 3 else jnp.repeat(
+            positions[..., None], 3, axis=-1)
+        q = apply_mrope(q, pos3, cfg.rope_theta, cfg.mrope_sections)
+        k = apply_mrope(k, pos3, cfg.rope_theta, cfg.mrope_sections)
+    return q, k, v
+
+
+def sdpa(q, k, v, bias: Optional[jnp.ndarray] = None):
+    """Grouped scaled-dot-product attention.
+
+    q: [B, Tq, H, hd]; k/v: [B, Tk, KV, hd]; H % KV == 0.
+    bias: additive float32, broadcastable to [Tq, Tk] over trailing dims
+    (leading dims broadcast against [B, KV, G]).
+    Returns [B, Tq, H, hd] in q.dtype.
+    """
+    B, Tq, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, Tq, KV, G, hd)
+    logits = jnp.einsum("bqkgh,bskh->bkgqs",
+                        qg.astype(jnp.float32) / np.sqrt(hd),
+                        k.astype(jnp.float32))        # [B, KV, G, Tq, Tk]
+    if bias is not None:
+        while bias.ndim < 5:
+            bias = bias[None]
+        logits = logits + bias
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", w, v.astype(jnp.float32))
+    return out.reshape(B, Tq, H, hd).astype(q.dtype)
+
+
+def blocked_sdpa(q, k, v, *, causal: bool, window: Optional[int],
+                 block_k: int, unroll: bool):
+    """Flash-style online-softmax attention scanned over kv blocks.
+
+    Never materializes [Tq, Tk]; peak intermediate is [B, KV, G, Tq, bk].
+    Rectangular over kv blocks (causal masking inside the block) — the Pallas
+    kernel skips fully-masked blocks; XLA here does not, which the roofline
+    MODEL_FLOPS/HLO_FLOPs ratio exposes (see EXPERIMENTS.md section Perf).
+    """
+    B, Tq, H, hd = q.shape
+    Tk, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    bk = min(block_k, Tk)
+    assert Tk % bk == 0, (Tk, bk)
+    nb = Tk // bk
+    qg = (q.reshape(B, Tq, KV, G, hd).astype(jnp.float32) / np.sqrt(hd))
+    kb = k.reshape(B, nb, bk, KV, hd)
+    vb = v.reshape(B, nb, bk, KV, hd)
+    q_pos = jnp.arange(Tq)[:, None]
+
+    def step(carry, inp):
+        acc, m, l = carry
+        kc, vc, bi = inp
+        s = jnp.einsum("bqkgh,bskh->bkgqs", qg, kc.astype(jnp.float32))
+        k_pos = bi * bk + jnp.arange(bk)[None, :]
+        ok = jnp.ones((Tq, bk), bool)
+        if causal:
+            ok &= k_pos <= q_pos
+        if window is not None:
+            ok &= k_pos > q_pos - window
+        s = jnp.where(ok, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        c = jnp.exp(m - m_new)
+        p_ = jnp.exp(s - m_new[..., None])
+        l = l * c + jnp.sum(p_, axis=-1)
+        acc = acc * c[..., None] + jnp.einsum("bkgqs,bskh->bkgqh", p_,
+                                              vc.astype(jnp.float32))
+        return (acc, m_new, l), None
+
+    acc0 = (jnp.zeros((B, KV, G, Tq, hd), jnp.float32),
+            jnp.full((B, KV, G, Tq), NEG_INF, jnp.float32),
+            jnp.zeros((B, KV, G, Tq), jnp.float32))
+    xs = (jnp.moveaxis(kb, 1, 0), jnp.moveaxis(vb, 1, 0), jnp.arange(nb))
+    (acc, m, l), _ = jax.lax.scan(step, acc0, xs,
+                                  unroll=nb if unroll else 1)
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(B, KV * G, Tq, hd).transpose(0, 2, 1, 3).astype(q.dtype)
+
+
+def banded_sdpa(q, k, v, *, window: int):
+    """Sliding-window attention in O(T * 2W): q blocks of W attend to the
+    (previous, self) kv blocks only — the roll trick keeps everything dense
+    and MXU-shaped while cutting the 32k/500k cells to linear compute."""
+    B, T, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    W = window
+    assert T % W == 0, (T, W)
+    nb = T // W
+    qg = (q.reshape(B, nb, W, KV, G, hd).astype(jnp.float32) / np.sqrt(hd))
+    kb = k.reshape(B, nb, W, KV, hd)
+    vb = v.reshape(B, nb, W, KV, hd)
+    # previous block (zeros before block 0)
+    kprev = jnp.pad(kb[:, :-1], ((0, 0), (1, 0), (0, 0), (0, 0), (0, 0)))
+    vprev = jnp.pad(vb[:, :-1], ((0, 0), (1, 0), (0, 0), (0, 0), (0, 0)))
+    k2 = jnp.concatenate([kprev, kb], axis=2)           # [B, nb, 2W, KV, hd]
+    v2 = jnp.concatenate([vprev, vb], axis=2)
+    s = jnp.einsum("bnqkgh,bnskh->bnkgqs", qg, k2.astype(jnp.float32))
+    q_pos = jnp.arange(W)[:, None] + W                  # within [0, 2W)
+    k_pos = jnp.arange(2 * W)[None, :]
+    ok = (k_pos <= q_pos) & (k_pos > q_pos - W)
+    first = jnp.arange(nb)[:, None, None] == 0          # block 0 has no prev
+    ok = ok[None] & (~first | (k_pos >= W))             # [nb, W, 2W]
+    s = jnp.where(ok[None, :, None, None], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bnkgqs,bnskh->bnkgqh", w, v2.astype(jnp.float32))
+    o = o.reshape(B, nb, KV * G, W, hd).transpose(0, 1, 3, 2, 4)
+    return o.reshape(B, T, KV * G, hd).astype(q.dtype)
+
+
+def attention(cfg, p: Tree, x, positions, *, causal=True,
+              window: Optional[int] = None):
+    """Training-time self attention over [B, T, d].
+
+    Path selection: banded for SWA at long T; blocked (online softmax) at
+    long T; plain masked sdpa otherwise.
+    """
+    T = x.shape[1]
+    q, k, v = qkv_project(cfg, p, x, positions)
+    if window is not None and causal and T >= 2 * window and T % window == 0:
+        ctx = banded_sdpa(q, k, v, window=window)
+    elif T >= cfg.attn_block_threshold:
+        ctx = blocked_sdpa(q, k, v, causal=causal, window=window,
+                           block_k=cfg.attn_block_k, unroll=cfg.unroll_inner)
+    else:
+        bias = causal_window_bias(T, T, causal=causal, window=window)
+        ctx = sdpa(q, k, v, bias)
+    return jnp.einsum("bthk,hkd->btd", ctx, p["wo"])
+
+
+def cross_attention(cfg, p: Tree, x, memory_kv: Tuple[jnp.ndarray, jnp.ndarray]):
+    """Decoder cross-attention; memory_kv = (k, v) [B, S, KV, hd] precomputed."""
+    q = jnp.einsum("btd,dhk->bthk", x, p["wq"])
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"])
+    ctx = sdpa(q, *memory_kv)
+    return jnp.einsum("bthk,hkd->btd", ctx, p["wo"])
+
+
+def cross_kv(cfg, p: Tree, memory):
+    """Precompute cross-attention K/V from encoder output [B, S, d]."""
+    k = jnp.einsum("bsd,dhk->bshk", memory, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", memory, p["wv"])
+    if cfg.qk_norm:
+        k = rmsnorm(k, p["k_norm"])
+    return k, v
+
+
+# ---------------------------------------------------------------------------
+# Cached decode
+# ---------------------------------------------------------------------------
+
+def decode_attention(cfg, p: Tree, x, cache_k, cache_v, pos, *,
+                     window: Optional[int] = None):
+    """One-token decode: x [B, 1, d]; cache_k/v [B, S, KV, hd]; pos scalar.
+
+    Ring-buffer cache: the new K/V lands at slot ``pos % S``; slot s holds
+    absolute position ``pos - ((pos - s) mod S)`` which unifies the plain
+    (S >= max_len) and sliding-window (S >= window) layouts — SWA archs keep
+    only O(window) cache at 500k context.  RoPE is applied at the absolute
+    position before caching, so wrapped slots stay correct.
+    """
+    B = x.shape[0]
+    S = cache_k.shape[1]
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q, k_new, v_new = qkv_project(cfg, p, x, positions)
+    slot = jnp.mod(pos, S)
+    cache_k = jax.lax.dynamic_update_slice(cache_k, k_new.astype(cache_k.dtype),
+                                           (0, slot, 0, 0))
+    cache_v = jax.lax.dynamic_update_slice(cache_v, v_new.astype(cache_v.dtype),
+                                           (0, slot, 0, 0))
+    kpos = jnp.arange(S)
+    abs_pos = pos - jnp.mod(pos - kpos, S)
+    ok = abs_pos >= 0
+    if window is not None:
+        ok &= abs_pos > pos - window
+    bias = jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)[None, :]  # [1, S]
+    ctx = sdpa(q, cache_k, cache_v, bias)
+    out = jnp.einsum("bthk,hkd->btd", ctx, p["wo"])
+    return out, cache_k, cache_v

@@ -1,0 +1,179 @@
+"""Shared building blocks: ParamDef tables, norms, positions, MLPs.
+
+Sharding placeholders used in ParamDef specs (resolved by launch/mesh.py):
+  "T"  -> the tensor-model axis ("model")
+  "F"  -> the fsdp axis ("data") when cfg.fsdp else replicated
+  "D"  -> data-parallel axes for activations (("pod","data") on multi-pod)
+  None -> replicated
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Tree = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: Tuple[int, ...]
+    spec: Tuple[Optional[str], ...]      # placeholder spec, same rank as shape
+    init: str = "normal"                 # normal | zeros | ones | embed
+    scale: float = 1.0                   # stddev multiplier for "normal"
+    fan_in: int = 0                      # contraction size; 0 -> shape[-2]
+    # (3-D projections like wq [d, H, hd] contract shape[0], NOT shape[-2]
+    # — the heuristic gave wv [d, KV, hd] an std of 1/sqrt(KV) = 12x too
+    # hot, saturating attention at init; EXPERIMENTS.md Perf E1.)
+
+    def with_leading(self, n: int) -> "ParamDef":
+        """Stack n copies along a new leading (scan) axis."""
+        return ParamDef((n,) + self.shape, (None,) + self.spec, self.init,
+                        self.scale, self.fan_in)
+
+
+def init_tree(defs: Tree, key: jax.Array, dtype) -> Tree:
+    """Materialize a ParamDef tree into arrays (deterministic key split)."""
+    leaves, treedef = jax.tree.flatten(defs, is_leaf=lambda x: isinstance(x, ParamDef))
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for d, k in zip(leaves, keys):
+        assert isinstance(d, ParamDef), d
+        if d.init == "zeros":
+            a = jnp.zeros(d.shape, dtype)
+        elif d.init == "ones":
+            a = jnp.ones(d.shape, dtype)
+        elif d.init == "embed":
+            # T5-style: std 1/sqrt(d_model) with sqrt(d_model)-scaled lookup,
+            # so the residual stream starts at rms ~1.  (fan_in-of-vocab init
+            # gave rms(x0) ~ 1/sqrt(V) and the first rmsnorm's backward then
+            # amplified the embedding gradient ~sqrt(V)x — measured 1.7e8
+            # grad norm on the 100M example; EXPERIMENTS.md Perf E1.)
+            std = d.scale / math.sqrt(max(1, d.shape[-1]))
+            a = (jax.random.normal(k, d.shape, jnp.float32) * std).astype(dtype)
+        else:
+            fan_in = d.fan_in or (d.shape[-2] if len(d.shape) >= 2
+                                  else d.shape[-1])
+            std = d.scale / math.sqrt(max(1, fan_in))
+            a = (jax.random.normal(k, d.shape, jnp.float32) * std).astype(dtype)
+        out.append(a)
+    return jax.tree.unflatten(treedef, out)
+
+
+def spec_tree(defs: Tree) -> Tree:
+    """Extract the placeholder spec tree (same structure as params)."""
+    return jax.tree.map(lambda d: d.spec, defs,
+                        is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x, gamma, eps=1e-6):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(x.dtype) * gamma
+
+
+def layernorm(x, gamma, beta, eps=1e-5):
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    return ((x32 - mu) * jax.lax.rsqrt(var + eps)).astype(x.dtype) * gamma + (
+        beta if beta is not None else 0.0)
+
+
+def norm_defs(cfg) -> Tree:
+    if cfg.norm == "layernorm":
+        return {"gamma": ParamDef((cfg.d_model,), (None,), "ones"),
+                "beta": ParamDef((cfg.d_model,), (None,), "zeros")}
+    return {"gamma": ParamDef((cfg.d_model,), (None,), "ones")}
+
+
+def apply_norm(cfg, p: Tree, x):
+    if cfg.norm == "layernorm":
+        return layernorm(x, p["gamma"], p["beta"])
+    return rmsnorm(x, p["gamma"])
+
+
+# ---------------------------------------------------------------------------
+# Positions: RoPE / M-RoPE / sinusoidal
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> np.ndarray:
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2) / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: [..., seq, heads, head_dim]; positions: [..., seq] int32."""
+    hd = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(hd, theta), jnp.float32)     # [hd/2]
+    ang = positions[..., :, None].astype(jnp.float32) * freqs   # [..., seq, hd/2]
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x, positions3, theta: float, sections: Tuple[int, int, int]):
+    """M-RoPE (qwen2-vl): rotary over 3 position streams (t, h, w).
+
+    positions3: [..., seq, 3].  Each frequency slot is assigned to one of the
+    three sections; text tokens use identical t=h=w positions, which makes
+    M-RoPE degenerate to 1-D RoPE exactly (as in the paper).
+    """
+    hd = x.shape[-1]
+    half = hd // 2
+    sec = np.asarray(sections, np.int32)
+    assert sec.sum() == half, (sections, hd)
+    # frequency slot -> section id
+    sid = np.concatenate([np.full(s, i, np.int32) for i, s in enumerate(sec)])
+    freqs = jnp.asarray(rope_freqs(hd, theta), jnp.float32)
+    pos = positions3.astype(jnp.float32)[..., sid]               # [..., seq, half]
+    ang = pos * freqs
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sincos_positions(seq: int, d_model: int) -> np.ndarray:
+    """Whisper-style fixed sinusoidal embeddings [seq, d_model]."""
+    pos = np.arange(seq)[:, None]
+    i = np.arange(d_model // 2)[None, :]
+    ang = pos / (10_000 ** (2 * i / d_model))
+    return np.concatenate([np.sin(ang), np.cos(ang)], axis=-1).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def mlp_defs(cfg, d_ff: Optional[int] = None) -> Tree:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    if cfg.mlp == "swiglu":
+        return {
+            "wi": ParamDef((d, f), ("F", "T")),
+            "wg": ParamDef((d, f), ("F", "T")),
+            "wo": ParamDef((f, d), ("T", "F"), scale=cfg.out_scale),
+        }
+    return {
+        "wi": ParamDef((d, f), ("F", "T")),
+        "wo": ParamDef((f, d), ("T", "F"), scale=cfg.out_scale),
+    }
+
+
+def apply_mlp(cfg, p: Tree, x):
+    if cfg.mlp == "swiglu":
+        h = jax.nn.silu(x @ p["wg"]) * (x @ p["wi"])
+    else:
+        h = jax.nn.gelu(x @ p["wi"])
+    return h @ p["wo"]

@@ -1,0 +1,127 @@
+"""Model configuration dataclass shared by all architectures."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str = "model"
+    family: str = "dense"          # dense | ssm | hybrid | moe | audio | vlm
+    n_layers: int = 2
+    d_model: int = 64
+    n_heads: int = 2
+    n_kv_heads: int = 2
+    head_dim: int = 0              # 0 -> d_model // n_heads
+    d_ff: int = 128
+    vocab_size: int = 256
+
+    norm: str = "rmsnorm"          # rmsnorm | layernorm
+    mlp: str = "swiglu"            # swiglu | gelu
+    qk_norm: bool = False
+    pos: str = "rope"              # rope | mrope | sincos | none
+    rope_theta: float = 10_000.0
+    mrope_sections: Tuple[int, int, int] = (16, 24, 24)  # t/h/w dims (qwen2-vl)
+    window: Optional[int] = None   # sliding-window attention size
+
+    # MoE
+    moe_experts: int = 0
+    moe_top_k: int = 0
+    moe_every: int = 1             # every n-th layer is MoE (others dense)
+    moe_shared: bool = False       # additional always-on shared expert
+    capacity_factor: float = 1.25
+
+    # Mamba2 / SSD
+    ssm_state: int = 0
+    ssm_conv: int = 4
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_chunk: int = 256
+
+    # hybrid stacks: repeating pattern, "A"=attention, "M"=mamba
+    layer_pattern: Optional[Tuple[str, ...]] = None
+
+    # encoder-decoder (whisper backbone)
+    encdec: bool = False
+    n_enc_layers: int = 0
+    dec_ratio: int = 8             # T_dec = seq_len // dec_ratio in shape cells
+
+    # modality frontend stubs
+    frontend: Optional[str] = None  # audio_frames | vision_patches
+    vis_tokens: int = 1024          # stub patch-embedding count (vlm)
+
+    tie_embeddings: bool = False
+
+    # numerics / execution
+    dtype: object = jnp.bfloat16
+    remat: bool = True
+    scan_layers: bool = True
+    fsdp: bool = False              # shard params along the data axis too
+    attn_sp: str = "none"           # none | quorum | ring (long-seq strategy)
+    seq_shard: bool = False         # Megatron-style SP: activations sharded
+                                    # over the model axis between blocks
+                                    # (enabled by the launcher, needs a mesh)
+    dp_axes: Tuple[str, ...] = ("data",)  # mesh axes carrying the batch
+    tp_axis: str = "model"
+    attn_block_k: int = 1024        # kv-block size for blocked attention
+    attn_block_threshold: int = 4096  # use blocked path when T >= this
+    unroll_inner: bool = False      # unroll inner scans (cost-extrapolation
+                                    # compiles need trip counts visible)
+    moe_ec_constraint: Optional[str] = None  # None | "ep" | "cap" expert-
+                                             # buffer constraints (see moe.py)
+
+    def __post_init__(self):
+        if self.head_dim == 0 and self.n_heads:
+            object.__setattr__(self, "head_dim", self.d_model // self.n_heads)
+
+    # ---- derived -----------------------------------------------------------
+    @property
+    def out_scale(self) -> float:
+        """GPT-2-style depth-scaled init for residual-branch output
+        projections: without it the backward pass amplifies ~2x/layer and
+        the embedding gradient at 12 layers measured 1.7e8 (see
+        EXPERIMENTS.md Perf E1)."""
+        import math
+        return 1.0 / math.sqrt(max(1, 2 * self.n_layers))
+
+    @property
+    def d_inner(self) -> int:      # mamba2 inner width
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return max(1, self.d_inner // self.ssm_head_dim)
+
+    def pattern(self) -> Tuple[str, ...]:
+        """Per-layer kinds for one repeating superblock.
+
+        The superblock must span the MoE periodicity so ``is_moe_layer``
+        (indexed by pattern position) sees all phases — e.g. maverick's
+        alternating dense/MoE becomes ("A", "A") with MoE at position 1.
+        """
+        if self.layer_pattern is not None:
+            return self.layer_pattern
+        if self.family == "ssm":
+            return ("M",)
+        reps = self.moe_every if self.moe_experts else 1
+        return ("A",) * max(1, reps)
+
+    @property
+    def n_superblocks(self) -> int:
+        pat = self.pattern()
+        assert self.n_layers % len(pat) == 0, (self.n_layers, pat)
+        return self.n_layers // len(pat)
+
+    def is_moe_layer(self, layer_in_pattern: int) -> bool:
+        if self.moe_experts == 0:
+            return False
+        return layer_in_pattern % self.moe_every == (self.moe_every - 1)
+
+    def param_count(self) -> int:
+        """Analytic parameter count (used for 6ND model-FLOPs and reports)."""
+        from . import lm  # local import to avoid cycle
+        return lm.count_params(self)

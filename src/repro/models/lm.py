@@ -1,0 +1,383 @@
+"""Unified decoder-only LM covering dense / GQA / MoE / SSM / hybrid / VLM.
+
+Layer stack = repeating "superblock" pattern (e.g. Jamba's 7 Mamba + 1
+attention), scanned over ``n_superblocks`` repeats with optional remat, so the
+lowered HLO contains each distinct layer body once regardless of depth.
+
+Params are dict pytrees built from ParamDef tables; ``param_specs`` yields the
+matching PartitionSpec placeholder tree for pjit (resolved in launch/mesh.py).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import attention as attn
+from . import moe as moe_mod
+from . import ssm as ssm_mod
+from .common import (ParamDef, Tree, apply_mlp, apply_norm, init_tree,
+                     mlp_defs, norm_defs, spec_tree)
+from .config import ModelConfig
+
+
+# ---------------------------------------------------------------------------
+# Parameter tables
+# ---------------------------------------------------------------------------
+
+def _layer_defs(cfg: ModelConfig, kind: str, j: int) -> Tree:
+    """One layer's params.  kind: 'A' attention or 'M' mamba; j = index in
+    the superblock pattern (controls MoE placement)."""
+    defs: Tree = {"norm1": norm_defs(cfg)}
+    if kind == "A":
+        defs["attn"] = attn.attn_defs(cfg)
+        defs["norm2"] = norm_defs(cfg)
+        if cfg.is_moe_layer(j):
+            defs["moe"] = moe_mod.moe_defs(cfg)
+        elif cfg.d_ff > 0:
+            defs["mlp"] = mlp_defs(cfg)
+    else:  # Mamba layer: its block includes gating; optional MoE/MLP after
+        defs["ssm"] = ssm_mod.ssm_defs(cfg)
+        if cfg.is_moe_layer(j):
+            defs["norm2"] = norm_defs(cfg)
+            defs["moe"] = moe_mod.moe_defs(cfg)
+        elif cfg.d_ff > 0 and cfg.family in ("hybrid",):
+            defs["norm2"] = norm_defs(cfg)
+            defs["mlp"] = mlp_defs(cfg)
+    return defs
+
+
+def model_defs(cfg: ModelConfig) -> Tree:
+    V, d = cfg.vocab_size, cfg.d_model
+    defs: Tree = {
+        "embed": ParamDef((V, d), ("T", "F"), "embed"),
+        "final_norm": norm_defs(cfg),
+    }
+    if not cfg.tie_embeddings:
+        defs["unembed"] = ParamDef((d, V), ("F", "T"))
+    pat = cfg.pattern()
+    n_sup = cfg.n_superblocks
+    defs["layers"] = {
+        f"pos{j}": jax.tree.map(
+            lambda pd: pd.with_leading(n_sup), _layer_defs(cfg, kind, j),
+            is_leaf=lambda x: isinstance(x, ParamDef))
+        for j, kind in enumerate(pat)
+    }
+    return defs
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Tree:
+    return init_tree(model_defs(cfg), key, cfg.dtype)
+
+
+def param_specs(cfg: ModelConfig) -> Tree:
+    return spec_tree(model_defs(cfg))
+
+
+def count_params(cfg: ModelConfig) -> int:
+    leaves = jax.tree.leaves(model_defs(cfg),
+                             is_leaf=lambda x: isinstance(x, ParamDef))
+    return int(sum(int(np.prod(d.shape)) for d in leaves))
+
+
+def count_active_params(cfg: ModelConfig) -> int:
+    """Params touched per token (MoE experts counted at top_k of E)."""
+    total = count_params(cfg)
+    if cfg.moe_experts == 0:
+        return total
+    # subtract inactive expert weights
+    pat = cfg.pattern()
+    n_moe_layers = sum(cfg.n_superblocks for j, _ in enumerate(pat)
+                       if cfg.is_moe_layer(j))
+    per_expert = 3 * cfg.d_model * cfg.d_ff  # wi, wg, wo
+    inactive = n_moe_layers * (cfg.moe_experts - cfg.moe_top_k) * per_expert
+    return total - inactive
+
+
+# ---------------------------------------------------------------------------
+# Layer application
+# ---------------------------------------------------------------------------
+
+def _apply_layer(cfg: ModelConfig, kind: str, j: int, p: Tree, x, positions):
+    """Training-time layer.  Returns (x, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    if kind == "A":
+        h = apply_norm(cfg, p["norm1"], x)
+        x = x + attn.attention(cfg, p["attn"], h, positions,
+                               causal=True, window=cfg.window)
+        h = apply_norm(cfg, p["norm2"], x)
+        if "moe" in p:
+            y, aux = moe_mod.apply_moe(cfg, p["moe"], h)
+            x = x + y
+        elif "mlp" in p:
+            x = x + apply_mlp(cfg, p["mlp"], h)
+    else:
+        h = apply_norm(cfg, p["norm1"], x)
+        y, _state = ssm_mod.mamba_block(cfg, p["ssm"], h)
+        x = x + y
+        if "moe" in p:
+            h = apply_norm(cfg, p["norm2"], x)
+            y, aux = moe_mod.apply_moe(cfg, p["moe"], h)
+            x = x + y
+        elif "mlp" in p:
+            h = apply_norm(cfg, p["norm2"], x)
+            x = x + apply_mlp(cfg, p["mlp"], h)
+    return x, aux
+
+
+def _sp_constraint(cfg: ModelConfig, x):
+    """Megatron-style sequence parallelism: between blocks, activations are
+    sharded over the tensor axis along T; GSPMD inserts the all-gather /
+    reduce-scatter pair around each TP region."""
+    if not cfg.seq_shard or x.ndim != 3:
+        return x
+    from jax.sharding import PartitionSpec as PS
+    return jax.lax.with_sharding_constraint(
+        x, PS(cfg.dp_axes, cfg.tp_axis, None))
+
+
+def _superblock(cfg: ModelConfig, params_sb: Tree, x, positions):
+    aux = jnp.zeros((), jnp.float32)
+    multi = len(cfg.pattern()) > 1
+    for j, kind in enumerate(cfg.pattern()):
+        x = _sp_constraint(cfg, x)
+        if cfg.remat and multi:
+            # nested per-layer remat: without it the backward of a long
+            # superblock (Jamba: 8 layers) materializes every layer's
+            # intermediates at once — measured 35.8 GiB/device on the
+            # jamba train_4k cell vs ~1 layer's worth with this (section
+            # Perf iteration 1).
+            x, a = jax.checkpoint(
+                lambda p, xx, jj=j, kk=kind: _apply_layer(
+                    cfg, kk, jj, p, xx, positions),
+                policy=jax.checkpoint_policies.nothing_saveable,
+            )(params_sb[f"pos{j}"], x)
+        else:
+            x, a = _apply_layer(cfg, kind, j, params_sb[f"pos{j}"], x,
+                                positions)
+        aux = aux + a
+    return x, aux
+
+
+# ---------------------------------------------------------------------------
+# Forward / loss
+# ---------------------------------------------------------------------------
+
+def embed_inputs(cfg: ModelConfig, params: Tree, batch: Dict[str, jax.Array]):
+    """Token (+ optional modality-stub) embedding.  Returns (x, positions)."""
+    if cfg.frontend == "audio_frames":
+        # whisper-style: frames are already d_model embeddings (conv stub)
+        x = batch["frames"].astype(cfg.dtype)
+        positions = jnp.broadcast_to(jnp.arange(x.shape[1]), x.shape[:2])
+        return x, positions
+    tokens = batch["tokens"]
+    x = (jnp.take(params["embed"], tokens, axis=0)
+         * math.sqrt(cfg.d_model)).astype(cfg.dtype)
+    if cfg.frontend == "vision_patches" and "vision_embeds" in batch:
+        vis = batch["vision_embeds"].astype(cfg.dtype)
+        x = jnp.concatenate([vis, x], axis=1)
+    T = x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(T), x.shape[:2])
+    return x, positions
+
+
+def forward(cfg: ModelConfig, params: Tree, batch: Dict[str, jax.Array]):
+    """Training forward -> (logits [B, T, V] float32, aux_loss scalar).
+
+    Materializes full logits — use only for small T (tests, smoke); training
+    and prefill go through forward_hidden/chunked_ce.
+    """
+    x, aux = forward_hidden(cfg, params, batch)
+    unembed = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    logits = (x @ unembed).astype(jnp.float32)
+    return logits, aux
+
+
+def chunked_ce(x_final, unembed, labels, *, chunk: int = 512,
+               z_weight: float = 1e-4, unroll: bool = False):
+    """Cross-entropy scanned over T chunks so the full [B, T, V] logits are
+    never materialized (V runs to 202k in the assigned archs).
+
+    x_final: [B, T, d] post-final-norm activations; labels [B, T] (<0 masked).
+    Returns (nll_sum, z_sum, count).
+    """
+    B, T, d = x_final.shape
+    chunk = min(chunk, T)
+    assert T % chunk == 0, (T, chunk)
+    nc = T // chunk
+    xs = (x_final.reshape(B, nc, chunk, d).transpose(1, 0, 2, 3),
+          labels.reshape(B, nc, chunk).transpose(1, 0, 2))
+
+    def body(carry, inp):
+        nll_s, z_s, cnt = carry
+        xc, lc = inp
+        logits = (xc @ unembed).astype(jnp.float32)       # [B, chunk, V]
+        mask = (lc >= 0).astype(jnp.float32)
+        safe = jnp.maximum(lc, 0)
+        logz = jax.scipy.special.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+        nll_s = nll_s + jnp.sum((logz - gold) * mask)
+        z_s = z_s + jnp.sum((logz * mask) ** 2)
+        cnt = cnt + jnp.sum(mask)
+        return (nll_s, z_s, cnt), None
+
+    init = (jnp.zeros((), jnp.float32),) * 3
+    (nll_s, z_s, cnt), _ = jax.lax.scan(body, init, xs,
+                                        unroll=nc if unroll else 1)
+    return nll_s, z_weight * z_s, cnt
+
+
+def forward_hidden(cfg: ModelConfig, params: Tree, batch: Dict[str, jax.Array]):
+    """Forward up to (and incl.) the final norm -> (x [B,T,d], aux)."""
+    x, positions = embed_inputs(cfg, params, batch)
+
+    def body(carry, params_sb):
+        x, aux = carry
+        if cfg.remat:
+            x, a = jax.checkpoint(
+                lambda p, xx: _superblock(cfg, p, xx, positions),
+                policy=jax.checkpoint_policies.nothing_saveable,
+            )(params_sb, x)
+        else:
+            x, a = _superblock(cfg, params_sb, x, positions)
+        return (x, aux + a), None
+
+    if cfg.scan_layers and cfg.n_superblocks > 1:
+        (x, aux), _ = jax.lax.scan(
+            body, (x, jnp.zeros((), jnp.float32)), params["layers"],
+            unroll=cfg.n_superblocks if cfg.unroll_inner else 1)
+    else:
+        aux = jnp.zeros((), jnp.float32)
+        for i in range(cfg.n_superblocks):
+            sb = jax.tree.map(lambda a: a[i], params["layers"])
+            (x, aux), _ = body((x, aux), sb)
+    return apply_norm(cfg, params["final_norm"], x), aux
+
+
+def loss_fn(cfg: ModelConfig, params: Tree, batch: Dict[str, jax.Array],
+            *, aux_weight: float = 0.01, z_weight: float = 1e-4):
+    """Causal LM loss with label masking (labels < 0 are ignored)."""
+    x, aux = forward_hidden(cfg, params, batch)
+    labels = batch["labels"]
+    if cfg.frontend == "vision_patches" and "vision_embeds" in batch:
+        pad = -jnp.ones(labels.shape[:1] + (x.shape[1] - labels.shape[1],),
+                        labels.dtype)
+        labels = jnp.concatenate([pad, labels], axis=1)
+    unembed = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    nll_s, z_s, cnt = chunked_ce(x, unembed, labels, z_weight=z_weight,
+                                 unroll=cfg.unroll_inner)
+    denom = jnp.maximum(cnt, 1.0)
+    ce = nll_s / denom
+    zloss = z_s / denom
+    return ce + zloss + aux_weight * aux, {"ce": ce, "aux": aux, "zloss": zloss}
+
+
+# ---------------------------------------------------------------------------
+# Decode (serve_step)
+# ---------------------------------------------------------------------------
+
+def init_decode_state(cfg: ModelConfig, batch: int, max_len: int) -> Tree:
+    """Per-pattern-position caches stacked over superblocks."""
+    n_sup = cfg.n_superblocks
+    state: Tree = {"pos": jnp.zeros((), jnp.int32), "layers": {}}
+    for j, kind in enumerate(cfg.pattern()):
+        if kind == "A":
+            KV, hd = cfg.n_kv_heads, cfg.head_dim
+            S = max_len if cfg.window is None else min(max_len, cfg.window)
+            state["layers"][f"pos{j}"] = {
+                "k": jnp.zeros((n_sup, batch, S, KV, hd), cfg.dtype),
+                "v": jnp.zeros((n_sup, batch, S, KV, hd), cfg.dtype),
+            }
+        else:
+            s = ssm_mod.init_ssm_state(cfg, batch)
+            state["layers"][f"pos{j}"] = jax.tree.map(
+                lambda a: jnp.broadcast_to(a[None], (n_sup,) + a.shape), s)
+    return state
+
+
+def decode_step(cfg: ModelConfig, params: Tree, state: Tree,
+                tokens: jax.Array) -> Tuple[jax.Array, Tree]:
+    """One decode step: tokens [B, 1] -> (logits [B, 1, V], new state).
+
+    KV caches use the full-length layout; SWA archs still mask to the window
+    (ring-buffer compaction is an orthogonal serving optimization, noted in
+    DESIGN.md).  ``state['pos']`` is the write position.
+    """
+    pos = state["pos"]
+    x = (jnp.take(params["embed"], tokens, axis=0)
+         * math.sqrt(cfg.d_model)).astype(cfg.dtype)
+    pat = cfg.pattern()
+
+    def apply_sb(x, params_sb, cache_sb):
+        """One superblock at decode time -> (x, new per-layer caches)."""
+        new_cache = {}
+        for j, kind in enumerate(pat):
+            p = params_sb[f"pos{j}"]
+            c = cache_sb[f"pos{j}"]
+            h = apply_norm(cfg, p["norm1"], x)
+            if kind == "A":
+                y, ck, cv = attn.decode_attention(
+                    cfg, p["attn"], h, c["k"], c["v"], pos, window=cfg.window)
+                x = x + y
+                new_cache[f"pos{j}"] = {"k": ck, "v": cv}
+                h = apply_norm(cfg, p["norm2"], x)
+                if "moe" in p:
+                    y, _ = moe_mod.apply_moe(cfg, p["moe"], h)
+                    x = x + y
+                elif "mlp" in p:
+                    x = x + apply_mlp(cfg, p["mlp"], h)
+            else:
+                y, new_s = ssm_mod.mamba_block(cfg, p["ssm"], h, state=c)
+                x = x + y
+                new_cache[f"pos{j}"] = new_s
+                if "moe" in p:
+                    h = apply_norm(cfg, p["norm2"], x)
+                    y, _ = moe_mod.apply_moe(cfg, p["moe"], h)
+                    x = x + y
+                elif "mlp" in p:
+                    h = apply_norm(cfg, p["norm2"], x)
+                    x = x + apply_mlp(cfg, p["mlp"], h)
+        return x, new_cache
+
+    if cfg.scan_layers and cfg.n_superblocks > 1:
+        # The stacked caches ride in the CARRY and are updated in place with
+        # per-superblock dynamic_update_slice — passing them as scan xs/ys
+        # makes XLA materialize a second cache-sized buffer (measured 2.5x
+        # cache bytes of temp on the 72B decode cell).
+        def body(carry, inp):
+            x, caches = carry
+            params_sb, i = inp
+            cache_sb = jax.tree.map(
+                lambda a: jax.lax.dynamic_index_in_dim(a, i, 0, keepdims=False),
+                caches)
+            x, new_cache = apply_sb(x, params_sb, cache_sb)
+            caches = jax.tree.map(
+                lambda full, new: jax.lax.dynamic_update_index_in_dim(
+                    full, new.astype(full.dtype), i, 0),
+                caches, new_cache)
+            return (x, caches), None
+
+        (x, new_layers), _ = jax.lax.scan(
+            body, (x, state["layers"]),
+            (params["layers"], jnp.arange(cfg.n_superblocks)),
+            unroll=cfg.n_superblocks if cfg.unroll_inner else 1)
+    elif cfg.n_superblocks == 0:
+        new_layers = state["layers"]
+    else:
+        new_list = []
+        for i in range(cfg.n_superblocks):
+            sb = jax.tree.map(lambda a: a[i], params["layers"])
+            cb = jax.tree.map(lambda a: a[i], state["layers"])
+            x, nc = apply_sb(x, sb, cb)
+            new_list.append(nc)
+        new_layers = jax.tree.map(lambda *xs: jnp.stack(xs), *new_list)
+
+    x = apply_norm(cfg, params["final_norm"], x)
+    unembed = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    logits = (x @ unembed).astype(jnp.float32)
+    new_state = {"pos": pos + 1, "layers": new_layers}
+    return logits, new_state

@@ -1,0 +1,112 @@
+"""Mixture-of-experts layer: top-k routing with capacity, scatter/gather
+dispatch (MaxText-style) — no [n_tokens, E, capacity] one-hot cube is ever
+materialized, so 1M-token batches with 128 experts stay tractable.
+
+Dispatch: each (token, choice) gets a slot = its rank among same-expert
+choices (capacity-clipped); tokens scatter-add into the [E*C, d] expert
+buffer, experts run batched matmuls [E, C, d] x [E, d, f], and outputs
+gather back per (token, choice) weighted by the normalized gate.
+
+Expert parallelism: expert weights carry the "T" (model-axis) placeholder on
+the E dim; under pjit the scatter/gather lower to collective exchanges along
+that axis.  FLOPs ~ cf * tokens * top_k * 3 * d * ff (active-expert compute).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import ParamDef, Tree
+
+
+def moe_defs(cfg) -> Tree:
+    d, f, E = cfg.d_model, cfg.d_ff, cfg.moe_experts
+    defs = {
+        "router": ParamDef((d, E), (None, None), scale=0.1),
+        "wi": ParamDef((E, d, f), ("T", "F", None)),
+        "wg": ParamDef((E, d, f), ("T", "F", None)),
+        "wo": ParamDef((E, f, d), ("T", None, "F"), scale=cfg.out_scale),
+    }
+    if cfg.moe_shared:
+        defs["shared"] = {
+            "wi": ParamDef((d, f), ("F", "T")),
+            "wg": ParamDef((d, f), ("F", "T")),
+            "wo": ParamDef((f, d), ("T", "F"), scale=cfg.out_scale),
+        }
+    return defs
+
+
+def apply_moe(cfg, p: Tree, x):
+    """x: [B, T, d] -> ([B, T, d], aux load-balance loss scalar)."""
+    B, T, d = x.shape
+    E, k = cfg.moe_experts, cfg.moe_top_k
+    n = B * T
+    xt = x.reshape(n, d)
+
+    logits = xt.astype(jnp.float32) @ p["router"].astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)                  # [n, E]
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)            # [n, k]
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # Switch-style aux loss: E * sum_e (token fraction_e * mean prob_e)
+    me = probs.mean(axis=0)
+    ce = jnp.zeros((E,), jnp.float32).at[gate_idx.reshape(-1)].add(1.0) / (n * k)
+    aux = E * jnp.sum(me * ce)
+
+    C = int(max(1, round(cfg.capacity_factor * n * k / E)))
+
+    eidx = gate_idx.reshape(-1)                              # [n*k]
+    # slot = rank of this (token, choice) within its expert
+    onehot_cols = jax.nn.one_hot(eidx, E, dtype=jnp.int32)   # [n*k, E]
+    ranks = jnp.cumsum(onehot_cols, axis=0) - onehot_cols    # [n*k, E]
+    slot = jnp.take_along_axis(ranks, eidx[:, None], axis=-1)[:, 0]
+    keep = slot < C
+    flat_idx = jnp.where(keep, eidx * C + jnp.minimum(slot, C - 1), E * C)
+
+    def ec_constraint(t):
+        """[E, C, d] expert-buffer constraint.
+
+        Two variants measured on the MoE train cells (EXPERIMENTS.md Perf):
+          * E over the EP/model axis (moe_ec_constraint="ep"): adds 4.3 GiB
+            of reshard copies on the 128-expert cell — refuted;
+          * C over the dp axes, E replicated on activations
+            (moe_ec_constraint="cap"): keeps the dispatch scatter aligned
+            with the token sharding so the [n*k, d] buffers stay sharded.
+        Weights remain E-sharded over the model axis in both cases.
+        """
+        mode = getattr(cfg, "moe_ec_constraint", None)
+        if not mode or not cfg.seq_shard:
+            return t
+        from jax.sharding import PartitionSpec as PS
+        if mode == "ep":
+            return jax.lax.with_sharding_constraint(
+                t, PS(cfg.tp_axis, cfg.dp_axes, None))
+        return jax.lax.with_sharding_constraint(
+            t, PS(None, cfg.dp_axes, None))
+
+    def tok_constraint(t):
+        if not getattr(cfg, "moe_ec_constraint", None) or not cfg.seq_shard:
+            return t
+        from jax.sharding import PartitionSpec as PS
+        return jax.lax.with_sharding_constraint(t, PS(cfg.dp_axes, None))
+
+    x_rep = tok_constraint(jnp.repeat(xt, k, axis=0))        # [n*k, d]
+    buf = jnp.zeros((E * C + 1, d), xt.dtype)                # +1 overflow row
+    buf = buf.at[flat_idx].add(x_rep)
+    expert_in = ec_constraint(buf[: E * C].reshape(E, C, d))
+
+    h = jnp.einsum("ecd,edf->ecf", expert_in, p["wg"])
+    h = jax.nn.silu(h) * jnp.einsum("ecd,edf->ecf", expert_in, p["wi"])
+    expert_out = ec_constraint(jnp.einsum("ecf,efd->ecd", h, p["wo"]))
+    expert_out = expert_out.reshape(E * C, d)
+    expert_out = jnp.concatenate([expert_out, jnp.zeros((1, d), xt.dtype)])
+
+    gathered = expert_out[flat_idx]                          # [n*k, d]
+    w = (gate_vals.reshape(-1) * keep).astype(xt.dtype)[:, None]
+    out = (gathered * w).reshape(n, k, d).sum(axis=1)
+
+    if cfg.moe_shared:
+        s = p["shared"]
+        out = out + (jax.nn.silu(xt @ s["wg"]) * (xt @ s["wi"])) @ s["wo"]
+    return out.reshape(B, T, d), aux

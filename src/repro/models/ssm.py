@@ -1,0 +1,159 @@
+"""Mamba2 (SSD — state-space duality) block: chunked training forward and
+O(1)-state decode step.
+
+Per head (scalar A, state size N, head dim P):
+    h_t = exp(dt_t * A) * h_{t-1} + dt_t * B_t x_t^T      (h: [N, P])
+    y_t = C_t^T h_t + D * x_t
+The chunked algorithm (arXiv:2405.21060) computes within-chunk interactions
+as masked matmuls (MXU-friendly; the Pallas ssd_chunk kernel implements the
+intra-chunk part) and carries chunk-final states with an associative pass —
+here a lax.scan over chunks, which XLA pipelines.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import ParamDef, Tree, rmsnorm
+
+
+def ssm_defs(cfg) -> Tree:
+    d, di = cfg.d_model, cfg.d_inner
+    N, H = cfg.ssm_state, cfg.ssm_heads
+    conv_ch = di + 2 * N  # conv over x, B, C streams (mamba2 layout)
+    return {
+        "in_proj": ParamDef((d, 2 * di + 2 * N + H), ("F", "T")),  # z,x,B,C,dt
+        "conv_w": ParamDef((cfg.ssm_conv, conv_ch), (None, "T"), scale=1.0),
+        "conv_b": ParamDef((conv_ch,), ("T",), "zeros"),
+        "A_log": ParamDef((H,), (None,), "ones"),
+        "D": ParamDef((H,), (None,), "ones"),
+        "dt_bias": ParamDef((H,), (None,), "zeros"),
+        "norm": ParamDef((di,), (None,), "ones"),
+        "out_proj": ParamDef((di, d), ("T", "F"), scale=cfg.out_scale),
+    }
+
+
+def _split_proj(cfg, proj):
+    di, N, H = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    z, xBC_dt = jnp.split(proj, [di], axis=-1)
+    xBC, dt = jnp.split(xBC_dt, [di + 2 * N], axis=-1)
+    return z, xBC, dt
+
+
+def _causal_conv(cfg, p, xBC, conv_state=None):
+    """Depthwise causal conv width W over [B, T, C]; optional carried state
+    [B, W-1, C] for decode.  Returns (out, new_state)."""
+    W = cfg.ssm_conv
+    if conv_state is None:
+        pad = jnp.zeros(xBC.shape[:1] + (W - 1,) + xBC.shape[2:], xBC.dtype)
+    else:
+        pad = conv_state
+    xp = jnp.concatenate([pad, xBC], axis=1)            # [B, T+W-1, C]
+    out = sum(xp[:, i:i + xBC.shape[1]] * p["conv_w"][i] for i in range(W))
+    out = jax.nn.silu(out + p["conv_b"])
+    new_state = xp[:, -(W - 1):] if W > 1 else pad
+    return out, new_state
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, chunk: int, h0=None, *, unroll: bool = False):
+    """Chunked SSD scan.
+
+    x: [B, T, H, P]; dt: [B, T, H] (>0); A: [H] (<0); Bm/Cm: [B, T, N].
+    Returns y [B, T, H, P] and final state [B, H, N, P].
+    """
+    Bb, T, H, Pd = x.shape
+    N = Bm.shape[-1]
+    assert T % chunk == 0, (T, chunk)
+    nc = T // chunk
+
+    xc = x.reshape(Bb, nc, chunk, H, Pd)
+    dtc = dt.reshape(Bb, nc, chunk, H)
+    Bc = Bm.reshape(Bb, nc, chunk, N)
+    Cc = Cm.reshape(Bb, nc, chunk, N)
+
+    # per-step log decay a_t = dt_t * A  (A negative)
+    la = dtc * A[None, None, None, :]                   # [B, nc, L, H]
+    cums = jnp.cumsum(la, axis=2)                       # inclusive cumsum
+
+    # intra-chunk: y_intra[t] = sum_{s<=t} C_t.B_s exp(cums_t - cums_s) dt_s x_s
+    CB = jnp.einsum("bcln,bcmn->bclm", Cc, Bc)          # [B, nc, L, L]
+    seg = cums[:, :, :, None, :] - cums[:, :, None, :, :]   # [B,nc,L,L,H]
+    mask = np.tril(np.ones((chunk, chunk), np.bool_))
+    decay = jnp.where(mask[None, None, :, :, None], jnp.exp(seg), 0.0)
+    # contraction order matters: fold the scalar factors into one
+    # [B,nc,L,L,H] weight and contract m in a single matmul-like einsum.
+    # The naive 4-operand einsum materialized [.,L,H,P,L] cubes (2 GiB each
+    # on the jamba train cell — see EXPERIMENTS.md Perf C2).
+    W = CB[..., None] * decay * dtc[:, :, None, :, :]   # [B, nc, L, L, H]
+    y_intra = jnp.einsum("bclmh,bcmhp->bclhp", W, xc)
+
+    # chunk-final states: S_c = sum_s exp(cums_L - cums_s) dt_s B_s x_s^T
+    decay_end = jnp.exp(cums[:, :, -1:, :] - cums)      # [B, nc, L, H]
+    dBx = jnp.einsum("bclh,bcln,bclhp->bchnp", dtc * decay_end, Bc, xc)
+
+    # inter-chunk recurrence over nc chunks
+    chunk_decay = jnp.exp(cums[:, :, -1, :])            # [B, nc, H]
+
+    def step(h, inp):
+        dbx, cd, cc, dec_in = inp
+        # y_inter[t] = C_t exp(cums_t) h_prev
+        y_int = jnp.einsum("bln,blh,bhnp->blhp", cc, dec_in, h)
+        h = cd[:, :, None, None] * h + dbx
+        return h, y_int
+
+    h0 = jnp.zeros((Bb, H, N, Pd), jnp.float32) if h0 is None else h0
+    dec_in_all = jnp.exp(cums)                          # [B, nc, L, H]
+    xs = (jnp.moveaxis(dBx, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(chunk_decay, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(Cc, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(dec_in_all, 1, 0).astype(jnp.float32))
+    hT, y_inter = jax.lax.scan(step, h0, xs, unroll=nc if unroll else 1)
+    y_inter = jnp.moveaxis(y_inter, 0, 1)               # [B, nc, L, H, P]
+
+    y = (y_intra + y_inter).reshape(Bb, T, H, Pd)
+    return y, hT
+
+
+def mamba_block(cfg, p: Tree, x, *, state=None):
+    """Full Mamba2 block over [B, T, d].  state=None for training.
+
+    Returns (out [B, T, d], new_state dict) — state carries (conv, ssm) for
+    decode continuation.
+    """
+    B, T, d = x.shape
+    di, N, H, Pd = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    proj = x @ p["in_proj"]                             # [B, T, 2di+2N+H]
+    z, xBC, dt = _split_proj(cfg, proj)
+    conv_state = None if state is None else state["conv"]
+    xBC, new_conv = _causal_conv(cfg, p, xBC, conv_state)
+    xs, Bm, Cm = jnp.split(xBC, [di, di + N], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # [B, T, H]
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))        # [H] negative
+    xh = xs.reshape(B, T, H, Pd).astype(jnp.float32)
+
+    chunk = min(cfg.ssm_chunk, T)
+    h0 = None if state is None else state["ssm"]
+    y, hT = ssd_chunked(xh, dt, A, Bm.astype(jnp.float32),
+                        Cm.astype(jnp.float32), chunk, h0=h0,
+                        unroll=cfg.unroll_inner)
+    y = y + p["D"][None, None, :, None] * xh
+    y = y.reshape(B, T, di).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm"])
+    out = y @ p["out_proj"]
+    return out, {"conv": new_conv, "ssm": hT}
+
+
+def init_ssm_state(cfg, batch: int):
+    di, N = cfg.d_inner, cfg.ssm_state
+    H, Pd = cfg.ssm_heads, cfg.ssm_head_dim
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, di + 2 * N), cfg.dtype),
+        "ssm": jnp.zeros((batch, H, N, Pd), jnp.float32),
+    }
+
+
+def mamba_decode_step(cfg, p: Tree, x, state):
+    """One-token decode [B, 1, d] with carried (conv, ssm) state."""
+    return mamba_block(cfg, p, x, state=state)

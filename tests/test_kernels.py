@@ -1,0 +1,88 @@
+"""Per-kernel allclose sweeps: Pallas (interpret mode on CPU) vs ref.py."""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(0)
+
+
+@pytest.mark.parametrize("M,N,G", [(128, 128, 128), (64, 96, 50),
+                                   (256, 128, 384), (32, 32, 1024)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_pairwise_corr(M, N, G, dtype):
+    xi = jnp.asarray(RNG.normal(size=(M, G)), dtype)
+    xj = jnp.asarray(RNG.normal(size=(N, G)), dtype)
+    out = ops.pairwise_corr(xi, xj)
+    want = ref.pairwise_corr(xi.astype(jnp.float32), xj.astype(jnp.float32))
+    tol = 1e-4 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("M,N,Z,bm", [(32, 32, 64, 16), (16, 48, 96, 16),
+                                      (64, 64, 128, 32)])
+def test_pcit_filter(M, N, Z, bm):
+    rows = RNG.normal(size=(Z, 24))
+    rows = rows / np.linalg.norm(rows, axis=1, keepdims=True)
+    R = rows @ rows.T
+    gx = jnp.arange(0, M, dtype=jnp.int32)
+    gy = jnp.arange(Z - N, Z, dtype=jnp.int32)
+    r_xy = jnp.asarray(R[:M, Z - N:], jnp.float32)
+    rows_x = jnp.asarray(R[:M], jnp.float32)
+    rows_y = jnp.asarray(R[Z - N:], jnp.float32)
+    out = ops.pcit_filter(r_xy, rows_x, rows_y, gx, gy, bm=bm, bn=bm, bz=32)
+    want = ref.pcit_filter(r_xy, rows_x, rows_y, gx, gy)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(want))
+
+
+@pytest.mark.parametrize("B,Tq,Tk,H,KV,hd,causal",
+                         [(2, 128, 128, 4, 2, 64, True),
+                          (1, 64, 256, 4, 4, 32, True),
+                          (2, 128, 128, 2, 1, 64, False),
+                          (1, 256, 256, 8, 2, 128, True)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention(B, Tq, Tk, H, KV, hd, causal, dtype):
+    q = jnp.asarray(RNG.normal(size=(B, Tq, H, hd)), dtype)
+    k = jnp.asarray(RNG.normal(size=(B, Tk, KV, hd)), dtype)
+    v = jnp.asarray(RNG.normal(size=(B, Tk, KV, hd)), dtype)
+    out = ops.flash_attention(q, k, v, causal=causal, bq=64, bk=64)
+    want = ref.flash_attention(q, k, v, causal=causal)
+    tol = 2e-3 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("B,T,H,P,N,chunk", [(2, 32, 3, 8, 16, 8),
+                                             (1, 64, 2, 16, 8, 16),
+                                             (2, 16, 4, 8, 32, 16)])
+def test_ssd_chunk_pallas(B, T, H, P, N, chunk):
+    x = jnp.asarray(RNG.normal(size=(B, T, H, P)), jnp.float32)
+    dt = jnp.asarray(RNG.uniform(0.01, 0.2, size=(B, T, H)), jnp.float32)
+    A = jnp.asarray(-RNG.uniform(0.5, 2, size=(H,)), jnp.float32)
+    Bm = jnp.asarray(RNG.normal(size=(B, T, N)), jnp.float32)
+    Cm = jnp.asarray(RNG.normal(size=(B, T, N)), jnp.float32)
+    got = ops.ssd_chunk(x, dt, A, Bm, Cm, chunk=chunk)
+    want = ref.ssd_chunk(x, dt, A, Bm, Cm)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_ssd_chunk_oracle_matches_model():
+    """ref.ssd_chunk (sequential) == models.ssm.ssd_chunked for all chunkings."""
+    from repro.models.ssm import ssd_chunked
+    B, T, H, P, N = 2, 32, 3, 8, 16
+    x = jnp.asarray(RNG.normal(size=(B, T, H, P)), jnp.float32)
+    dt = jnp.asarray(RNG.uniform(0.01, 0.2, size=(B, T, H)), jnp.float32)
+    A = jnp.asarray(-RNG.uniform(0.5, 2, size=(H,)), jnp.float32)
+    Bm = jnp.asarray(RNG.normal(size=(B, T, N)), jnp.float32)
+    Cm = jnp.asarray(RNG.normal(size=(B, T, N)), jnp.float32)
+    want = ref.ssd_chunk(x, dt, A, Bm, Cm)
+    for chunk in [1, 4, 8, 32]:
+        y, _ = ssd_chunked(x, dt, A, Bm, Cm, chunk)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(want),
+                                   rtol=1e-4, atol=1e-4)

@@ -1,0 +1,82 @@
+"""Unit + property tests for the paper's core math (sections 3-4)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.quorum import (cyclic_quorums, difference_set,
+                               is_difference_cover, ladder_difference_cover,
+                               quorum_size_lower_bound, singer_difference_set,
+                               verify_all_pairs_property)
+
+
+@pytest.mark.parametrize("P", [1, 2, 3, 4, 5, 6, 7, 8, 11, 13, 16, 21, 31, 32])
+def test_difference_set_is_cover(P):
+    A = difference_set(P)
+    assert is_difference_cover(A, P)
+    assert all(0 <= a < P for a in A)
+    assert len(set(A)) == len(A)
+
+
+@pytest.mark.parametrize("P", [4, 7, 8, 13, 16, 21, 31])
+def test_small_p_optimal(P):
+    """Exact search matches the theoretical k(k-1)+1 >= P lower bound for
+    the P values where an optimal set exists (paper cites Luk & Wong)."""
+    A = difference_set(P)
+    assert len(A) == quorum_size_lower_bound(P)
+
+
+@pytest.mark.parametrize("q", [2, 3, 5, 7, 11])
+def test_singer_sets(q):
+    P = q * q + q + 1
+    A = singer_difference_set(q)
+    assert A is not None
+    assert len(A) == q + 1 == quorum_size_lower_bound(P)
+    assert is_difference_cover(A, P)
+
+
+@given(st.integers(min_value=1, max_value=400))
+@settings(max_examples=60, deadline=None)
+def test_ladder_cover_property(P):
+    A = ladder_difference_cover(P)
+    assert is_difference_cover(A, P)
+    assert len(A) <= 2 * int(np.ceil(np.sqrt(P))) + 2
+
+
+@given(st.integers(min_value=1, max_value=160))
+@settings(max_examples=40, deadline=None)
+def test_all_pairs_property(P):
+    """Paper Theorem 1: cyclic quorums from a relaxed difference set satisfy
+    the all-pairs property (every unordered pair co-resident somewhere)."""
+    Q = cyclic_quorums(P)
+    assert verify_all_pairs_property(Q, P)
+
+
+@given(st.integers(min_value=1, max_value=160))
+@settings(max_examples=40, deadline=None)
+def test_quorum_properties(P):
+    """Paper Eq. 10-13: equal size, equal responsibility, intersection."""
+    Q = cyclic_quorums(P)
+    k = len(Q[0])
+    assert all(len(S) == k for S in Q)               # equal work (Eq. 12)
+    counts = np.zeros(P, int)
+    for S in Q:
+        for b in S:
+            counts[b] += 1
+    assert (counts == k).all()                       # equal responsibility (Eq. 13)
+    sets = [set(S) for S in Q]
+    if P <= 64:  # O(P^2) check
+        for i in range(P):
+            for j in range(P):
+                assert sets[i] & sets[j]             # intersection (Eq. 10)
+
+
+@given(st.integers(min_value=1, max_value=300))
+@settings(max_examples=50, deadline=None)
+def test_memory_scaling(P):
+    """The headline claim: one array of k*N/P = O(N/sqrt(P)) elements."""
+    A = difference_set(P)
+    # k within a constant factor of sqrt(P) (2.1x covers the ladder fallback
+    # plus small-P constants)
+    assert len(A) <= max(3, 2.1 * np.sqrt(P) + 2)

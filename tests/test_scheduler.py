@@ -1,0 +1,77 @@
+"""Schedule coverage, balance, and fault-tolerance reassignment tests."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.scheduler import (build_causal_schedule, build_schedule,
+                                  reassign)
+
+
+@given(st.integers(min_value=1, max_value=96))
+@settings(max_examples=40, deadline=None)
+def test_full_schedule_exact_coverage(P):
+    """Every unordered pair computed exactly once (d = P/2 orbit twice,
+    deduplicated by the engine mask)."""
+    s = build_schedule(P)
+    count = np.zeros((P, P), int)
+    for i in range(P):
+        for (x, y) in s.global_pairs_of(i):
+            a, b = min(x, y), max(x, y)
+            count[a, b] += 1
+    for a in range(P):
+        for b in range(a, P):
+            d = (b - a) % P
+            dd = min(d, P - d)
+            expected = 2 if (P % 2 == 0 and P > 1 and dd == P // 2) else 1
+            assert count[a, b] == expected, (P, a, b)
+
+
+@given(st.integers(min_value=1, max_value=96))
+@settings(max_examples=40, deadline=None)
+def test_perfect_static_balance(P):
+    """Every device owns exactly one pair per difference — identical op
+    sequence lengths (straggler-free by construction)."""
+    s = build_schedule(P)
+    assert s.n_pairs == P // 2 + 1
+    # all devices share the same slot-index pair list by construction
+    for i in range(P):
+        assert len(s.global_pairs_of(i)) == s.n_pairs
+
+
+@given(st.integers(min_value=1, max_value=64))
+@settings(max_examples=30, deadline=None)
+def test_causal_schedule_coverage(P):
+    cs = build_causal_schedule(P)
+    cover = np.zeros((P, P), int)
+    for i in range(P):
+        for sidx in range(cs.n_pairs):
+            if cs.valid[i, sidx]:
+                kv = (i + int(cs.shifts[cs.pair_slots[sidx, 0]])) % P
+                q = (i + int(cs.shifts[cs.pair_slots[sidx, 1]])) % P
+                cover[q, kv] += 1
+    want = np.tril(np.ones((P, P), int))
+    np.testing.assert_array_equal(cover, want)
+
+
+@pytest.mark.parametrize("P,failed", [(8, [2]), (16, [3]), (16, [3, 7]),
+                                      (16, [0, 5, 10]), (32, [31])])
+def test_reassign_recovers_all_pairs(P, failed):
+    s = build_schedule(P)
+    plan = reassign(s, failed)
+    assert plan.n_recovered == len(failed) * s.n_pairs
+    # recovered work lands only on live devices
+    for i in list(plan.extra_pairs) + list(plan.fetch_pairs):
+        assert i not in failed
+
+
+def test_reassign_block_loss_detected():
+    """If all k holders of a block fail, reassignment must refuse (data loss
+    -> checkpoint restore is the correct response)."""
+    P = 8
+    s = build_schedule(P)
+    from repro.core.quorum import cyclic_quorums
+    holders = [i for i, S in enumerate(cyclic_quorums(P)) if 0 in S]
+    with pytest.raises(RuntimeError, match="lost"):
+        reassign(s, holders)
