@@ -4,7 +4,9 @@ Prints ``name,us_per_call,derived`` CSV rows:
   bench_quorum         — quorum size table (paper section 3.2)
   bench_memory         — Fig. 2 right: memory/process vs P
   bench_pcit_speedup   — Fig. 2 left: PCIT runtime + speedup vs P
-  bench_engine         — n-body quorum vs atom-decomposition wall time
+  bench_engine         — n-body per-engine-mode quorum vs atom wall time
+                         (also writes BENCH_engine.json at the repo root;
+                         ``--fast-engine`` runs only this one, for CI)
   bench_attention_comm — comm-volume model: quorum vs ring vs all-gather
 
 Roofline extraction from the dry-run lives in benchmarks/roofline.py (it
@@ -23,8 +25,9 @@ def main() -> None:
     rows = [("name", "us_per_call", "derived")]
     modules = [bench_quorum, bench_memory, bench_attention_comm,
                bench_attention_hlo, bench_engine, bench_pcit_speedup]
-    fast = "--fast" in sys.argv
-    if fast:
+    if "--fast-engine" in sys.argv:
+        modules = [bench_engine]
+    elif "--fast" in sys.argv:
         modules = modules[:3]
     for mod in modules:
         try:

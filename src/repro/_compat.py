@@ -1,0 +1,70 @@
+"""JAX version-compat shims.
+
+The codebase targets the current jax API (``jax.shard_map``,
+``jax.sharding.AxisType``, ``jax.lax.pcast``, ``jax.make_mesh(axis_types=...)``).
+On older runtimes (jax 0.4.x) those names are missing; :func:`install` maps
+each one onto its available equivalent so every module, test subprocess, and
+benchmark child runs unmodified on both.  Idempotent; invoked from
+``repro/__init__.py`` so any ``import repro.*`` installs it first.
+
+Shim semantics (all no-ops on new-enough jax):
+  * ``jax.shard_map``           -> ``jax.experimental.shard_map.shard_map``
+    with ``check_rep=False`` (the old replication checker predates the
+    collective patterns the engine uses; the new checker is unaffected).
+  * ``jax.sharding.AxisType``   -> a placeholder enum; pre-explicit-sharding
+    jax treats every mesh axis as Auto, which is exactly what callers request.
+  * ``jax.make_mesh``           -> wrapper dropping the unsupported
+    ``axis_types`` kwarg (see above: Auto is the old default behavior).
+  * ``jax.tree.flatten_with_path`` -> ``jax.tree_util.tree_flatten_with_path``.
+  * ``jax.lax.pcast``           -> identity; varying-manual-axes tracking does
+    not exist before jax 0.7, so there is nothing to cast.
+"""
+
+from __future__ import annotations
+
+import enum
+import functools
+import inspect
+
+import jax
+import jax.lax
+
+
+def install() -> None:
+    if not hasattr(jax, "shard_map"):
+        from jax.experimental.shard_map import shard_map as _shard_map
+
+        def shard_map(f, *, mesh, in_specs, out_specs, **kw):
+            kw.setdefault("check_rep", False)
+            return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                              out_specs=out_specs, **kw)
+
+        jax.shard_map = shard_map
+
+    if not hasattr(jax.sharding, "AxisType"):
+        class AxisType(enum.Enum):
+            Auto = "auto"
+            Explicit = "explicit"
+            Manual = "manual"
+
+        jax.sharding.AxisType = AxisType
+
+    if "axis_types" not in inspect.signature(jax.make_mesh).parameters:
+        _make_mesh = jax.make_mesh
+
+        @functools.wraps(_make_mesh)
+        def make_mesh(axis_shapes, axis_names, *, devices=None, axis_types=None):
+            del axis_types  # pre-explicit-sharding jax: every axis is Auto
+            return _make_mesh(axis_shapes, axis_names, devices=devices)
+
+        jax.make_mesh = make_mesh
+
+    if not hasattr(jax.tree, "flatten_with_path"):
+        jax.tree.flatten_with_path = jax.tree_util.tree_flatten_with_path
+
+    if not hasattr(jax.lax, "pcast"):
+        def pcast(x, axis_name=None, *, to=None):
+            del axis_name, to
+            return x
+
+        jax.lax.pcast = pcast

@@ -7,6 +7,8 @@
 
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -42,30 +44,63 @@ def forces_reference(bodies: np.ndarray) -> np.ndarray:
     return (w[..., None] * d).sum(axis=1)
 
 
-def distributed_forces(bodies, mesh, *, axis_name: str = "q",
-                       strategy: str = "quorum"):
-    """bodies: [N, 4] sharded over axis_name.  Returns forces [N, 3]."""
+@functools.lru_cache(maxsize=64)
+def forces_fn(mesh, axis_name: str = "q", strategy: str = "quorum",
+              mode: str = "auto", use_kernel: bool = False):
+    """Build (and cache) the jitted distributed-forces callable.
+
+    Cached per (mesh, axis_name, strategy, mode, use_kernel) so repeated
+    calls — simulation steps, benchmark reps — reuse one traced/compiled
+    executable instead of re-jitting a fresh closure every call.
+    Returns ``f(bodies [N, 4]) -> forces [N, 3]``.
+    """
     from jax.sharding import PartitionSpec as PS
     P = mesh.shape[axis_name]
     if strategy == "quorum":
         sched = build_schedule(P)
-        masks = pair_mask_table(sched)
+        masks = jnp.asarray(pair_mask_table(sched))
+        batch_fn = None
+        if use_kernel:
+            if mode not in ("batched", "auto"):
+                raise ValueError(
+                    f"use_kernel needs the batched mode (got mode={mode!r}); "
+                    "the fused kernel only replaces the batched inner step")
+            from ..kernels import ops as kops
+            batch_fn = functools.partial(kops.pairwise_batch_forces,
+                                         softening=SOFTENING)
 
         def body(xb, mb):
             return quorum_allpairs(pair_forces, xb, axis_name=axis_name,
-                                   schedule=sched, mask=mb)
+                                   schedule=sched, mask=mb, mode=mode,
+                                   batch_fn=batch_fn)
 
-        return jax.jit(jax.shard_map(
+        fn = jax.jit(jax.shard_map(
             body, mesh=mesh, in_specs=(PS(axis_name), PS(axis_name)),
-            out_specs=PS(axis_name)))(bodies, masks)
+            out_specs=PS(axis_name)))
+        return lambda bodies: fn(bodies, masks)
     if strategy == "atom":
+        if use_kernel:
+            raise ValueError("use_kernel applies only to strategy='quorum'")
+
         def body(xb):
             return allgather_allpairs(pair_forces, xb, axis_name=axis_name,
                                       axis_size=P)
         return jax.jit(jax.shard_map(
             body, mesh=mesh, in_specs=PS(axis_name),
-            out_specs=PS(axis_name)))(bodies)
+            out_specs=PS(axis_name)))
     raise ValueError(strategy)
+
+
+def distributed_forces(bodies, mesh, *, axis_name: str = "q",
+                       strategy: str = "quorum", mode: str = "auto",
+                       use_kernel: bool = False):
+    """bodies: [N, 4] sharded over axis_name.  Returns forces [N, 3].
+
+    ``mode`` selects the engine execution mode (batched / overlap / scan /
+    auto — see core.allpairs and DESIGN.md section 4).  ``use_kernel`` routes
+    the batched mode through the fused Pallas pairwise_batch kernel.
+    """
+    return forces_fn(mesh, axis_name, strategy, mode, use_kernel)(bodies)
 
 
 def leapfrog_step(bodies, vel, dt, forces):

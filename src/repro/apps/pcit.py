@@ -28,7 +28,9 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
-from ..core.allpairs import pair_mask_table, quorum_gather, quorum_scatter
+from ..core.allpairs import (env_mode_override, mark_varying,
+                             pair_mask_table, pair_ready_order,
+                             quorum_gather, quorum_scatter)
 from ..core.scheduler import PairSchedule, build_schedule
 
 EPS = 1e-12
@@ -133,11 +135,105 @@ def pcit_tile(r_xy: jax.Array, rows_x: jax.Array, rows_y: jax.Array,
 # Distributed quorum PCIT (runs inside shard_map over axis `axis_name`)
 # ---------------------------------------------------------------------------
 
+def _tile_strips(make_tile, source: jax.Array, *, schedule: PairSchedule,
+                 axis_name: str, mask: jax.Array, mode: str, out_dtype):
+    """Gather ``source`` [block, F] over the quorum and assemble the masked
+    per-slot [block, N] tile strips (DESIGN.md 3.2 strip assembly), with the
+    engine's execution modes:
+
+      * ``scan``    — serial lax.scan with a stacked [k, block, N] carry and
+        dynamic slot indexing (low-memory oracle),
+      * ``batched`` — unrolled static loop over the pre-gathered stack; slot
+        ids become static so every tile is an independent op for XLA,
+      * ``overlap`` — tiles computed as their later block lands in the
+        gather, hiding the ppermutes behind tile compute.
+
+    ``make_tile(lo_blk, hi_blk, glo, ghi) -> [block, block]``.  Tile layout:
+    the (lo, hi) pair's tile lands at strip[lo][:, ghi*block:...] and its
+    transpose accumulates at strip[hi][:, glo*block:...] (self pairs write
+    once — the transpose write would double the diagonal tile).
+    Returns [k, block, N] (scan) or a per-slot list (unrolled modes); both
+    are accepted by quorum_scatter.
+    """
+    P, k, n_pairs = schedule.P, schedule.k, schedule.n_pairs
+    block = source.shape[0]
+    N = P * block
+    i = lax.axis_index(axis_name)
+    lo_np = schedule.pair_slots[:, 0]
+    hi_np = schedule.pair_slots[:, 1]
+
+    if mode == "scan":
+        xq = quorum_gather(source, schedule, axis_name)
+        shifts = jnp.asarray(schedule.shifts, jnp.int32)
+        strips = mark_varying(jnp.zeros((k, block, N), out_dtype), axis_name)
+
+        def body(strips, inp):
+            lo, hi, w = inp
+            glo = (i + jnp.take(shifts, lo)) % P
+            ghi = (i + jnp.take(shifts, hi)) % P
+            tile = (make_tile(jnp.take(xq, lo, axis=0),
+                              jnp.take(xq, hi, axis=0), glo, ghi)
+                    * w).astype(out_dtype)
+            strips = lax.dynamic_update_slice(strips, tile[None],
+                                              (lo, 0, ghi * block))
+            tile_t = jnp.where(lo == hi, jnp.zeros_like(tile), tile.T)
+            cur = lax.dynamic_slice(strips, (hi, 0, glo * block),
+                                    (1, block, block))
+            strips = lax.dynamic_update_slice(strips, cur + tile_t[None],
+                                              (hi, 0, glo * block))
+            return strips, None
+
+        strips, _ = lax.scan(body, strips,
+                             (jnp.asarray(lo_np), jnp.asarray(hi_np), mask))
+        return strips
+
+    # unrolled modes: per-slot strip list, static slot ids
+    strip: list = [None] * k
+
+    def get(slot):
+        if strip[slot] is None:
+            strip[slot] = mark_varying(jnp.zeros((block, N), out_dtype), axis_name)
+        return strip[slot]
+
+    def compute(idx, blocks):
+        lo, hi = int(lo_np[idx]), int(hi_np[idx])
+        glo = (i + int(schedule.shifts[lo])) % P
+        ghi = (i + int(schedule.shifts[hi])) % P
+        tile = (make_tile(blocks[lo], blocks[hi], glo, ghi)
+                * mask[idx]).astype(out_dtype)
+        strip[lo] = lax.dynamic_update_slice(get(lo), tile, (0, ghi * block))
+        if lo != hi:  # self pair: the transpose write would double the tile
+            cur = lax.dynamic_slice(get(hi), (0, glo * block), (block, block))
+            strip[hi] = lax.dynamic_update_slice(get(hi), cur + tile.T,
+                                                 (0, glo * block))
+
+    if mode == "overlap":
+        ready = pair_ready_order(schedule)
+        landed: list = []
+
+        def on_land(slot, blk):
+            landed.append(blk)
+            for idx in ready[slot]:
+                compute(idx, landed)
+
+        quorum_gather(source, schedule, axis_name, overlap_fn=on_land)
+    else:  # batched
+        xq = quorum_gather(source, schedule, axis_name)
+        blocks = [xq[s] for s in range(k)]
+        for idx in range(n_pairs):
+            compute(idx, blocks)
+    return [get(s) for s in range(k)]
+
+
 def quorum_pcit_local(xs_block: jax.Array, mask: jax.Array, *,
                       schedule: PairSchedule, axis_name: str,
-                      use_kernels: bool = False) -> Tuple[jax.Array, jax.Array]:
+                      use_kernels: bool = False,
+                      mode: str = "auto") -> Tuple[jax.Array, jax.Array]:
     """Per-device body.  xs_block: [block, G] standardized rows (this
     device's dataset block); mask: [n_pairs] dedup mask (pair_mask_table row).
+    ``mode``: engine execution mode for both tile phases (see _tile_strips);
+    ``auto`` unrolls (batched) while the static pair count is small and falls
+    back to the serial scan beyond that.
 
     Returns (corr_rows [block, N], keep_rows [block, N]) for the local block.
     """
@@ -148,76 +244,47 @@ def quorum_pcit_local(xs_block: jax.Array, mask: jax.Array, *,
     else:
         _corr, _pcit = corr_tile, pcit_tile
 
+    if mode == "auto":
+        # env override first (same A/B hook as the engine), then: unroll
+        # while the static pair count is small, serial scan beyond that
+        mode = env_mode_override() or (
+            "batched" if schedule.n_pairs <= 32 else "scan")
+    if mode not in ("scan", "batched", "overlap"):
+        raise ValueError(f"unknown mode {mode!r}")
+
     P = schedule.P
     block = xs_block.shape[0]
-    N = P * block
     mask = mask.reshape(-1)
-    i = lax.axis_index(axis_name)
-
-    xq = quorum_gather(xs_block, schedule, axis_name)      # [k, block, G]
-    k = schedule.k
-    shifts = jnp.asarray(schedule.shifts, jnp.int32)
-
-    # ---- phase 2+3: correlation tiles -> row strips ----------------------
-    strips = jnp.zeros((k, block, N), xs_block.dtype)
-    strips = lax.pcast(strips, axis_name, to="varying")
-
-    def corr_body(strips, inp):
-        lo, hi, w = inp
-        tile = _corr(jnp.take(xq, lo, axis=0), jnp.take(xq, hi, axis=0)) * w
-        glo = (i + jnp.take(shifts, lo)) % P
-        ghi = (i + jnp.take(shifts, hi)) % P
-        # write tile at strip[lo][:, ghi*block] and its transpose at
-        # strip[hi][:, glo*block]  (self pairs: same slot, same offset — the
-        # second write would double the diagonal tile, so zero it)
-        strips = lax.dynamic_update_slice(
-            strips, tile[None],
-            (lo, 0, ghi * block))
-        tile_t = jnp.where(lo == hi, jnp.zeros_like(tile), tile.T)
-        cur = lax.dynamic_slice(strips, (hi, 0, glo * block), (1, block, block))
-        strips = lax.dynamic_update_slice(strips, cur + tile_t[None],
-                                          (hi, 0, glo * block))
-        return strips, None
-
-    lo_s = jnp.asarray(schedule.pair_slots[:, 0])
-    hi_s = jnp.asarray(schedule.pair_slots[:, 1])
-    strips, _ = lax.scan(corr_body, strips, (lo_s, hi_s, mask))
-    corr_rows = quorum_scatter(strips, schedule, axis_name)   # [block, N]
-
-    # every device pulls the rows of its k quorum blocks
-    rows_q = quorum_gather(corr_rows, schedule, axis_name)    # [k, block, N]
-
-    # ---- phase 4: PCIT filter tiles -> keep strips -----------------------
-    keep_strips = jnp.zeros((k, block, N), jnp.float32)
-    keep_strips = lax.pcast(keep_strips, axis_name, to="varying")
     base_ids = jnp.arange(block)
 
-    def pcit_body(ks, inp):
-        lo, hi, w = inp
-        glo = (i + jnp.take(shifts, lo)) % P
-        ghi = (i + jnp.take(shifts, hi)) % P
-        rows_x = jnp.take(rows_q, lo, axis=0)                 # [block, N]
-        rows_y = jnp.take(rows_q, hi, axis=0)
+    # ---- phase 2+3: correlation tiles -> row strips ----------------------
+    strips = _tile_strips(lambda bx, by, glo, ghi: _corr(bx, by),
+                          xs_block, schedule=schedule, axis_name=axis_name,
+                          mask=mask, mode=mode, out_dtype=xs_block.dtype)
+    corr_rows = quorum_scatter(strips, schedule, axis_name)   # [block, N]
+
+    # ---- phase 4: PCIT filter tiles -> keep strips -----------------------
+    # (the _tile_strips gather hands every device the corr rows of its k
+    # quorum blocks — the N^2/sqrt(P) phase footprint vs N^2 single-node)
+    def pcit_make(rows_x, rows_y, glo, ghi):
         r_xy = lax.dynamic_slice(rows_x, (0, ghi * block), (block, block))
         gx = glo * block + base_ids
         gy = ghi * block + base_ids
-        keep = _pcit(r_xy, rows_x, rows_y, gx, gy).astype(jnp.float32) * w
-        ks = lax.dynamic_update_slice(ks, keep[None], (lo, 0, ghi * block))
-        keep_t = jnp.where(lo == hi, jnp.zeros_like(keep), keep.T)
-        cur = lax.dynamic_slice(ks, (hi, 0, glo * block), (1, block, block))
-        ks = lax.dynamic_update_slice(ks, cur + keep_t[None], (hi, 0, glo * block))
-        return ks, None
+        return _pcit(r_xy, rows_x, rows_y, gx, gy).astype(jnp.float32)
 
-    keep_strips, _ = lax.scan(pcit_body, keep_strips, (lo_s, hi_s, mask))
+    keep_strips = _tile_strips(pcit_make, corr_rows, schedule=schedule,
+                               axis_name=axis_name, mask=mask, mode=mode,
+                               out_dtype=jnp.float32)
     keep_rows = quorum_scatter(keep_strips, schedule, axis_name) > 0.5
     return corr_rows, keep_rows
 
 
 def run_quorum_pcit(X: np.ndarray, mesh, axis_name: str = "q",
-                    use_kernels: bool = False):
+                    use_kernels: bool = False, mode: str = "auto"):
     """Driver: standardize on host, shard rows, run the quorum pipeline.
 
     X: [N, G] expression matrix; N must divide by the mesh axis size.
+    ``mode``: engine execution mode for the tile phases (see _tile_strips).
     Returns (corr [N, N], keep [N, N]) gathered to host.
     """
     from jax.sharding import PartitionSpec as PS
@@ -230,7 +297,7 @@ def run_quorum_pcit(X: np.ndarray, mesh, axis_name: str = "q",
 
     def body(xb, mb):
         return quorum_pcit_local(xb, mb, schedule=sched, axis_name=axis_name,
-                                 use_kernels=use_kernels)
+                                 use_kernels=use_kernels, mode=mode)
 
     fn = jax.jit(jax.shard_map(body, mesh=mesh,
                                in_specs=(PS(axis_name), PS(axis_name)),

@@ -6,8 +6,17 @@ TPU-native realization of the paper's distribution scheme (DESIGN.md section 2):
      ``lax.ppermute`` cyclic shifts (quorums are cyclic, so the pattern is
      shift-invariant and identical on every device).  Memory: k*N/P =
      O(N/sqrt(P)) — the paper's headline number.
-  2. pair compute       — ``lax.scan`` over the static per-difference pair
-     list (same length on every device; SPMD uniform).
+  2. pair compute       — one of three execution modes (DESIGN.md section 4):
+       * ``batched`` — one vmapped ``pair_fn`` call over all n_pairs
+         interactions + a ``segment_sum`` over slot ids, so the MXU sees a
+         single big batch instead of n_pairs tiny launches,
+       * ``overlap`` — double-buffered: each pair is computed as soon as its
+         later-arriving block lands, so XLA's latency-hiding scheduler can
+         run the remaining ppermutes concurrently with compute (and start the
+         inverse scatter shifts for slots whose pairs are already done),
+       * ``scan``    — the serial per-pair ``lax.scan`` (low-memory fallback
+         and correctness oracle),
+     selected by a size heuristic when ``mode="auto"``.
   3. ``quorum_scatter`` — per-block partial results routed back to block
      owners with the inverse shifts and reduced (sum or a user monoid).
 
@@ -18,6 +27,8 @@ scheme the paper improves on) used by tests and the memory benchmark.
 from __future__ import annotations
 
 import functools
+import math
+import os
 from typing import Any, Callable, Sequence
 
 import jax
@@ -33,7 +44,18 @@ __all__ = [
     "quorum_allpairs",
     "allgather_allpairs",
     "pair_mask_table",
+    "mark_varying",
+    "env_mode_override",
+    "pair_ready_order",
+    "ENGINE_MODES",
 ]
+
+ENGINE_MODES = ("batched", "overlap", "scan")
+
+# auto-mode switches away from `batched` when its [2*n_pairs, block, ...]
+# working set would exceed this budget (bytes; overridable for small-VMEM or
+# huge-HBM parts)
+_AUTO_BATCH_BYTES = int(os.environ.get("REPRO_BATCH_BYTES_LIMIT", 1 << 28))
 
 
 def _shift_perm(P: int, shift: int) -> list[tuple[int, int]]:
@@ -74,13 +96,17 @@ def quorum_gather(x: jax.Array, schedule: PairSchedule, axis_name: str,
     return jnp.stack(blocks, axis=0)
 
 
-def quorum_scatter(partials: jax.Array, schedule: PairSchedule, axis_name: str,
+def quorum_scatter(partials, schedule: PairSchedule, axis_name: str,
                    *, reduce_fn: Callable[[jax.Array, jax.Array], jax.Array] = jnp.add):
     """Route per-slot partial results back to block owners and reduce.
 
-    partials: [k, block, ...]; slot s is a partial result for global block
-    (i + shifts[s]) % P.  Sends slot s with the inverse shift so the owner
-    receives it, then folds with ``reduce_fn`` (default sum).
+    partials: [k, block, ...] stacked, or a length-k sequence of [block, ...]
+    arrays; slot s is a partial result for global block (i + shifts[s]) % P.
+    Sends slot s with the inverse shift so the owner receives it, then folds
+    with ``reduce_fn`` (default sum).  The per-slot sequence form is what the
+    overlap engine mode produces: each slot's inverse shift depends only on
+    that slot's pair results, so the scheduler can start early slots' sends
+    while later pairs are still computing (the pipelined scatter).
     Returns the reduced [block, ...] result for the local block.
     """
     P = schedule.P
@@ -118,6 +144,171 @@ def pair_mask_table(schedule: PairSchedule) -> np.ndarray:
     return mask
 
 
+def mark_varying(x: jax.Array, axis_name: str) -> jax.Array:
+    """Mark x as varying over the quorum axis (jax >= 0.7 VMA tracking)."""
+    try:
+        return lax.pcast(x, axis_name, to="varying")
+    except (AttributeError, TypeError):  # pragma: no cover - older jax
+        return x
+
+
+def env_mode_override() -> str | None:
+    """The validated ``REPRO_ALLPAIRS_MODE`` forced mode, or None if unset.
+
+    The benchmark / CI A/B hook, consulted by every ``mode="auto"``
+    selection (engine and PCIT tile phases).  Read at trace time — set it
+    before the first jitted call; already-compiled auto-mode programs keep
+    their baked-in choice.  Unknown values raise rather than silently
+    falling through to the heuristic.
+    """
+    env = os.environ.get("REPRO_ALLPAIRS_MODE", "").strip().lower()
+    if not env:
+        return None
+    if env not in ENGINE_MODES:
+        raise ValueError(
+            f"REPRO_ALLPAIRS_MODE must be one of {ENGINE_MODES}, got {env!r}")
+    return env
+
+
+def pair_ready_order(schedule: PairSchedule) -> list[list[int]]:
+    """Pair indices grouped by *ready slot* for the overlap modes.
+
+    A pair (lo, hi) can compute once its later block lands in the gather
+    shift sequence, i.e. at slot max(lo, hi); ready[s] lists the pairs that
+    become computable when slot s arrives.
+    """
+    lo_np = schedule.pair_slots[:, 0]
+    hi_np = schedule.pair_slots[:, 1]
+    ready: list[list[int]] = [[] for _ in range(schedule.k)]
+    for idx in range(schedule.n_pairs):
+        ready[max(int(lo_np[idx]), int(hi_np[idx]))].append(idx)
+    return ready
+
+
+def _wmul(out: jax.Array, w: jax.Array) -> jax.Array:
+    """Weight a pair output by a scalar or per-pair [n_pairs] mask weight."""
+    if w.ndim == 0:
+        return out * w.astype(out.dtype)
+    return out * w.astype(out.dtype).reshape((-1,) + (1,) * (out.ndim - 1))
+
+
+def _select_mode(schedule: PairSchedule, x: jax.Array,
+                 probe: jax.ShapeDtypeStruct, batch_fn) -> str:
+    """The ``mode="auto"`` heuristic (DESIGN.md section 4).
+
+    Environment override first (:func:`env_mode_override`; conflicts with a
+    fused ``batch_fn`` — which only exists for the batched step — raise
+    instead of silently dropping the kernel), then: a fused batch kernel
+    always means ``batched``; otherwise ``batched`` while its
+    [2*n_pairs, block, ...] operand+output working set fits the byte
+    budget, ``overlap`` when there are enough shifts to hide (k >= 3),
+    ``scan`` as the low-memory last resort.
+    """
+    env = env_mode_override()
+    if env is not None:
+        if batch_fn is not None and env != "batched":
+            raise ValueError(
+                f"REPRO_ALLPAIRS_MODE={env} conflicts with a fused batch_fn "
+                "(the kernel only replaces the batched inner step)")
+        return env
+    if batch_fn is not None:
+        return "batched"
+    out_bytes = math.prod(probe.shape) * jnp.dtype(probe.dtype).itemsize
+    in_bytes = x.size * jnp.dtype(x.dtype).itemsize
+    if 2 * schedule.n_pairs * (in_bytes + out_bytes) <= _AUTO_BATCH_BYTES:
+        return "batched"
+    if schedule.k >= 3:
+        return "overlap"
+    return "scan"
+
+
+def _scan_accumulate(pair_fn, quorum, schedule: PairSchedule, mask, probe,
+                     axis_name: str) -> jax.Array:
+    """Serial per-pair scan with scatter-adds into the [k, block, ...] carry."""
+    k = schedule.k
+    lo_slots = jnp.asarray(schedule.pair_slots[:, 0])
+    hi_slots = jnp.asarray(schedule.pair_slots[:, 1])
+    is_self = jnp.asarray(schedule.pair_diff == 0)
+
+    def body(acc, inputs):
+        lo, hi, selfp, w = inputs
+        bi = jnp.take(quorum, lo, axis=0)
+        bj = jnp.take(quorum, hi, axis=0)
+        out_i, out_j = pair_fn(bi, bj)
+        out_j = jnp.where(selfp, jnp.zeros_like(out_j), out_j)  # self-pair: count once
+        acc = acc.at[lo].add(_wmul(out_i, w))
+        acc = acc.at[hi].add(_wmul(out_j, w))
+        return acc, None
+
+    acc0 = mark_varying(jnp.zeros((k,) + probe.shape, probe.dtype), axis_name)
+    acc, _ = lax.scan(body, acc0, (lo_slots, hi_slots, is_self, mask))
+    return acc
+
+
+def _batched_accumulate(pair_fn, quorum, schedule: PairSchedule, mask, probe,
+                        batch_fn) -> jax.Array:
+    """All n_pairs interactions in one vmapped call + segment_sum over slots.
+
+    With ``batch_fn`` the whole step (slot gather + pair interaction +
+    segment reduction) runs as one fused kernel (e.g.
+    kernels.ops.pairwise_batch_forces).
+    """
+    k = schedule.k
+    lo_slots = jnp.asarray(schedule.pair_slots[:, 0])
+    hi_slots = jnp.asarray(schedule.pair_slots[:, 1])
+    is_self = jnp.asarray(schedule.pair_diff == 0)
+    wi = mask
+    wj = jnp.where(is_self, jnp.zeros_like(mask), mask)  # self-pair: count once
+    if batch_fn is not None:
+        return batch_fn(quorum, lo_slots, hi_slots, wi, wj)
+    lhs = jnp.take(quorum, lo_slots, axis=0)          # [n_pairs, block, ...]
+    rhs = jnp.take(quorum, hi_slots, axis=0)
+    out_i, out_j = jax.vmap(pair_fn)(lhs, rhs)        # [n_pairs, block, ...]
+    data = jnp.concatenate([_wmul(out_i, wi), _wmul(out_j, wj)], axis=0)
+    ids = jnp.concatenate([lo_slots, hi_slots])
+    acc = jax.ops.segment_sum(data, ids, num_segments=k)
+    return acc.astype(probe.dtype)
+
+
+def _overlap_accumulate(pair_fn, x, schedule: PairSchedule, mask, probe,
+                        axis_name: str) -> list[jax.Array]:
+    """Double-buffered gather/compute: each pair runs at its ready slot.
+
+    A pair (lo, hi) is ready once its later block lands, i.e. at slot
+    max(lo, hi) of the gather shift sequence — so the compute for slot s's
+    pairs is independent of ppermutes s+1..k-1 and XLA's latency-hiding
+    scheduler overlaps them.  Returns per-slot partials (list of length k)
+    so quorum_scatter can likewise start early slots' inverse shifts before
+    late pairs finish.
+    """
+    k = schedule.k
+    lo_np = schedule.pair_slots[:, 0]
+    hi_np = schedule.pair_slots[:, 1]
+    ready = pair_ready_order(schedule)
+
+    landed: list[jax.Array] = []
+    contribs: list[list[jax.Array]] = [[] for _ in range(k)]
+
+    def on_land(slot: int, blk: jax.Array) -> None:
+        landed.append(blk)
+        for idx in ready[slot]:
+            lo, hi = int(lo_np[idx]), int(hi_np[idx])
+            w = mask[idx]
+            out_i, out_j = pair_fn(landed[lo], landed[hi])
+            contribs[lo].append(_wmul(out_i, w))
+            if lo != hi:  # self-pair (lo == hi, d = 0): count once
+                contribs[hi].append(_wmul(out_j, w))
+
+    quorum_gather(x, schedule, axis_name, overlap_fn=on_land)
+
+    def fold(parts: list[jax.Array]) -> jax.Array:
+        if not parts:  # gathered slot with no scheduled pair
+            return mark_varying(jnp.zeros(probe.shape, probe.dtype), axis_name)
+        return functools.reduce(jnp.add, parts).astype(probe.dtype)
+
+    return [fold(c) for c in contribs]
+
+
 def quorum_allpairs(
     pair_fn: Callable[[jax.Array, jax.Array], tuple[jax.Array, jax.Array]],
     x: jax.Array,
@@ -126,6 +317,8 @@ def quorum_allpairs(
     schedule: PairSchedule | None = None,
     axis_size: int | None = None,
     mask: jax.Array | None = None,
+    mode: str = "auto",
+    batch_fn: Callable[..., jax.Array] | None = None,
 ):
     """Compute a symmetric all-pairs reduction with quorum replication.
 
@@ -136,44 +329,63 @@ def quorum_allpairs(
     and keep only ``out_i``.
 
     Must be called inside shard_map with ``x`` the local block.  ``mask`` is
-    this device's [n_pairs] dedup/validity mask (see pair_mask_table);
-    defaults to all-ones with d=P/2 dedup applied via psum-consistent weights.
+    this device's [n_pairs] dedup/validity mask; defaults to this device's
+    pair_mask_table row (selected by axis_index), so the doubly-generated
+    d = P/2 orbit on even P is deduplicated out of the box.  Pass it
+    explicitly (a sharded operand) to avoid embedding the [P, n_pairs]
+    table as a constant, or to add app-specific pair validity.
+
+    ``mode`` selects the execution engine (DESIGN.md section 4):
+      * ``"batched"`` — gather once, evaluate all pairs in one vmapped call,
+        reduce with a slot segment_sum (fastest; O(n_pairs) extra memory).
+      * ``"overlap"`` — double-buffered gather: each pair computes as soon as
+        its later block lands, hiding the k-1 shifts behind compute, and the
+        scatter's inverse shifts pipeline symmetrically (O(k) memory).
+      * ``"scan"``    — serial per-pair lax.scan (lowest memory; oracle).
+      * ``"auto"``    — heuristic: batched while its working set fits a byte
+        budget, else overlap when k >= 3, else scan; overridable with the
+        ``REPRO_ALLPAIRS_MODE`` env var.
+    ``batch_fn(quorum, lo_slots, hi_slots, wi, wj) -> [k, block, ...]`` is an
+    optional fused replacement for the batched inner step (a Pallas kernel
+    such as kernels.ops.pairwise_batch_forces); implies ``mode="batched"``
+    under ``auto``.
 
     Returns the per-block reduced output, shape/type of ``pair_fn``'s out_i.
     """
     if schedule is None:
         assert axis_size is not None, "need schedule or axis_size"
         schedule = build_schedule(axis_size)
-    k = schedule.k
+    if mode not in ENGINE_MODES + ("auto",):
+        raise ValueError(f"mode must be one of {ENGINE_MODES + ('auto',)}, "
+                         f"got {mode!r}")
+    if batch_fn is not None and mode not in ("batched", "auto"):
+        raise ValueError(
+            f"batch_fn only replaces the batched inner step (got "
+            f"mode={mode!r}); drop it or use mode='batched'")
 
-    quorum = quorum_gather(x, schedule, axis_name)  # [k, block, ...]
-
-    lo_slots = jnp.asarray(schedule.pair_slots[:, 0])
-    hi_slots = jnp.asarray(schedule.pair_slots[:, 1])
-    is_self = jnp.asarray(schedule.pair_diff == 0)
     if mask is None:
-        mask = jnp.ones((schedule.n_pairs,), jnp.float32)
+        table = jnp.asarray(pair_mask_table(schedule))  # [P, n_pairs]
+        mask = jnp.take(table, lax.axis_index(axis_name), axis=0)
     mask = mask.reshape(-1)  # accept [1, n_pairs] shard_map leftovers
 
-    def body(acc, inputs):
-        lo, hi, selfp, w = inputs
-        bi = jnp.take(quorum, lo, axis=0)
-        bj = jnp.take(quorum, hi, axis=0)
-        out_i, out_j = pair_fn(bi, bj)
-        out_j = jnp.where(selfp, jnp.zeros_like(out_j), out_j)  # self-pair: count once
-        acc = acc.at[lo].add(w * out_i)
-        acc = acc.at[hi].add(w * out_j)
-        return acc, None
-
     # probe output structure once (shapes are static)
-    probe_i, _ = jax.eval_shape(lambda a, b: pair_fn(a, b), quorum[0], quorum[0])
-    acc0 = jnp.zeros((k,) + probe_i.shape, probe_i.dtype)
-    try:  # mark the carry as varying over the quorum axis (jax >= 0.7 VMA)
-        acc0 = lax.pcast(acc0, axis_name, to="varying")
-    except (AttributeError, TypeError):  # pragma: no cover - older jax
-        pass
-    acc, _ = lax.scan(body, acc0, (lo_slots, hi_slots, is_self, mask))
-    return quorum_scatter(acc, schedule, axis_name)
+    sds = jax.ShapeDtypeStruct(x.shape, x.dtype)
+    probe, _ = jax.eval_shape(pair_fn, sds, sds)
+    if mode == "auto":
+        mode = _select_mode(schedule, x, probe, batch_fn)
+
+    if mode == "overlap":
+        partials = _overlap_accumulate(pair_fn, x, schedule, mask, probe,
+                                       axis_name)
+    else:
+        quorum = quorum_gather(x, schedule, axis_name)  # [k, block, ...]
+        if mode == "batched":
+            partials = _batched_accumulate(pair_fn, quorum, schedule, mask,
+                                           probe, batch_fn)
+        else:
+            partials = _scan_accumulate(pair_fn, quorum, schedule, mask,
+                                        probe, axis_name)
+    return quorum_scatter(partials, schedule, axis_name)
 
 
 def allgather_allpairs(

@@ -70,16 +70,23 @@ class PairSchedule:
         return int(self.pair_slots.shape[0])
 
     def owner_of(self, x: int, y: int) -> int:
-        """Global owner device of unordered block pair (x, y)."""
+        """Global owner device of unordered block pair (x, y).
+
+        The schedule entry for difference dd = min(d, P-d) is the canonical
+        (a_lo, a_hi) with a_hi - a_lo = dd (mod P); the owner is the device i
+        whose quorum places the pair's lower endpoint (in the canonical
+        direction) at slot a_lo, i.e. i = j - a_lo (mod P) with j the
+        endpoint satisfying (other - j) % P == dd.  For the doubly-owned
+        d = P/2 orbit (even P) both endpoints qualify; this returns one of
+        the two owners (the engine mask dedups the actual compute).
+        """
         d = (y - x) % self.P
         dd = min(d, (self.P - d) % self.P)
         # find the schedule entry covering difference dd
         idx = int(np.nonzero(self.pair_diff == dd)[0][0])
         lo_slot = int(self.pair_slots[idx, 0])
         a_lo = int(self.shifts[lo_slot])
-        j = x if d == dd or d == 0 else y  # lower endpoint of the canonical direction
-        if (y - x) % self.P != dd:
-            j = y
+        j = x if d == dd else y  # lower endpoint of the canonical direction
         return (j - a_lo) % self.P
 
     def global_pairs_of(self, i: int) -> List[Tuple[int, int]]:

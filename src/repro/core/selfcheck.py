@@ -1,11 +1,13 @@
 """Distributed self-check for the quorum all-pairs engine.
 
 Run as ``XLA_FLAGS=--xla_force_host_platform_device_count=<P> python -m
-repro.core.selfcheck [P]`` — the test suite invokes this in a subprocess so
-the main pytest process keeps a single CPU device (see launch/dryrun.py note).
+repro.core.selfcheck [P] [modes]`` — the test suite invokes this in a
+subprocess so the main pytest process keeps a single CPU device (see
+launch/dryrun.py note).  ``modes`` is an optional comma-separated subset of
+the engine modes (default: all of batched, overlap, scan).
 
-Checks, for a toy n-body-style interaction:
-  quorum_allpairs == allgather_allpairs == pure-numpy O(N^2) oracle.
+Checks, for a toy n-body-style interaction: every engine execution mode ==
+allgather_allpairs == pure-numpy O(N^2) oracle.
 """
 
 from __future__ import annotations
@@ -17,7 +19,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
-from .allpairs import allgather_allpairs, pair_mask_table, quorum_allpairs
+from .allpairs import (ENGINE_MODES, allgather_allpairs, pair_mask_table,
+                       quorum_allpairs)
 from .scheduler import build_schedule
 
 
@@ -41,7 +44,8 @@ def oracle(x: np.ndarray) -> np.ndarray:
     return f.sum(axis=1)
 
 
-def main(nblocks: int | None = None) -> None:
+def main(nblocks: int | None = None,
+         modes: tuple[str, ...] = ENGINE_MODES) -> None:
     devs = jax.devices()
     Pn = nblocks or len(devs)
     assert len(devs) >= Pn, f"need {Pn} devices, have {len(devs)}"
@@ -52,14 +56,13 @@ def main(nblocks: int | None = None) -> None:
     x = rng.normal(size=(Pn * block, 3)).astype(np.float32)
     masks = pair_mask_table(sched)  # [P, n_pairs]
 
-    @jax.jit
-    def run_quorum(xs, ms):
+    def run_quorum(xs, ms, mode):
         def f(xb, mb):
             return quorum_allpairs(pairwise_force, xb, axis_name="q",
-                                   schedule=sched, mask=mb)
-        return jax.shard_map(f, mesh=mesh,
-                             in_specs=(P("q"), P("q")),
-                             out_specs=P("q"))(xs, ms)
+                                   schedule=sched, mask=mb, mode=mode)
+        return jax.jit(jax.shard_map(f, mesh=mesh,
+                                     in_specs=(P("q"), P("q")),
+                                     out_specs=P("q")))(xs, ms)
 
     @jax.jit
     def run_allgather(xs):
@@ -69,14 +72,20 @@ def main(nblocks: int | None = None) -> None:
         return jax.shard_map(f, mesh=mesh, in_specs=P("q"), out_specs=P("q"))(xs)
 
     want = oracle(x)
-    got_q = np.asarray(run_quorum(x, masks))
     got_a = np.asarray(run_allgather(x))
     np.testing.assert_allclose(got_a, want, rtol=2e-4, atol=2e-5)
-    np.testing.assert_allclose(got_q, want, rtol=2e-4, atol=2e-5)
-    np.testing.assert_allclose(got_q, got_a, rtol=2e-4, atol=2e-5)
+    max_err = 0.0
+    for mode in modes:
+        got_q = np.asarray(run_quorum(x, masks, mode))
+        np.testing.assert_allclose(got_q, want, rtol=2e-4, atol=2e-5,
+                                   err_msg=f"mode={mode} vs oracle")
+        np.testing.assert_allclose(got_q, got_a, rtol=2e-4, atol=2e-5,
+                                   err_msg=f"mode={mode} vs allgather")
+        max_err = max(max_err, float(np.abs(got_q - want).max()))
     print(f"selfcheck OK: P={Pn} k={sched.k} pairs/dev={sched.n_pairs} "
-          f"max|err|={np.abs(got_q - want).max():.2e}")
+          f"modes={','.join(modes)} max|err|={max_err:.2e}")
 
 
 if __name__ == "__main__":
-    main(int(sys.argv[1]) if len(sys.argv) > 1 else None)
+    main(int(sys.argv[1]) if len(sys.argv) > 1 else None,
+         tuple(sys.argv[2].split(",")) if len(sys.argv) > 2 else ENGINE_MODES)

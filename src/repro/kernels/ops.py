@@ -15,6 +15,7 @@ import jax.numpy as jnp
 
 from . import ref
 from .flash_attention import flash_attention_pallas
+from .pairwise_batch import pairwise_batch_pallas
 from .pairwise_corr import pairwise_corr_pallas
 from .pcit_filter import pcit_filter_pallas
 
@@ -74,6 +75,26 @@ def pcit_filter(r_xy, rows_x, rows_y, gx, gy, *, bm=128, bn=128, bz=128):
     out = pcit_filter_pallas(r_xy, rows_x, rows_y, gx, gy,
                              bm=bm, bn=bn, bz=bz, interpret=_interpret())
     return out[:M, :N]
+
+
+@functools.partial(jax.jit, static_argnames=("softening",))
+def pairwise_batch_forces(quorum, lo, hi, wi, wj, *, softening=1e-2):
+    """Fused batched n-body step for the engine's ``batch_fn`` hook.
+
+    quorum: [k, block, 4]; lo/hi: [n_pairs] slot ids; wi/wj: [n_pairs]
+    per-side pair weights (engine passes mask and self-zeroed mask).
+    Returns slot-accumulated forces [k, block, 3] float32.
+
+    Pads block up to the 8-sublane multiple with zero-mass bodies at the
+    origin — exact, since zero mass contributes zero force either way —
+    and slices back.
+    """
+    q, block = _pad_to(quorum, 8, 1)
+    w = jnp.stack([jnp.asarray(wi, jnp.float32),
+                   jnp.asarray(wj, jnp.float32)], axis=1)
+    out = pairwise_batch_pallas(q, lo, hi, w, softening=softening,
+                                interpret=_interpret())
+    return out[:, :block]
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "bq", "bk"))

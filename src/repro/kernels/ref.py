@@ -39,6 +39,33 @@ def pcit_filter(r_xy, rows_x, rows_y, gx, gy) -> jax.Array:
     return keep
 
 
+def pairwise_batch_forces(quorum, lo, hi, wi, wj, *,
+                          softening: float = 1e-2) -> jax.Array:
+    """Batched n-body slot accumulation oracle (kernels/pairwise_batch.py).
+
+    quorum: [k, block, 4] (x, y, z, mass); lo/hi: [n_pairs] slot ids;
+    wi/wj: [n_pairs] per-side weights.  Returns [k, block, 3] float32.
+    """
+    def pair(bi, bj):
+        pi, mi = bi[:, :3], bi[:, 3]
+        pj, mj = bj[:, :3], bj[:, 3]
+        d = pj[None, :, :] - pi[:, None, :]
+        r2 = jnp.sum(d * d, axis=-1) + softening
+        inv_r3 = jax.lax.rsqrt(r2) / r2
+        w = (mi[:, None] * mj[None, :] * inv_r3)[..., None]
+        f_ij = w * d
+        return jnp.sum(f_ij, axis=1), -jnp.sum(f_ij, axis=0)
+
+    lo = jnp.asarray(lo, jnp.int32)
+    hi = jnp.asarray(hi, jnp.int32)
+    out_i, out_j = jax.vmap(pair)(jnp.take(quorum, lo, axis=0).astype(jnp.float32),
+                                  jnp.take(quorum, hi, axis=0).astype(jnp.float32))
+    data = jnp.concatenate([out_i * wi[:, None, None],
+                            out_j * wj[:, None, None]], axis=0)
+    ids = jnp.concatenate([lo, hi])
+    return jax.ops.segment_sum(data, ids, num_segments=quorum.shape[0])
+
+
 def flash_attention(q, k, v, *, causal: bool) -> jax.Array:
     """Plain attention oracle: q [B, Tq, H, hd], k/v [B, Tk, KV, hd]."""
     B, Tq, H, hd = q.shape

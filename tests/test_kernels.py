@@ -86,3 +86,25 @@ def test_ssd_chunk_oracle_matches_model():
         y, _ = ssd_chunked(x, dt, A, Bm, Cm, chunk)
         np.testing.assert_allclose(np.asarray(y), np.asarray(want),
                                    rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("k,block,n_pairs", [(2, 8, 2), (3, 12, 5),
+                                             (4, 16, 9), (3, 8, 4)])
+def test_pairwise_batch_forces(k, block, n_pairs):
+    """Fused batched n-body + slot segment-sum kernel vs the jnp oracle,
+    including a self pair (wj = 0), masked-out pairs, and non-multiple-of-8
+    block sizes (zero-mass padding)."""
+    quorum = jnp.asarray(np.concatenate(
+        [RNG.normal(size=(k, block, 3)),
+         RNG.uniform(0.5, 2, (k, block, 1))], -1), jnp.float32)
+    lo = RNG.integers(0, k, size=n_pairs).astype(np.int32)
+    hi = RNG.integers(0, k, size=n_pairs).astype(np.int32)
+    lo[0] = hi[0] = 0                               # self pair
+    wi = RNG.integers(0, 2, size=n_pairs).astype(np.float32)
+    wi[0] = 1.0
+    wj = wi * (lo != hi)
+    got = ops.pairwise_batch_forces(quorum, lo, hi, wi, wj)
+    want = ref.pairwise_batch_forces(quorum, lo, hi, wi, wj)
+    assert got.shape == (k, block, 3)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)

@@ -1,9 +1,12 @@
-"""Unit + property tests for the paper's core math (sections 3-4)."""
+"""Deterministic unit tests for the paper's core math (sections 3-4).
+
+Hypothesis-based property sweeps live in tests/test_quorum_properties.py,
+which degrades to a skip when hypothesis is not installed — this module
+keeps the suite running (deterministic P sweeps) without it.
+"""
 
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
 
 from repro.core.quorum import (cyclic_quorums, difference_set,
                                is_difference_cover, ladder_difference_cover,
@@ -36,16 +39,14 @@ def test_singer_sets(q):
     assert is_difference_cover(A, P)
 
 
-@given(st.integers(min_value=1, max_value=400))
-@settings(max_examples=60, deadline=None)
-def test_ladder_cover_property(P):
+@pytest.mark.parametrize("P", [1, 2, 3, 9, 40, 97, 256, 400])
+def test_ladder_cover(P):
     A = ladder_difference_cover(P)
     assert is_difference_cover(A, P)
     assert len(A) <= 2 * int(np.ceil(np.sqrt(P))) + 2
 
 
-@given(st.integers(min_value=1, max_value=160))
-@settings(max_examples=40, deadline=None)
+@pytest.mark.parametrize("P", [1, 2, 5, 6, 12, 31, 48, 160])
 def test_all_pairs_property(P):
     """Paper Theorem 1: cyclic quorums from a relaxed difference set satisfy
     the all-pairs property (every unordered pair co-resident somewhere)."""
@@ -53,8 +54,7 @@ def test_all_pairs_property(P):
     assert verify_all_pairs_property(Q, P)
 
 
-@given(st.integers(min_value=1, max_value=160))
-@settings(max_examples=40, deadline=None)
+@pytest.mark.parametrize("P", [1, 3, 4, 8, 13, 36, 64, 150])
 def test_quorum_properties(P):
     """Paper Eq. 10-13: equal size, equal responsibility, intersection."""
     Q = cyclic_quorums(P)
@@ -72,8 +72,7 @@ def test_quorum_properties(P):
                 assert sets[i] & sets[j]             # intersection (Eq. 10)
 
 
-@given(st.integers(min_value=1, max_value=300))
-@settings(max_examples=50, deadline=None)
+@pytest.mark.parametrize("P", [1, 2, 7, 16, 63, 128, 300])
 def test_memory_scaling(P):
     """The headline claim: one array of k*N/P = O(N/sqrt(P)) elements."""
     A = difference_set(P)

@@ -1,0 +1,61 @@
+"""Hypothesis property sweeps for the paper's core math (sections 3-4).
+
+Skipped wholesale when hypothesis is not installed; the deterministic
+fixed-P versions in tests/test_quorum.py always run.
+"""
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.quorum import (cyclic_quorums, difference_set,
+                               is_difference_cover, ladder_difference_cover,
+                               verify_all_pairs_property)
+
+
+@given(st.integers(min_value=1, max_value=400))
+@settings(max_examples=60, deadline=None)
+def test_ladder_cover_property(P):
+    A = ladder_difference_cover(P)
+    assert is_difference_cover(A, P)
+    assert len(A) <= 2 * int(np.ceil(np.sqrt(P))) + 2
+
+
+@given(st.integers(min_value=1, max_value=160))
+@settings(max_examples=40, deadline=None)
+def test_all_pairs_property(P):
+    """Paper Theorem 1: cyclic quorums from a relaxed difference set satisfy
+    the all-pairs property (every unordered pair co-resident somewhere)."""
+    Q = cyclic_quorums(P)
+    assert verify_all_pairs_property(Q, P)
+
+
+@given(st.integers(min_value=1, max_value=160))
+@settings(max_examples=40, deadline=None)
+def test_quorum_properties(P):
+    """Paper Eq. 10-13: equal size, equal responsibility, intersection."""
+    Q = cyclic_quorums(P)
+    k = len(Q[0])
+    assert all(len(S) == k for S in Q)               # equal work (Eq. 12)
+    counts = np.zeros(P, int)
+    for S in Q:
+        for b in S:
+            counts[b] += 1
+    assert (counts == k).all()                       # equal responsibility (Eq. 13)
+    sets = [set(S) for S in Q]
+    if P <= 64:  # O(P^2) check
+        for i in range(P):
+            for j in range(P):
+                assert sets[i] & sets[j]             # intersection (Eq. 10)
+
+
+@given(st.integers(min_value=1, max_value=300))
+@settings(max_examples=50, deadline=None)
+def test_memory_scaling(P):
+    """The headline claim: one array of k*N/P = O(N/sqrt(P)) elements."""
+    A = difference_set(P)
+    assert len(A) <= max(3, 2.1 * np.sqrt(P) + 2)

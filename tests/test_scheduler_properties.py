@@ -1,0 +1,57 @@
+"""Hypothesis property sweeps for the schedules (skipped without hypothesis;
+deterministic versions run in tests/test_scheduler.py)."""
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.scheduler import build_causal_schedule, build_schedule
+
+
+@given(st.integers(min_value=1, max_value=96))
+@settings(max_examples=40, deadline=None)
+def test_full_schedule_exact_coverage(P):
+    """Every unordered pair computed exactly once (d = P/2 orbit twice,
+    deduplicated by the engine mask)."""
+    s = build_schedule(P)
+    count = np.zeros((P, P), int)
+    for i in range(P):
+        for (x, y) in s.global_pairs_of(i):
+            a, b = min(x, y), max(x, y)
+            count[a, b] += 1
+    for a in range(P):
+        for b in range(a, P):
+            d = (b - a) % P
+            dd = min(d, P - d)
+            expected = 2 if (P % 2 == 0 and P > 1 and dd == P // 2) else 1
+            assert count[a, b] == expected, (P, a, b)
+
+
+@given(st.integers(min_value=1, max_value=96))
+@settings(max_examples=40, deadline=None)
+def test_perfect_static_balance(P):
+    """Every device owns exactly one pair per difference — identical op
+    sequence lengths (straggler-free by construction)."""
+    s = build_schedule(P)
+    assert s.n_pairs == P // 2 + 1
+    for i in range(P):
+        assert len(s.global_pairs_of(i)) == s.n_pairs
+
+
+@given(st.integers(min_value=1, max_value=64))
+@settings(max_examples=30, deadline=None)
+def test_causal_schedule_coverage(P):
+    cs = build_causal_schedule(P)
+    cover = np.zeros((P, P), int)
+    for i in range(P):
+        for sidx in range(cs.n_pairs):
+            if cs.valid[i, sidx]:
+                kv = (i + int(cs.shifts[cs.pair_slots[sidx, 0]])) % P
+                q = (i + int(cs.shifts[cs.pair_slots[sidx, 1]])) % P
+                cover[q, kv] += 1
+    want = np.tril(np.ones((P, P), int))
+    np.testing.assert_array_equal(cover, want)
