@@ -7,6 +7,10 @@ Prints ``name,us_per_call,derived`` CSV rows:
   bench_engine         — n-body per-engine-mode quorum vs atom wall time
                          (also writes BENCH_engine.json at the repo root;
                          ``--fast-engine`` runs only this one, for CI)
+  bench_serve          — online query subsystem: steady-state queries/sec
+                         per mode, fused kernel vs unfused reference
+                         (writes BENCH_serve.json; ``--fast-serve`` runs
+                         only this one, for CI)
   bench_attention_comm — comm-volume model: quorum vs ring vs all-gather
 
 Roofline extraction from the dry-run lives in benchmarks/roofline.py (it
@@ -21,12 +25,16 @@ import traceback
 
 def main() -> None:
     from . import (bench_attention_comm, bench_attention_hlo, bench_engine,
-                   bench_memory, bench_pcit_speedup, bench_quorum)
+                   bench_memory, bench_pcit_speedup, bench_quorum,
+                   bench_serve)
     rows = [("name", "us_per_call", "derived")]
     modules = [bench_quorum, bench_memory, bench_attention_comm,
-               bench_attention_hlo, bench_engine, bench_pcit_speedup]
+               bench_attention_hlo, bench_engine, bench_serve,
+               bench_pcit_speedup]
     if "--fast-engine" in sys.argv:
         modules = [bench_engine]
+    elif "--fast-serve" in sys.argv:
+        modules = [bench_serve]
     elif "--fast" in sys.argv:
         modules = modules[:3]
     for mod in modules:

@@ -1,0 +1,80 @@
+"""Online similarity serving over a quorum-sharded corpus (the serving
+half of the paper's all-pairs similarity workload, cf. Rocket /
+all-pairs-similarity production framing in PAPERS.md): build a corpus of
+random embeddings, answer nearest-neighbor queries through the
+cover-routed top-k engine, stream in new vectors, and watch results
+update — all verified against a numpy brute-force oracle.
+
+Run:  PYTHONPATH=src python examples/similarity_serve.py
+"""
+
+import os
+import sys
+
+if "XLA_FLAGS" not in os.environ:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    os.execv(sys.executable, [sys.executable] + sys.argv)
+
+import numpy as np  # noqa: E402
+import jax  # noqa: E402
+
+from repro.serving import ServingCorpus  # noqa: E402
+from repro.serving.selfcheck import oracle_topk  # noqa: E402
+
+
+def main():
+    P, block, d, topk = 8, 32, 48, 5
+    rng = np.random.default_rng(0)
+    N = P * block - block                 # leave room for streamed appends
+    corpus = rng.normal(size=(N, d)).astype(np.float32)
+    queries = rng.normal(size=(4, d)).astype(np.float32)
+
+    mesh = jax.make_mesh((P,), ("q",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    sc = ServingCorpus.build(corpus, mesh, block=block)
+    plan = sc.plan
+    print(f"corpus: {N} vectors in {P} blocks; quorum k={plan.k}; "
+          f"queries fan out to {plan.n_cover}/{P} devices "
+          f"(cover {list(plan.devices)})")
+
+    full = np.zeros((P * block, d), np.float32)
+    full[:N] = corpus
+    valid = np.arange(P * block) < N
+
+    def ask(label):
+        vals, ids = sc.query(queries, topk=topk, metric="l2")
+        want_v, want_i = oracle_topk(full, valid, queries, topk, "l2")
+        assert (np.asarray(ids) == want_i).all(), label
+        # atol 1e-3: planted near-duplicates give near-zero L2 scores via
+        # catastrophic cancellation of ~|q|^2-magnitude terms, so the
+        # engine/numpy matmul reduction-order difference (~1e-5 absolute)
+        # is relatively large exactly there
+        np.testing.assert_allclose(np.asarray(vals), want_v, rtol=1e-4,
+                                   atol=1e-3, err_msg=label)
+        print(f"{label}: nearest ids per query = "
+              f"{[r.tolist() for r in np.asarray(ids)[:, :3]]} (top 3)")
+
+    ask("initial")
+
+    # stream: plant near-duplicates of the queries in a fresh block — they
+    # should immediately dominate the neighbor lists
+    planted = queries + 0.01 * rng.normal(size=queries.shape).astype(np.float32)
+    b = sc.append_block(planted)
+    full[b * block:b * block + len(planted)] = planted
+    valid[b * block:b * block + len(planted)] = True
+    ask(f"after streaming 4 near-duplicates into block {b}")
+    _, ids = sc.query(queries, topk=topk, metric="l2")
+    assert (np.asarray(ids)[:, 0] == b * block + np.arange(4)).all(), \
+        "planted near-duplicates must be the new nearest neighbors"
+
+    # replace that block: the planted vectors vanish again
+    fresh = rng.normal(size=(block, d)).astype(np.float32)
+    sc.replace_block(b, fresh)
+    full[b * block:(b + 1) * block] = fresh
+    valid[b * block:(b + 1) * block] = True
+    ask(f"after replacing block {b}")
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

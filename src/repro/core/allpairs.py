@@ -45,6 +45,7 @@ __all__ = [
     "allgather_allpairs",
     "pair_mask_table",
     "mark_varying",
+    "auto_batch_bytes",
     "env_mode_override",
     "pair_ready_order",
     "ENGINE_MODES",
@@ -55,7 +56,16 @@ ENGINE_MODES = ("batched", "overlap", "scan")
 # auto-mode switches away from `batched` when its [2*n_pairs, block, ...]
 # working set would exceed this budget (bytes; overridable for small-VMEM or
 # huge-HBM parts)
-_AUTO_BATCH_BYTES = int(os.environ.get("REPRO_BATCH_BYTES_LIMIT", 1 << 28))
+_DEFAULT_BATCH_BYTES = 1 << 28
+
+
+def auto_batch_bytes() -> int:
+    """The auto-mode byte budget, read from ``REPRO_BATCH_BYTES_LIMIT`` at
+    *selection* time (every ``mode="auto"`` trace), not at import — setting
+    the env var after ``import repro`` works.  Shared by the batch engine's
+    heuristic and the serving query engine's."""
+    env = os.environ.get("REPRO_BATCH_BYTES_LIMIT", "").strip()
+    return int(env) if env else _DEFAULT_BATCH_BYTES
 
 
 def _shift_perm(P: int, shift: int) -> list[tuple[int, int]]:
@@ -215,7 +225,7 @@ def _select_mode(schedule: PairSchedule, x: jax.Array,
         return "batched"
     out_bytes = math.prod(probe.shape) * jnp.dtype(probe.dtype).itemsize
     in_bytes = x.size * jnp.dtype(x.dtype).itemsize
-    if 2 * schedule.n_pairs * (in_bytes + out_bytes) <= _AUTO_BATCH_BYTES:
+    if 2 * schedule.n_pairs * (in_bytes + out_bytes) <= auto_batch_bytes():
         return "batched"
     if schedule.k >= 3:
         return "overlap"

@@ -97,6 +97,25 @@ def pairwise_batch_forces(quorum, lo, hi, wi, wj, *, softening=1e-2):
     return out[:, :block]
 
 
+@functools.partial(jax.jit, static_argnames=("topk", "metric"))
+def query_topk(stack, queries, mask, gidx, *, topk, metric="dot"):
+    """Fused serving scoring step for the query engine's ``batch_fn`` hook.
+
+    stack: [k, block, d] quorum blocks; queries: [Q, d]; mask: [k, block]
+    float (cover dedup x row validity); gidx: [k, block] int32 global row
+    ids.  Returns (scores [Q, topk] f32, indices [Q, topk] i32) under the
+    engine's (-score, index) order.
+
+    Pads Q up to the 8-sublane multiple with zero queries and slices the
+    padded rows back off — exact, the extra rows never leave the wrapper.
+    """
+    from .query_score import query_topk_pallas
+    q, Q = _pad_to(queries, 8, 0)
+    vals, idx = query_topk_pallas(stack, q, mask, gidx, topk=topk,
+                                  metric=metric, interpret=_interpret())
+    return vals[:Q], idx[:Q]
+
+
 @functools.partial(jax.jit, static_argnames=("causal", "bq", "bk"))
 def flash_attention(q, k, v, *, causal=True, bq=128, bk=128):
     """4-d entry point: q [B, Tq, H, hd], k/v [B, Tk, KV, hd] (GQA).

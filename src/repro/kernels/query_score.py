@@ -1,0 +1,128 @@
+"""Pallas TPU kernel: fused query scoring + dedup mask + running top-k.
+
+The serving engine's batched local step (serving/engine.py) materializes a
+[Q, k, block] score tensor, masks it, and sorts k*block candidates per
+query.  This kernel fuses the whole step, one grid step per quorum slot:
+
+  * slot gather — the BlockSpec index map DMAs exactly slot s's
+    [block, d] corpus block (the quorum stack never round-trips through a
+    gathered [Q, k, block] HBM intermediate),
+  * scoring — the [Q, block] dot (or L2) tile lives only in VMEM,
+  * dedup mask — cover mask and row validity fold in as a NEG_INF select,
+  * running top-k — a [Q, topk] (value, index) accumulator pair in VMEM
+    is merged with each slot's scores by ``topk`` rounds of
+    extract-the-maximum; outputs are written once at the final step.
+
+Selection follows the engine's total order (-score, global index): among
+equal scores the smallest corpus index wins, so results are bit-identical
+to the two-key-sort jnp path (kernels/ref.py `query_topk`) and the
+brute-force oracle.
+
+Layout notes (v5e): `Q` should be a multiple of 8 sublanes (the ops.py
+wrapper pads query rows — exact: padded rows are dropped after the call)
+and `block` of the 128-lane tile for peak VPU efficiency; the extract-max
+merge is O(topk * (topk + block)) VPU work per slot, which stays far below
+the dot's O(Q * block * d) MXU work for the topk << block serving regime.
+Interpret mode on CPU mirrors kernels/ops.py conventions and is swept in
+tests/test_kernels.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .ref import IDX_SENTINEL as _IDX_SENTINEL
+from .ref import NEG_INF, QUERY_METRICS
+
+IDX_SENTINEL = int(_IDX_SENTINEL)
+
+
+def _query_topk_kernel(x_ref, q_ref, m_ref, g_ref, ov_ref, oi_ref,
+                       vacc_ref, iacc_ref, *, k: int, topk: int, metric: str):
+    s = pl.program_id(0)
+
+    @pl.when(s == 0)
+    def _init():
+        vacc_ref[...] = jnp.full_like(vacc_ref, NEG_INF)
+        iacc_ref[...] = jnp.full_like(iacc_ref, IDX_SENTINEL)
+
+    x = x_ref[0]                                         # [block, d]
+    q = q_ref[...]                                       # [Q, d]
+    dot = jnp.dot(q, x.T, preferred_element_type=jnp.float32)
+    if metric == "l2":  # same formula as the engine/oracle: bit-parity
+        scores = (2.0 * dot - jnp.sum(x * x, axis=-1)[None, :]
+                  - jnp.sum(q * q, axis=-1)[:, None])
+    else:
+        scores = dot
+    valid = m_ref[0] > 0                                 # [block]
+    scores = jnp.where(valid[None, :], scores, NEG_INF)  # [Q, block]
+    gids = jnp.where(valid, g_ref[0], IDX_SENTINEL)      # [block]
+
+    cv = jnp.concatenate([vacc_ref[...], scores], axis=1)    # [Q, topk+block]
+    ci = jnp.concatenate(
+        [iacc_ref[...], jnp.broadcast_to(gids[None], scores.shape)], axis=1)
+    out_v, out_i = [], []
+    for _ in range(topk):  # extract-max under the (-score, index) order
+        m = jnp.max(cv, axis=1)                              # [Q]
+        tie = cv == m[:, None]
+        sel = jnp.min(jnp.where(tie, ci, IDX_SENTINEL), axis=1)
+        out_v.append(m)
+        out_i.append(sel)
+        hit = tie & (ci == sel[:, None])
+        cv = jnp.where(hit, NEG_INF, cv)
+        ci = jnp.where(hit, IDX_SENTINEL, ci)
+    vacc_ref[...] = jnp.stack(out_v, axis=1)
+    iacc_ref[...] = jnp.stack(out_i, axis=1)
+
+    @pl.when(s == k - 1)
+    def _done():
+        ov_ref[...] = vacc_ref[...]
+        oi_ref[...] = iacc_ref[...]
+
+
+def query_topk_pallas(stack: jax.Array, queries: jax.Array, mask: jax.Array,
+                      gidx: jax.Array, *, topk: int, metric: str = "dot",
+                      interpret: bool = False):
+    """stack: [k, block, d] quorum blocks; queries: [Q, d]; mask: [k, block]
+    float32 (1 = this device scores the row: cover dedup x validity);
+    gidx: [k, block] int32 global corpus row ids.  Returns the running
+    top-k after all k slots: (values [Q, topk] f32, indices [Q, topk] i32).
+    """
+    if metric not in QUERY_METRICS:
+        raise ValueError(f"metric must be one of {QUERY_METRICS}, "
+                         f"got {metric!r}")
+    k, block, d = stack.shape
+    Q = queries.shape[0]
+    assert queries.shape == (Q, d), (queries.shape, stack.shape)
+    assert mask.shape == (k, block) and gidx.shape == (k, block), \
+        (mask.shape, gidx.shape)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=0,
+        grid=(k,),
+        in_specs=[
+            pl.BlockSpec((1, block, d), lambda s: (s, 0, 0)),
+            pl.BlockSpec((Q, d), lambda s: (0, 0)),
+            pl.BlockSpec((1, block), lambda s: (s, 0)),
+            pl.BlockSpec((1, block), lambda s: (s, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((Q, topk), lambda s: (0, 0)),
+            pl.BlockSpec((Q, topk), lambda s: (0, 0)),
+        ],
+        scratch_shapes=[pltpu.VMEM((Q, topk), jnp.float32),
+                        pltpu.VMEM((Q, topk), jnp.int32)],
+    )
+    return pl.pallas_call(
+        functools.partial(_query_topk_kernel, k=k, topk=topk, metric=metric),
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((Q, topk), jnp.float32),
+                   jax.ShapeDtypeStruct((Q, topk), jnp.int32)],
+        interpret=interpret,
+    )(stack.astype(jnp.float32), queries.astype(jnp.float32),
+      jnp.asarray(mask, jnp.float32), jnp.asarray(gidx, jnp.int32))

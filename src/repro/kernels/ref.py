@@ -10,6 +10,11 @@ import numpy as np
 
 EPS = 1e-12
 NEG_INF = -1e30
+# shared "no candidate" index sentinel for every top-k path (query engine,
+# fused kernel, jnp oracle) — cross-path index agreement depends on all of
+# them using this exact value
+IDX_SENTINEL = np.int32(np.iinfo(np.int32).max)
+QUERY_METRICS = ("dot", "l2")
 
 
 def pairwise_corr(xs_i: jax.Array, xs_j: jax.Array) -> jax.Array:
@@ -64,6 +69,39 @@ def pairwise_batch_forces(quorum, lo, hi, wi, wj, *,
                             out_j * wj[:, None, None]], axis=0)
     ids = jnp.concatenate([lo, hi])
     return jax.ops.segment_sum(data, ids, num_segments=quorum.shape[0])
+
+
+def query_topk(stack, queries, mask, gidx, *, topk: int,
+               metric: str = "dot"):
+    """Fused query-scoring top-k oracle (kernels/query_score.py).
+
+    stack: [k, block, d]; queries: [Q, d]; mask: [k, block] (1 = score the
+    row); gidx: [k, block] int32 global row ids.  Selection is by the
+    (-score, index) total order; masked rows become (NEG_INF, int32 max)
+    sentinels.  Returns (values [Q, topk] f32, indices [Q, topk] i32).
+    """
+    if metric not in QUERY_METRICS:
+        raise ValueError(f"metric must be one of {QUERY_METRICS}, "
+                         f"got {metric!r}")
+    sent = jnp.int32(IDX_SENTINEL)
+    k, block, d = stack.shape
+    Q = queries.shape[0]
+    stack = stack.astype(jnp.float32)
+    queries = queries.astype(jnp.float32)
+    s = jnp.einsum("qd,sbd->qsb", queries, stack)
+    if metric == "l2":
+        s = (2.0 * s - jnp.sum(stack * stack, axis=-1)[None]
+             - jnp.sum(queries * queries, axis=-1)[:, None, None])
+    valid = jnp.asarray(mask) > 0
+    s = jnp.where(valid[None], s, NEG_INF).reshape(Q, k * block)
+    ids = jnp.where(valid, jnp.asarray(gidx, jnp.int32), sent)
+    ids = jnp.broadcast_to(ids.reshape(-1)[None], (Q, k * block))
+    n = k * block
+    if n < topk:
+        s = jnp.pad(s, ((0, 0), (0, topk - n)), constant_values=NEG_INF)
+        ids = jnp.pad(ids, ((0, 0), (0, topk - n)), constant_values=sent)
+    sv, si = jax.lax.sort((-s, ids), num_keys=2)
+    return -sv[:, :topk], si[:, :topk]
 
 
 def flash_attention(q, k, v, *, causal: bool) -> jax.Array:

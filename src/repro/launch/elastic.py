@@ -40,18 +40,19 @@ class RescalePlan:
 def rescale(P_old: int, P_new: int) -> RescalePlan:
     """Plan a quorum-axis resize.  Blocks are re-chunked to P_new equal
     parts by the data layer; this plan reports which *new* quorum members
-    each device must obtain (an upper bound when old shards can be reused)."""
+    each device must obtain (an upper bound when old shards can be reused).
+
+    An identity rescale (P_old == P_new) is a no-op: block ids keep their
+    meaning and every device already holds its full quorum, so the fetch
+    plan is empty.  Across a real resize block ids are re-chunked and
+    nothing previously held is reusable, so every device fetches its whole
+    new quorum.
+    """
     sched = build_schedule(P_new)
     quorums = cyclic_quorums(P_new)
-    old_quorums = cyclic_quorums(P_old) if P_old > 0 else []
     fetches: Dict[int, List[int]] = {}
-    for i, S in enumerate(quorums):
-        had = set(old_quorums[i]) if i < len(old_quorums) else set()
-        # block ids change meaning across resize; the conservative plan
-        # fetches everything not previously held under the same index map
-        need = [b for b in S if b not in had or P_old != P_new]
-        if need:
-            fetches[i] = need
+    if P_old != P_new:
+        fetches = {i: list(S) for i, S in enumerate(quorums)}
     return RescalePlan(P_old=P_old, P_new=P_new, schedule=sched,
                        new_quorums=quorums, fetches=fetches)
 

@@ -1,0 +1,28 @@
+"""Online all-pairs query serving over quorum-replicated corpora.
+
+The batch engine (core.allpairs) computes every pair once; this package
+serves *query-vs-all* traffic against the same quorum-sharded residency:
+
+  * ``cover``  — route a query to a ~ceil(P/k)-device set whose quorums
+    cover all blocks, with a dedup mask so replicas score once,
+  * ``engine`` — the shard_map query program: fused local top-k scoring
+    plus a ppermute tree merge (`ServingCorpus` is the host handle),
+  * ``stream`` — streamed corpus updates (replace / append a block)
+    over the existing cyclic ppermute shifts, no global reshuffle.
+
+See DESIGN.md section 9 ("Online serving").
+"""
+
+from .cover import CoverPlan, build_cover
+from .engine import ServingCorpus, quorum_query_topk
+from .stream import ServingState, build_state, replace_block
+
+__all__ = [
+    "CoverPlan",
+    "build_cover",
+    "ServingCorpus",
+    "quorum_query_topk",
+    "ServingState",
+    "build_state",
+    "replace_block",
+]

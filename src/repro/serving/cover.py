@@ -1,0 +1,239 @@
+"""Quorum-cover routing for online query serving.
+
+The batch engine replicates every block into k = O(sqrt(P)) cyclic quorums
+so that every *pair* of blocks is co-resident somewhere.  A query-vs-all
+computation needs much less: a set of devices whose quorums jointly cover
+all P blocks.  Because each block b lives in exactly k quorums (paper
+Eq. 13 — devices {b - a mod P : a in A}), a cover of ~ceil(P/k) devices
+exists in the best case, and the serving tier only has to fan a query out
+to those devices instead of all P (DESIGN.md section 9).
+
+Cover construction, cheapest-first:
+
+  * **closed form from the cyclic structure** — the difference-cover
+    property ``A - A = Z_P`` says the translates at ``C = -A mod P``
+    always cover (``S_{-a_j} ∋ a_i - a_j``): a guaranteed size-k cover
+    with zero search.  When A contains a run {0..m-1} (the ladder sets
+    do), the *step cover* at devices {0, m, 2m, ...} does better:
+    ~ceil(P/m) + 1 devices.
+  * **greedy set-cover** over the P translates (O(P^2 k)).
+  * **exact branch-and-bound** for P <= _EXACT_COVER_MAX_P, branching on
+    the k holders of a least-covered block (depth <= |cover|, factor k).
+
+``build_cover`` takes the smallest verified result.  NOTE a deviation from
+the obvious ``ceil(P/k) + 1`` target: that bound is *not achievable in
+general* — e.g. for P = 22 (k = 6) exhaustive search shows no 5-translate
+cover of the optimal difference set exists; the exact minimum over all
+P <= 64 stays within ``ceil(P/k) + 3`` (tests/test_cover.py pins this).
+
+The **dedup mask** assigns every block to exactly one (cover device, slot)
+so replicated blocks score each query exactly once; `mask_table` turns the
+assignment into a [P, k] sharded operand (zero rows for devices outside
+the cover), mirroring ``core.allpairs.pair_mask_table``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List, Sequence, Tuple
+
+import numpy as np
+
+from ..core.quorum import difference_set
+
+__all__ = [
+    "CoverPlan",
+    "build_cover",
+    "closed_form_cover",
+    "step_cover",
+    "greedy_cover",
+    "exact_cover",
+    "is_cover",
+]
+
+# exact search is k^|cover| worst case; beyond this P the heuristics (which
+# the exact search only ever improves by ~1 device) stand alone
+_EXACT_COVER_MAX_P = 64
+
+
+def _quorum(P: int, A: Sequence[int], i: int) -> frozenset:
+    return frozenset((a + i) % P for a in A)
+
+
+def is_cover(P: int, A: Sequence[int], devices: Sequence[int]) -> bool:
+    """True iff the quorums of ``devices`` jointly cover all P blocks."""
+    got: set = set()
+    for i in devices:
+        got |= _quorum(P, A, i)
+    return len(got) == P
+
+
+def closed_form_cover(P: int, A: Sequence[int]) -> List[int]:
+    """The always-valid size-k cover ``C = -A mod P`` (cyclic closed form).
+
+    For every residue r, the difference-cover property gives a_i - a_j = r
+    (mod P), so quorum S_{-a_j} = A - a_j contains r.  No search, O(k).
+    """
+    return sorted({(-a) % P for a in A})
+
+
+def step_cover(P: int, A: Sequence[int]) -> List[int] | None:
+    """Cover by translates at multiples of m, when A hits every residue
+    mod m (e.g. the ladder sets contain the run {0..r-1}).
+
+    For block b >= a with a = min{x in A : x ≡ b (mod m)}, b - a is a
+    multiple of m below P, so b is in the quorum of a chosen translate;
+    the wraparound cases (b < a) are patched greedily — that is the "+1"
+    (occasionally +2) over ceil(P/m).  Returns None when only m = 1
+    qualifies (every translate set trivially hits residues mod 1).
+    """
+    m = 0
+    for cand in range(min(P, len(A)), 1, -1):
+        if {a % cand for a in A} == set(range(cand)):
+            m = cand
+            break
+    if m == 0:
+        return None
+    devices = [(j * m) % P for j in range(math.ceil(P / m))]
+    covered: set = set()
+    for i in devices:
+        covered |= _quorum(P, A, i)
+    missing = set(range(P)) - covered
+    while missing:  # wraparound patch
+        best = max(range(P), key=lambda i: len(missing & _quorum(P, A, i)))
+        devices.append(best)
+        missing -= _quorum(P, A, best)
+    return sorted(set(devices))
+
+
+def greedy_cover(P: int, A: Sequence[int]) -> List[int]:
+    """Classic greedy set-cover over the P cyclic translates."""
+    quorums = [_quorum(P, A, i) for i in range(P)]
+    uncovered = set(range(P))
+    cover: List[int] = []
+    while uncovered:
+        best = max(range(P), key=lambda i: (len(uncovered & quorums[i]), -i))
+        cover.append(best)
+        uncovered -= quorums[best]
+    return sorted(cover)
+
+
+def exact_cover(P: int, A: Sequence[int], ub: int) -> List[int] | None:
+    """Minimal cover by branch-and-bound, or None if nothing beats ``ub``.
+
+    Branches on the k holders of the smallest uncovered block; prunes on
+    ``|cover| + ceil(|uncovered| / k) >= ub``.  By translational symmetry
+    some optimal cover contains device 0, so the root is pinned there.
+    """
+    k = len(A)
+    quorums = [_quorum(P, A, i) for i in range(P)]
+    holders = {b: [(b - a) % P for a in sorted(A)] for b in range(P)}
+    best: List[int] | None = None
+    bound = ub
+
+    def bb(cover: List[int], uncovered: frozenset) -> None:
+        nonlocal best, bound
+        if not uncovered:
+            if len(cover) < bound:
+                bound = len(cover)
+                best = list(cover)
+            return
+        if len(cover) + math.ceil(len(uncovered) / k) >= bound:
+            return
+        b = min(uncovered)
+        for i in holders[b]:
+            if i in cover:  # pragma: no cover - holders of uncovered b aren't in cover
+                continue
+            cover.append(i)
+            bb(cover, uncovered - quorums[i])
+            cover.pop()
+
+    bb([0], frozenset(range(P)) - quorums[0])
+    return sorted(best) if best is not None else None
+
+
+@dataclasses.dataclass(frozen=True)
+class CoverPlan:
+    """Query routing plan: which devices to visit, and who scores what.
+
+    Attributes
+    ----------
+    P : quorum axis size.
+    A : the (P,k)-difference set the quorums derive from (sorted).
+    devices : sorted cover device ids; their quorums union to all P blocks.
+    block_owner : np [P] int32 — the cover device assigned to score each
+        block (the first cover device holding it): the dedup rule.
+    slot_mask : np [P, k] float32 — per-device, per-slot scoring mask.
+        Row i is all-zero for devices outside the cover; inside it,
+        slot s is 1 iff block (i + A[s]) % P is assigned to device i.
+        Summed over all devices every block scores exactly once.
+    """
+
+    P: int
+    A: Tuple[int, ...]
+    devices: Tuple[int, ...]
+    block_owner: np.ndarray
+    slot_mask: np.ndarray
+
+    @property
+    def k(self) -> int:
+        return len(self.A)
+
+    @property
+    def n_cover(self) -> int:
+        return len(self.devices)
+
+    def mask_table(self) -> np.ndarray:
+        """[P, k] float32 mask rows, the sharded shard_map operand."""
+        return np.asarray(self.slot_mask, np.float32)
+
+
+_COVER_CACHE: dict = {}
+
+
+def build_cover(P: int) -> CoverPlan:
+    """Build (and memo-cache) the smallest verified cover plan for P.
+
+    Pure function of P (like the schedules), so elastic resize just
+    recomputes it.
+    """
+    if P < 1:
+        raise ValueError(f"P must be >= 1, got {P}")
+    if P in _COVER_CACHE:
+        return _COVER_CACHE[P]
+    A = difference_set(P)
+    k = len(A)
+
+    candidates = [closed_form_cover(P, A), greedy_cover(P, A)]
+    stepped = step_cover(P, A)
+    if stepped is not None:
+        candidates.append(stepped)
+    best = min(candidates, key=len)
+    if P <= _EXACT_COVER_MAX_P:
+        exact = exact_cover(P, A, ub=len(best))
+        if exact is not None:
+            best = exact
+    for c in candidates + [best]:
+        assert is_cover(P, A, c), (P, A, c)
+
+    devices = tuple(sorted(best))
+    shifts = sorted(A)
+    block_owner = np.full((P,), -1, np.int32)
+    for i in devices:  # first cover device holding the block scores it
+        for a in shifts:
+            b = (a + i) % P
+            if block_owner[b] < 0:
+                block_owner[b] = i
+    assert (block_owner >= 0).all(), (P, devices)
+
+    slot_mask = np.zeros((P, k), np.float32)
+    for i in devices:
+        for s, a in enumerate(shifts):
+            if block_owner[(a + i) % P] == i:
+                slot_mask[i, s] = 1.0
+
+    plan = CoverPlan(P=P, A=tuple(shifts), devices=devices,
+                     block_owner=block_owner, slot_mask=slot_mask)
+    _COVER_CACHE[P] = plan
+    return plan

@@ -1,0 +1,360 @@
+"""The online query engine: cover-routed fused top-k over quorum stacks.
+
+A query microbatch ``[Q, d]`` is broadcast to the cover devices
+(serving/cover.py); each scores it against its resident ``[k, block, d]``
+quorum stack under the dedup mask (so every corpus row scores exactly
+once), selects a local top-k, and a ppermute tree merge combines the
+per-device lists into the global ``[Q, topk]`` result in ceil(log2 P)
+rounds (DESIGN.md section 9).  In this harness all P devices run the SPMD
+program — non-cover devices contribute sentinel-only lists; a production
+router would simply not send them the query.
+
+Selection is everywhere by the total order **(-score, global index)** via
+two-key ``lax.sort``, so results are deterministic and bit-identical
+across execution modes, the fused kernel, and the brute-force oracle —
+ties break toward the smaller corpus index.
+
+Local scoring reuses the batch engine's mode surface (core.allpairs,
+DESIGN.md section 4):
+
+  * ``batched`` — one einsum over the whole stack + a single top-k over
+    k*block candidates (fastest; O(Q * k * block) score memory).  An
+    optional ``batch_fn`` (kernels/query_score.py via kernels.ops) fuses
+    slot gather + scoring + dedup mask + the running top-k in one Pallas
+    launch.
+  * ``overlap`` — per-slot scoring unrolled with a tournament (pairwise
+    tree) merge: slot scores are independent, so the log2(k)-deep merge
+    exposes slot-level parallelism to the scheduler instead of the scan
+    mode's k-long serial carry chain.
+  * ``scan``    — lax.scan over slots with a running [Q, topk] carry
+    (lowest memory; the correctness oracle).
+  * ``auto``    — ``REPRO_ALLPAIRS_MODE`` override first (reusing
+    :func:`core.allpairs.env_mode_override`), then batched while the
+    score working set fits the ``REPRO_BATCH_BYTES_LIMIT`` budget, else
+    overlap when k >= 3, else scan.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.sharding import PartitionSpec as PS
+
+from ..core.allpairs import (ENGINE_MODES, auto_batch_bytes,
+                             env_mode_override)
+from ..core.scheduler import PairSchedule, build_schedule
+from ..kernels.ref import IDX_SENTINEL, NEG_INF, QUERY_METRICS as METRICS
+from .cover import build_cover
+from .stream import ServingState, build_state, replace_block
+
+__all__ = [
+    "IDX_SENTINEL",
+    "topk_by_score",
+    "merge_topk",
+    "tree_merge_topk",
+    "quorum_query_topk",
+    "ServingCorpus",
+]
+
+
+
+def _scores(queries: jax.Array, blk: jax.Array, metric: str) -> jax.Array:
+    """[Q, d] x [block, d] -> [Q, block] under the chosen metric.
+
+    ``l2`` scores are ``2 q.x - |x|^2 - |q|^2`` (= -|q - x|^2); the oracle
+    and the fused kernel use the identical formula so float rounding, and
+    therefore ranking, agree everywhere.
+    """
+    dot = queries @ blk.T
+    if metric == "dot":
+        return dot
+    if metric == "l2":
+        return (2.0 * dot - jnp.sum(blk * blk, axis=-1)[None, :]
+                - jnp.sum(queries * queries, axis=-1)[:, None])
+    raise ValueError(f"metric must be one of {METRICS}, got {metric!r}")
+
+
+def topk_by_score(vals: jax.Array, idx: jax.Array, topk: int
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """Top-k along the last axis by the (-score, index) total order.
+
+    Pads with (NEG_INF, IDX_SENTINEL) when fewer than ``topk`` candidates.
+    """
+    n = vals.shape[-1]
+    if n < topk:
+        pad = [(0, 0)] * (vals.ndim - 1) + [(0, topk - n)]
+        vals = jnp.pad(vals, pad, constant_values=NEG_INF)
+        idx = jnp.pad(idx, pad, constant_values=IDX_SENTINEL)
+    sv, si = lax.sort((-vals, idx.astype(jnp.int32)), num_keys=2)
+    return -sv[..., :topk], si[..., :topk]
+
+
+def merge_topk(va, ia, vb, ib, topk: int) -> Tuple[jax.Array, jax.Array]:
+    """Merge two candidate lists, deduplicating repeated corpus indices.
+
+    Duplicates only arise from the tree merge's wraparound windows (the
+    dedup mask guarantees each index is *scored* once), so copies carry
+    identical scores and land adjacent under the two-key sort — the
+    second copy is demoted to a sentinel and a re-sort restores order.
+    """
+    vals = jnp.concatenate([va, vb], axis=-1)
+    idx = jnp.concatenate([ia, ib], axis=-1).astype(jnp.int32)
+    sv, si = lax.sort((-vals, idx), num_keys=2)
+    dup = jnp.concatenate(
+        [jnp.zeros_like(si[..., :1], bool),
+         (si[..., 1:] == si[..., :-1]) & (sv[..., 1:] == sv[..., :-1])],
+        axis=-1)
+    sv = jnp.where(dup, -NEG_INF, sv)          # sv holds negated scores
+    si = jnp.where(dup, IDX_SENTINEL, si)
+    sv, si = lax.sort((sv, si), num_keys=2)
+    return -sv[..., :topk], si[..., :topk]
+
+
+def tree_merge_topk(vals, idx, *, axis_name: str, P: int, topk: int):
+    """Recursive-doubling merge: after ceil(log2 P) ppermute rounds every
+    device holds the global top-k.  Round r pulls the running list from
+    device i + 2^r; windows overlap when P is not a power of two, which
+    the index dedup in :func:`merge_topk` absorbs exactly."""
+    shift = 1
+    while shift < P:
+        perm = [(j, (j - shift) % P) for j in range(P)]
+        ov = lax.ppermute(vals, axis_name, perm)
+        oi = lax.ppermute(idx, axis_name, perm)
+        vals, idx = merge_topk(vals, idx, ov, oi, topk)
+        shift *= 2
+    return vals, idx
+
+
+def _select_mode(schedule: PairSchedule, queries, block: int, batch_fn) -> str:
+    """``mode="auto"`` for the query engine, mirroring the batch engine's
+    heuristic: env override (conflicts with a fused batch_fn raise), fused
+    kernel -> batched, batched while the [Q, k*block] score working set
+    (x2 for the sort copy) fits the byte budget, overlap when k >= 3."""
+    env = env_mode_override()
+    if env is not None:
+        if batch_fn is not None and env != "batched":
+            raise ValueError(
+                f"REPRO_ALLPAIRS_MODE={env} conflicts with a fused batch_fn "
+                "(the kernel only replaces the batched local scoring step)")
+        return env
+    if batch_fn is not None:
+        return "batched"
+    Q = queries.shape[0]
+    itemsize = jnp.dtype(queries.dtype).itemsize
+    if 2 * Q * schedule.k * block * itemsize <= auto_batch_bytes():
+        return "batched"
+    if schedule.k >= 3:
+        return "overlap"
+    return "scan"
+
+
+def quorum_query_topk(
+    queries: jax.Array,
+    stack: jax.Array,
+    stack_valid: jax.Array,
+    mask_row: jax.Array,
+    *,
+    topk: int,
+    axis_name: str,
+    schedule: PairSchedule,
+    mode: str = "auto",
+    metric: str = "dot",
+    batch_fn: Callable[..., Tuple[jax.Array, jax.Array]] | None = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Score a query microbatch against the corpus; global top-k per query.
+
+    Must run inside shard_map over ``axis_name``.  Args (per device):
+      queries     : [Q, d] replicated microbatch.
+      stack       : [k, block, d] resident quorum stack (stream.py layout).
+      stack_valid : [k, block] bool row validity for the stack.
+      mask_row    : [k] this device's cover dedup mask row
+                    (CoverPlan.mask_table, sharded; zero off-cover).
+      batch_fn    : optional fused local step — called as
+                    ``batch_fn(stack, queries, mask [k, block], gidx
+                    [k, block]) -> (vals [Q, topk], idx [Q, topk])``
+                    (kernels.ops.query_topk); implies ``batched``.
+
+    Returns (scores [Q, topk], global corpus indices [Q, topk]); ties
+    break toward smaller indices, missing candidates are (NEG_INF,
+    IDX_SENTINEL).  Identical on every device after the tree merge.
+    """
+    if mode not in ENGINE_MODES + ("auto",):
+        raise ValueError(f"mode must be one of {ENGINE_MODES + ('auto',)}, "
+                         f"got {mode!r}")
+    if batch_fn is not None and mode not in ("batched", "auto"):
+        raise ValueError(
+            f"batch_fn only replaces the batched local scoring step (got "
+            f"mode={mode!r}); drop it or use mode='batched'")
+    k, block, d = stack.shape
+    mask_row = mask_row.reshape(-1)  # accept [1, k] shard_map leftovers
+    if mode == "auto":
+        mode = _select_mode(schedule, queries, block, batch_fn)
+
+    P = schedule.P
+    i = lax.axis_index(axis_name)
+    gblocks = (i + jnp.asarray(schedule.shifts, jnp.int32)) % P      # [k]
+    gidx = gblocks[:, None] * block + jnp.arange(block, dtype=jnp.int32)
+    mask = (mask_row[:, None] > 0) & stack_valid                     # [k, block]
+
+    if batch_fn is not None:
+        vals, idx = batch_fn(stack, queries,
+                             mask.astype(jnp.float32), gidx)
+    elif mode == "batched":
+        s = jnp.einsum("qd,sbd->qsb", queries, stack)
+        if metric == "l2":
+            s = (2.0 * s - jnp.sum(stack * stack, axis=-1)[None]
+                 - jnp.sum(queries * queries, axis=-1)[:, None, None])
+        elif metric != "dot":
+            raise ValueError(f"metric must be one of {METRICS}, got {metric!r}")
+        s = jnp.where(mask[None], s, NEG_INF)
+        Q = queries.shape[0]
+        midx = jnp.where(mask, gidx, IDX_SENTINEL)   # masked rows: sentinels
+        flat_idx = jnp.broadcast_to(midx[None], (Q, k, block))
+        vals, idx = topk_by_score(s.reshape(Q, k * block),
+                                  flat_idx.reshape(Q, k * block), topk)
+    elif mode == "scan":
+        Q = queries.shape[0]
+
+        def body(carry, inp):
+            cv, ci = carry
+            blk, vrow, grow = inp
+            s = jnp.where(vrow[None], _scores(queries, blk, metric), NEG_INF)
+            g = jnp.broadcast_to(jnp.where(vrow, grow, IDX_SENTINEL)[None],
+                                 (Q, block))
+            return merge_topk(cv, ci, s, g, topk), None
+
+        init = (jnp.full((Q, topk), NEG_INF, queries.dtype),
+                jnp.full((Q, topk), IDX_SENTINEL, jnp.int32))
+        (vals, idx), _ = lax.scan(body, init, (stack, mask, gidx))
+    else:  # overlap: unrolled per-slot scoring + tournament merge
+        Q = queries.shape[0]
+        lists = []
+        for s_i in range(k):
+            s = jnp.where(mask[s_i][None],
+                          _scores(queries, stack[s_i], metric), NEG_INF)
+            g = jnp.broadcast_to(
+                jnp.where(mask[s_i], gidx[s_i], IDX_SENTINEL)[None],
+                (Q, block))
+            lists.append(topk_by_score(s, g, topk))
+        while len(lists) > 1:
+            nxt = []
+            for j in range(0, len(lists) - 1, 2):
+                nxt.append(merge_topk(*lists[j], *lists[j + 1], topk))
+            if len(lists) % 2:
+                nxt.append(lists[-1])
+            lists = nxt
+        vals, idx = lists[0]
+
+    return tree_merge_topk(vals, idx, axis_name=axis_name, P=P, topk=topk)
+
+
+@functools.lru_cache(maxsize=64)
+def query_fn(mesh, axis_name: str, topk: int, mode: str, metric: str,
+             use_kernel: bool):
+    """Build (and cache) the jitted distributed query program.
+
+    Returns ``f(queries [Q, d], state) -> (scores [Q, topk], idx [Q,
+    topk])`` — re-jits only per microbatch shape, like nbody.forces_fn.
+    """
+    P = mesh.shape[axis_name]
+    sched = build_schedule(P)
+    plan = build_cover(P)
+    mask_table = jnp.asarray(plan.mask_table())          # [P, k]
+    batch_fn = None
+    if use_kernel:
+        if mode not in ("batched", "auto"):
+            raise ValueError(
+                f"use_kernel needs the batched mode (got mode={mode!r}); "
+                "the fused kernel only replaces the batched local step")
+        from ..kernels import ops as kops
+        batch_fn = functools.partial(kops.query_topk, topk=topk,
+                                     metric=metric)
+
+    def body(queries, stack, stack_valid, mask_row):
+        vals, idx = quorum_query_topk(
+            queries, stack, stack_valid, mask_row, topk=topk,
+            axis_name=axis_name, schedule=sched, mode=mode, metric=metric,
+            batch_fn=batch_fn)
+        return vals[None], idx[None]        # [1, Q, topk] per device
+
+    spec = PS(axis_name)
+    fn = jax.jit(jax.shard_map(
+        body, mesh=mesh, in_specs=(PS(), spec, spec, spec),
+        out_specs=(spec, spec)))
+
+    def run(queries, state: ServingState):
+        vals, idx = fn(queries, state.stack, state.stack_valid, mask_table)
+        return vals[0], idx[0]              # all device copies identical
+
+    return run
+
+
+class ServingCorpus:
+    """Host-side handle: resident corpus state + cached query programs.
+
+    >>> corpus = ServingCorpus.build(vectors, mesh)
+    >>> scores, ids = corpus.query(q, topk=8)
+    >>> corpus.replace_block(3, new_vectors)     # streamed, no reshuffle
+    >>> corpus.append_block(more_vectors)        # lands in empty capacity
+    """
+
+    def __init__(self, mesh, axis_name: str, state: ServingState,
+                 filled: np.ndarray):
+        self.mesh = mesh
+        self.axis_name = axis_name
+        self.state = state
+        self.filled = filled                 # [P] valid-row count per block
+        self.P = mesh.shape[axis_name]
+        self.block = state.shard.shape[0] // self.P
+        self.d = state.shard.shape[1]
+        self.schedule = build_schedule(self.P)
+        self.plan = build_cover(self.P)
+
+    @classmethod
+    def build(cls, corpus: np.ndarray, mesh, axis_name: str = "q",
+              block: int | None = None) -> "ServingCorpus":
+        """``block`` (optional) reserves a larger per-block row capacity
+        than ceil(N/P), leaving empty slots for streamed appends."""
+        state = build_state(np.asarray(corpus, np.float32), mesh, axis_name,
+                            block=block)
+        P = mesh.shape[axis_name]
+        block = state.shard.shape[0] // P
+        N = corpus.shape[0]
+        filled = np.clip(N - block * np.arange(P), 0, block).astype(np.int64)
+        return cls(mesh, axis_name, state, filled)
+
+    @property
+    def n_valid(self) -> int:
+        return int(self.filled.sum())
+
+    def query(self, queries, *, topk: int, mode: str = "auto",
+              metric: str = "dot", use_kernel: bool = False):
+        """queries [Q, d] -> (scores [Q, topk], global row ids [Q, topk])."""
+        run = query_fn(self.mesh, self.axis_name, topk, mode, metric,
+                       use_kernel)
+        return run(jnp.asarray(queries, jnp.float32), self.state)
+
+    def replace_block(self, b: int, data, nvalid: int | None = None) -> None:
+        """Replace block ``b`` in place (streamed to its k holder quorums)."""
+        if not 0 <= b < self.P:
+            raise ValueError(f"block id {b} out of range [0, {self.P})")
+        self.state = replace_block(self.state, self.mesh, self.axis_name,
+                                   b, np.asarray(data, np.float32), nvalid)
+        self.filled[b] = (data.shape[0] if nvalid is None else nvalid)
+
+    def append_block(self, data) -> int:
+        """Stream ``data`` (rows <= block capacity) into the first empty
+        block slot; returns the block id it landed in."""
+        empty = np.nonzero(self.filled == 0)[0]
+        if empty.size == 0:
+            raise ValueError(
+                "corpus full: no empty block slot; grow the quorum axis "
+                "(launch.elastic.rescale) to add capacity")
+        b = int(empty[0])
+        self.replace_block(b, data)
+        return b

@@ -1,0 +1,96 @@
+"""Cover-routing properties (serving/cover.py), deterministic P sweeps.
+
+The headline property for every P <= 64: the plan's quorums union to all
+P blocks, the dedup mask scores each block exactly once, and the cover is
+small.  NOTE the size bound is ceil(P/k) + 3, not the naive ceil(P/k) + 1:
+the tighter bound is not achievable in general — exhaustive search shows
+no 5-translate cover exists for P = 22 (k = 6, ceil(P/k) + 1 = 5) — and
++3 is the exact worst case over P <= 64 (attained at P = 64), verified
+against the branch-and-bound minimum build_cover itself uses.
+"""
+
+import itertools
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.quorum import difference_set
+from repro.serving.cover import (build_cover, closed_form_cover,
+                                 greedy_cover, is_cover, step_cover)
+
+
+@pytest.mark.parametrize("P", list(range(1, 65)))
+def test_cover_plan_properties(P):
+    plan = build_cover(P)
+    k = plan.k
+    assert plan.A == tuple(sorted(difference_set(P)))
+
+    # 1. the cover's quorums union to all P blocks
+    assert is_cover(P, plan.A, plan.devices)
+
+    # 2. size: never worse than the always-available size-k closed form,
+    #    and within +3 of the ceil(P/k) lower bound (exact worst case)
+    assert plan.n_cover <= k
+    assert plan.n_cover <= math.ceil(P / k) + 3
+
+    # 3. dedup: summed over all devices and slots, each block is scored
+    #    exactly once per query
+    hits = np.zeros(P, int)
+    for i in range(P):
+        for s, a in enumerate(plan.A):
+            if plan.slot_mask[i, s]:
+                assert i in plan.devices  # only cover devices score
+                hits[(a + i) % P] += 1
+    assert (hits == 1).all()
+
+    # 4. the assignment agrees with the mask
+    for b in range(P):
+        own = plan.block_owner[b]
+        assert own in plan.devices
+        s = plan.A.index((b - own) % P)
+        assert plan.slot_mask[own, s] == 1.0
+
+
+@pytest.mark.parametrize("P", [1, 2, 5, 13, 40, 64, 100, 150, 333])
+def test_closed_form_cover_always_valid(P):
+    """C = -A mod P covers for any difference set, any P (the cyclic
+    closed form: A - A = Z_P), with zero search — the large-P fast path."""
+    A = difference_set(P)
+    C = closed_form_cover(P, A)
+    assert len(C) <= len(A)
+    assert is_cover(P, A, C)
+
+
+@pytest.mark.parametrize("P", [4, 9, 25, 40, 81, 100, 121, 200])
+def test_step_and_greedy_covers_valid(P):
+    A = difference_set(P)
+    g = greedy_cover(P, A)
+    assert is_cover(P, A, g)
+    s = step_cover(P, A)
+    if s is not None:
+        assert is_cover(P, A, s)
+
+
+def test_bound_plus_one_infeasible_at_p22():
+    """Pin the documented deviation: for P = 22 (k = 6) no 5-translate
+    cover of the optimal difference set exists, so ceil(P/k) + 1 cannot
+    be promised in general — exhaustively verified (wlog device 0 in the
+    cover, by translational symmetry)."""
+    P = 22
+    A = difference_set(P)
+    assert math.ceil(P / len(A)) + 1 == 5
+    q0 = {a % P for a in A}
+    for rest in itertools.combinations(range(1, P), 4):
+        got = set(q0)
+        for i in rest:
+            got |= {(a + i) % P for a in A}
+        assert len(got) < P
+    assert build_cover(P).n_cover == 6  # and 6 is achieved
+
+
+def test_cover_is_cached_and_pure():
+    a = build_cover(12)
+    b = build_cover(12)
+    assert a is b
+    assert a.devices == b.devices

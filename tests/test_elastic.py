@@ -1,0 +1,40 @@
+"""Elastic rescale plans (launch/elastic.py): identity, grow, shrink."""
+
+import pytest
+
+from repro.core.quorum import cyclic_quorums
+from repro.launch.elastic import rescale
+
+
+@pytest.mark.parametrize("P", [1, 4, 8, 13])
+def test_identity_rescale_is_noop(P):
+    """Regression: an identity rescale must produce an EMPTY fetch plan —
+    every device already holds its quorum and block ids keep their
+    meaning."""
+    plan = rescale(P, P)
+    assert plan.total_fetch_blocks == 0
+    assert plan.fetches == {}
+    assert plan.schedule.P == P
+    assert plan.new_quorums == cyclic_quorums(P)
+
+
+@pytest.mark.parametrize("P_old,P_new", [(4, 8), (5, 12), (1, 6)])
+def test_grow_fetches_full_new_quorums(P_old, P_new):
+    """Across a resize block ids are re-chunked, so every device fetches
+    its entire new quorum — no stale-id reuse."""
+    plan = rescale(P_old, P_new)
+    quorums = cyclic_quorums(P_new)
+    assert set(plan.fetches) == set(range(P_new))
+    for i, S in enumerate(quorums):
+        assert plan.fetches[i] == list(S)
+    k = len(quorums[0])
+    assert plan.total_fetch_blocks == P_new * k
+
+
+@pytest.mark.parametrize("P_old,P_new", [(8, 4), (12, 5), (6, 1)])
+def test_shrink_fetches_full_new_quorums(P_old, P_new):
+    plan = rescale(P_old, P_new)
+    quorums = cyclic_quorums(P_new)
+    assert set(plan.fetches) == set(range(P_new))
+    for i, S in enumerate(quorums):
+        assert plan.fetches[i] == list(S)

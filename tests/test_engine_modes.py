@@ -145,10 +145,33 @@ def test_select_mode_heuristic(monkeypatch):
         _select_mode(sched, x, probe, None)
     monkeypatch.delenv("REPRO_ALLPAIRS_MODE")
 
-    monkeypatch.setattr("repro.core.allpairs._AUTO_BATCH_BYTES", 1)
+    monkeypatch.setenv("REPRO_BATCH_BYTES_LIMIT", "1")
     assert _select_mode(sched, x, probe, None) == "overlap"  # k >= 3
     sched2 = build_schedule(2)  # k = 2: nothing to hide behind
     assert _select_mode(sched2, x, probe, None) == "scan"
+
+
+def test_batch_bytes_limit_read_at_select_time(monkeypatch):
+    """Regression: REPRO_BATCH_BYTES_LIMIT set *after* import must still be
+    honored — the budget is read inside _select_mode, not at module load."""
+    import jax
+    import jax.numpy as jnp
+
+    import repro.core.allpairs as ap
+    from repro.core.scheduler import build_schedule
+
+    sched = build_schedule(8)  # k = 4
+    x = jnp.zeros((16, 4), jnp.float32)
+    probe = jax.ShapeDtypeStruct((16, 3), jnp.float32)
+
+    monkeypatch.delenv("REPRO_ALLPAIRS_MODE", raising=False)
+    monkeypatch.delenv("REPRO_BATCH_BYTES_LIMIT", raising=False)
+    assert ap.auto_batch_bytes() == ap._DEFAULT_BATCH_BYTES
+    assert ap._select_mode(sched, x, probe, None) == "batched"
+    # the module is long imported; shrinking the budget now must take effect
+    monkeypatch.setenv("REPRO_BATCH_BYTES_LIMIT", "1")
+    assert ap.auto_batch_bytes() == 1
+    assert ap._select_mode(sched, x, probe, None) == "overlap"
 
 
 def test_use_kernel_requires_batched_mode():

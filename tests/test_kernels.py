@@ -88,6 +88,31 @@ def test_ssd_chunk_oracle_matches_model():
                                    rtol=1e-4, atol=1e-4)
 
 
+@pytest.mark.parametrize("k,block,d,Q,topk", [(3, 16, 8, 4, 4),
+                                              (4, 12, 24, 5, 8),
+                                              (2, 32, 16, 12, 3),
+                                              (5, 8, 4, 3, 40)])
+@pytest.mark.parametrize("metric", ["dot", "l2"])
+def test_query_topk_kernel(k, block, d, Q, topk, metric):
+    """Fused query scoring + dedup mask + running top-k kernel vs the
+    jnp two-key-sort oracle: exact index match (shared (-score, index)
+    order), including masked rows, a fully-masked slot, non-multiple-of-8
+    Q (wrapper pads), and topk > candidate count (sentinel fill)."""
+    stack = jnp.asarray(RNG.normal(size=(k, block, d)), jnp.float32)
+    queries = jnp.asarray(RNG.normal(size=(Q, d)), jnp.float32)
+    mask = (RNG.uniform(size=(k, block)) > 0.3).astype(np.float32)
+    mask[0] = 0.0                                   # fully-masked slot
+    gidx = RNG.permutation(4 * k * block)[:k * block].reshape(k, block)
+    got_v, got_i = ops.query_topk(stack, queries, jnp.asarray(mask),
+                                  jnp.asarray(gidx, jnp.int32), topk=topk,
+                                  metric=metric)
+    want_v, want_i = ref.query_topk(stack, queries, mask, gidx, topk=topk,
+                                    metric=metric)
+    np.testing.assert_array_equal(np.asarray(got_i), np.asarray(want_i))
+    np.testing.assert_allclose(np.asarray(got_v), np.asarray(want_v),
+                               rtol=1e-5, atol=1e-5)
+
+
 @pytest.mark.parametrize("k,block,n_pairs", [(2, 8, 2), (3, 12, 5),
                                              (4, 16, 9), (3, 8, 4)])
 def test_pairwise_batch_forces(k, block, n_pairs):

@@ -1,0 +1,146 @@
+"""Online query subsystem tests (serving/): selfcheck sweeps in fake-device
+subprocesses (dry-run isolation rule, see tests/test_distributed.py) plus
+single-process unit tests for the merge/selection primitives and the
+auto-mode heuristic."""
+
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+SRC = Path(__file__).resolve().parents[1] / "src"
+
+
+def run_sub(code: str, devices: int) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = str(SRC)
+    r = subprocess.run([sys.executable, "-c", code], env=env,
+                       capture_output=True, text=True, timeout=600)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    return r.stdout
+
+
+@pytest.mark.parametrize("P", [4, 5, 8, 12])
+def test_serving_selfcheck(P):
+    """Acceptance sweep: cover-routed top-k == brute-force oracle (scores
+    and indices) in every mode incl. the fused kernel, for both metrics,
+    through streamed replace and append updates."""
+    out = run_sub(f"from repro.serving.selfcheck import main; main({P})", P)
+    assert "serving selfcheck OK" in out
+    assert "batched,overlap,scan,kernel" in out
+
+
+def test_serving_env_mode_override():
+    """REPRO_ALLPAIRS_MODE steers the serving auto mode too (shared
+    env_mode_override), without changing results."""
+    code = """
+import os
+os.environ["REPRO_ALLPAIRS_MODE"] = "scan"
+from repro.serving.selfcheck import main
+main(4, modes=("auto",))
+"""
+    assert "serving selfcheck OK" in run_sub(code, 4)
+
+
+def test_merge_topk_dedups_and_orders():
+    """merge_topk: duplicate indices (tree-merge wraparound) collapse to
+    one entry; ties break toward the smaller corpus index."""
+    import jax.numpy as jnp
+
+    from repro.kernels.ref import NEG_INF
+    from repro.serving.engine import IDX_SENTINEL, merge_topk, topk_by_score
+
+    va = jnp.asarray([[5.0, 3.0, 1.0]])
+    ia = jnp.asarray([[7, 2, 9]], dtype=jnp.int32)
+    vb = jnp.asarray([[5.0, 3.0, 2.0]])
+    ib = jnp.asarray([[7, 4, 11]], dtype=jnp.int32)   # (5.0, 7) duplicated
+    v, i = merge_topk(va, ia, vb, ib, 4)
+    assert i.tolist() == [[7, 2, 4, 11]]              # tie 3.0: idx 2 < 4
+    assert v.tolist() == [[5.0, 3.0, 3.0, 2.0]]
+
+    # short candidate lists pad with sentinels
+    v, i = topk_by_score(jnp.asarray([[2.0, 4.0]]),
+                         jnp.asarray([[5, 3]], dtype=jnp.int32), 4)
+    assert i.tolist() == [[3, 5, int(IDX_SENTINEL), int(IDX_SENTINEL)]]
+    assert v[0, 2] == NEG_INF and v[0, 3] == NEG_INF
+
+
+def test_serving_select_mode_heuristic(monkeypatch):
+    """Auto heuristic mirrors the batch engine's: env override wins (and
+    conflicts with a fused batch_fn raise), fused kernel forces batched,
+    the byte budget pushes big microbatches to overlap/scan."""
+    import jax.numpy as jnp
+
+    from repro.core.scheduler import build_schedule
+    from repro.serving.engine import _select_mode
+
+    sched = build_schedule(8)   # k = 4
+    q = jnp.zeros((16, 8), jnp.float32)
+
+    monkeypatch.delenv("REPRO_ALLPAIRS_MODE", raising=False)
+    monkeypatch.delenv("REPRO_BATCH_BYTES_LIMIT", raising=False)
+    assert _select_mode(sched, q, 64, None) == "batched"
+    assert _select_mode(sched, q, 64, object()) == "batched"
+
+    monkeypatch.setenv("REPRO_ALLPAIRS_MODE", "overlap")
+    assert _select_mode(sched, q, 64, None) == "overlap"
+    with pytest.raises(ValueError, match="batch_fn"):
+        _select_mode(sched, q, 64, object())
+    monkeypatch.delenv("REPRO_ALLPAIRS_MODE")
+
+    monkeypatch.setenv("REPRO_BATCH_BYTES_LIMIT", "1")
+    assert _select_mode(sched, q, 64, None) == "overlap"   # k >= 3
+    sched2 = build_schedule(2)  # k = 2: nothing to parallelize over
+    assert _select_mode(sched2, q, 64, None) == "scan"
+
+
+def test_use_kernel_requires_batched_mode():
+    """The fused query kernel only replaces the batched local step."""
+    code = """
+import numpy as np, jax
+from repro.serving import ServingCorpus
+from repro.serving.engine import quorum_query_topk
+from repro.core.scheduler import build_schedule
+import jax.numpy as jnp
+
+mesh = jax.make_mesh((2,), ("q",), axis_types=(jax.sharding.AxisType.Auto,))
+sc = ServingCorpus.build(np.zeros((8, 4), np.float32), mesh)
+try:
+    sc.query(np.zeros((2, 4), np.float32), topk=2, mode="scan",
+             use_kernel=True)
+except ValueError as e:
+    assert "use_kernel" in str(e), e
+else:
+    raise AssertionError("no error for use_kernel + scan")
+
+try:
+    quorum_query_topk(jnp.zeros((2, 4)), jnp.zeros((2, 4, 4)),
+                      jnp.ones((2, 4), bool), jnp.ones((2,)), topk=2,
+                      axis_name="q", schedule=build_schedule(2),
+                      mode="overlap", batch_fn=lambda *a: None)
+except ValueError as e:
+    assert "batch_fn" in str(e), e
+else:
+    raise AssertionError("no error for engine-level batch_fn conflict")
+print("SERVE-KERNEL-GUARD-OK")
+"""
+    assert "SERVE-KERNEL-GUARD-OK" in run_sub(code, 2)
+
+
+def test_queries_per_device_work_is_cover_sized():
+    """The routing claim itself: only cover devices get non-zero dedup
+    mask rows, and the per-device scored-row total equals the valid
+    corpus exactly (each row once) — ~N/k of the all-devices baseline per
+    cover device."""
+    from repro.serving.cover import build_cover
+
+    for P in [4, 8, 12, 31]:
+        plan = build_cover(P)
+        rows = np.asarray(plan.mask_table())
+        active = {i for i in range(P) if rows[i].any()}
+        assert active == set(plan.devices)
+        assert rows.sum() == P  # one slot-block per corpus block overall
