@@ -15,6 +15,12 @@ oversubscribes host cores, so minima collapse to the collective-sync floor
 and means are load-noise); on a few-core host the mode spread at small
 n_pairs (P=4 -> 3 pairs) sits near that noise floor, while P=8 (5 pairs)
 separates clearly.
+
+Alongside the timings, a host-side ``placements`` section records, for
+every registered placement defined at each benchmarked P (plus the
+plane-friendly P = 13), the replication factor and the resident
+bytes/device for the N-body working set — the storage axis the placement
+layer trades against (DESIGN.md section 10).
 """
 
 from __future__ import annotations
@@ -75,9 +81,38 @@ print(json.dumps(out))
 """
 
 
+def placement_stats(N: int, Ps=(4, 8, 13)) -> dict:
+    """Per-placement replication + resident bytes/device (host-side math,
+    no jax): the n-body working set is [N, 4] float32 rows, so a device
+    resident under replication k holds k * ceil(N/P) rows.  ``full`` is
+    the all-gather baseline (N rows), cyclic/planes are O(sqrt(P))."""
+    if str(SRC) not in sys.path:
+        sys.path.insert(0, str(SRC))
+    from repro.core.placement import supported_placements
+    row_bytes = 4 * 4                      # 4 float32 features per body
+    out: dict[str, dict] = {}
+    for P in Ps:
+        rows_per_block = -(-N // P)
+        out[str(P)] = {
+            plc.name: {
+                "replication": plc.replication,
+                "bytes_per_device": plc.replication * rows_per_block * row_bytes,
+            }
+            for plc in supported_placements(P)
+        }
+    return out
+
+
 def run(csv_rows, N: int = 1024):
     modes = _modes()
-    results: dict[str, dict] = {"N": N, "timings_s": {}}
+    results: dict[str, dict] = {"N": N, "timings_s": {},
+                                "placements": placement_stats(N)}
+    for P, stats in results["placements"].items():
+        csv_rows.append((
+            f"placement_bytes_P{P}", "",
+            ";".join(f"{name}_k={s['replication']}"
+                     f";{name}_B={s['bytes_per_device']}"
+                     for name, s in stats.items())))
     for P in [4, 8]:
         env = dict(os.environ)
         env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={P}"

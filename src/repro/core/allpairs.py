@@ -36,7 +36,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
-from .scheduler import PairSchedule, build_schedule
+from .scheduler import PairSchedule
 
 __all__ = [
     "quorum_gather",
@@ -329,6 +329,7 @@ def quorum_allpairs(
     mask: jax.Array | None = None,
     mode: str = "auto",
     batch_fn: Callable[..., jax.Array] | None = None,
+    placement=None,
 ):
     """Compute a symmetric all-pairs reduction with quorum replication.
 
@@ -360,11 +361,18 @@ def quorum_allpairs(
     such as kernels.ops.pairwise_batch_forces); implies ``mode="batched"``
     under ``auto``.
 
+    ``placement`` (core.placement.Placement) selects the block-placement
+    layer (DESIGN.md section 10): residency and routing come from the
+    placement's shift structure instead of the default cyclic difference
+    set.  A *full-replication* placement short-circuits to
+    :func:`allgather_allpairs` (the degenerate oracle — no quorum pipeline,
+    so ``mode``/``mask`` don't apply and a ``batch_fn`` is rejected).  When
+    neither ``schedule`` nor ``placement`` is given, the placement is
+    selected by ``REPRO_PLACEMENT`` (default ``auto`` == cyclic, bit-exact
+    with the pre-placement behavior).
+
     Returns the per-block reduced output, shape/type of ``pair_fn``'s out_i.
     """
-    if schedule is None:
-        assert axis_size is not None, "need schedule or axis_size"
-        schedule = build_schedule(axis_size)
     if mode not in ENGINE_MODES + ("auto",):
         raise ValueError(f"mode must be one of {ENGINE_MODES + ('auto',)}, "
                          f"got {mode!r}")
@@ -372,6 +380,34 @@ def quorum_allpairs(
         raise ValueError(
             f"batch_fn only replaces the batched inner step (got "
             f"mode={mode!r}); drop it or use mode='batched'")
+    if placement is not None:
+        if axis_size is not None and placement.P != axis_size:
+            raise ValueError(
+                f"placement is for P={placement.P} but axis_size={axis_size}")
+        if schedule is not None and schedule.P != placement.P:
+            raise ValueError(
+                f"placement is for P={placement.P} but schedule.P="
+                f"{schedule.P}")
+    if placement is None and schedule is None:
+        assert axis_size is not None, "need schedule, placement, or axis_size"
+        from .placement import placement_from_env
+        placement = placement_from_env(axis_size)
+    if placement is not None and placement.full:
+        if batch_fn is not None:
+            raise ValueError(
+                "batch_fn fuses the quorum batched step; the full-replication "
+                "placement routes through allgather_allpairs — drop batch_fn "
+                "or pick a quorum placement")
+        if mask is not None:
+            raise ValueError(
+                "mask expresses per-pair validity over the quorum schedule; "
+                "the full-replication placement routes through "
+                "allgather_allpairs, which would silently ignore it — drop "
+                "the mask or pick a quorum placement")
+        return allgather_allpairs(pair_fn, x, axis_name=axis_name,
+                                  axis_size=placement.P)
+    if schedule is None:
+        schedule = placement.schedule()
 
     if mask is None:
         table = jnp.asarray(pair_mask_table(schedule))  # [P, n_pairs]

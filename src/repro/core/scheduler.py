@@ -118,15 +118,36 @@ def _canonical_pairs(P: int, A: Sequence[int]) -> Dict[int, Tuple[int, int]]:
     return table
 
 
-def build_schedule(P: int) -> PairSchedule:
+def _placement_cover(P: int, placement) -> List[int]:
+    """The difference cover a schedule derives from: ``difference_set(P)``
+    for the default (bit-exact cyclic behavior), or the placement's shift
+    structure.  Duck-typed on ``.shifts`` / ``.P`` so this module needs no
+    import of core.placement (which imports us)."""
+    if placement is None:
+        return difference_set(P)
+    if getattr(placement, "P", P) != P:
+        raise ValueError(f"placement {placement!r} does not match P={P}")
+    shifts = placement.shifts
+    if shifts is None:
+        raise ValueError(
+            f"placement {getattr(placement, 'name', placement)!r} has no "
+            "cyclic shift structure; the shift-based scheduler cannot use it")
+    return [int(a) % P for a in shifts]
+
+
+def build_schedule(P: int, placement=None) -> PairSchedule:
     """Full (symmetric) all-pairs schedule: one entry per d in 0..floor(P/2).
 
     Every unordered pair {x, y} (including self-pairs x==y via d=0) is computed
     by exactly one device, except d = P/2 for even P which is owned twice (the
     cyclic rule cannot halve an odd orbit); the engine halves that pair's work
     by masking (see core.allpairs), keeping exact single-coverage semantics.
+
+    ``placement`` (a core.placement.Placement) substitutes its shift
+    structure for the default ``difference_set(P)`` — the schedule machinery
+    is placement-agnostic as long as residency is cyclic.
     """
-    A = difference_set(P)
+    A = _placement_cover(P, placement)
     table = _canonical_pairs(P, A)
     slot_of = {a: s for s, a in enumerate(sorted(A))}
 
@@ -172,7 +193,7 @@ class CausalSchedule:
         return int(self.pair_slots.shape[0])
 
 
-def build_causal_schedule(P: int) -> CausalSchedule:
+def build_causal_schedule(P: int, placement=None) -> CausalSchedule:
     """Schedule every causal block pair (q, kv), kv <= q, exactly once.
 
     Differences d = q - kv range over 0..P-1 (no modular wraparound in
@@ -183,8 +204,9 @@ def build_causal_schedule(P: int) -> CausalSchedule:
     rule assigns each to a distinct device, so coverage is exact.
     Load per device = sum over d of [valid] ~ (P+1)/2 on average; worst-case
     imbalance is bounded by the quorum structure and reported by tests.
+    ``placement`` substitutes its shift structure, as in build_schedule.
     """
-    A = difference_set(P)
+    A = _placement_cover(P, placement)
     table = _canonical_pairs(P, A)
     slot_of = {a: s for s, a in enumerate(sorted(A))}
     shifts = np.asarray(sorted(A), dtype=np.int32)
@@ -234,7 +256,8 @@ class ReassignPlan:
                 + sum(len(v) for v in self.fetch_pairs.values()))
 
 
-def reassign(schedule: PairSchedule, failed: Sequence[int]) -> ReassignPlan:
+def reassign(schedule: PairSchedule, failed: Sequence[int],
+             placement=None) -> ReassignPlan:
     """Reassign failed devices' pair lists to quorum peers.
 
     Two tiers (DESIGN.md section 8):
@@ -246,10 +269,19 @@ def reassign(schedule: PairSchedule, failed: Sequence[int]) -> ReassignPlan:
          a block is lost only if all k of its holders fail simultaneously —
          then restart-from-checkpoint is the only correct response).
     Greedy min-load assignment in both tiers.
+
+    ``placement`` supplies the residency sets (any core.placement.Placement,
+    not just cyclic — reassignment itself only needs *sets*); the schedule
+    must derive from the same placement or coverage claims break.
     """
     failed_set = set(failed)
     P = schedule.P
-    quorums = cyclic_quorums(P)
+    if placement is None:
+        quorums: Sequence[Sequence[int]] = cyclic_quorums(P)
+    else:
+        if getattr(placement, "P", P) != P:
+            raise ValueError(f"placement {placement!r} does not match P={P}")
+        quorums = [sorted(S) for S in placement.residency_sets]
     pair_holders: Dict[Tuple[int, int], List[int]] = {}
     block_holders: Dict[int, List[int]] = {}
     for i, S in enumerate(quorums):

@@ -1,13 +1,19 @@
 """Distributed self-check for the quorum all-pairs engine.
 
 Run as ``XLA_FLAGS=--xla_force_host_platform_device_count=<P> python -m
-repro.core.selfcheck [P] [modes]`` — the test suite invokes this in a
-subprocess so the main pytest process keeps a single CPU device (see
-launch/dryrun.py note).  ``modes`` is an optional comma-separated subset of
-the engine modes (default: all of batched, overlap, scan).
+repro.core.selfcheck [P] [modes] [placement]`` — the test suite invokes
+this in a subprocess so the main pytest process keeps a single CPU device
+(see launch/dryrun.py note).  ``modes`` is an optional comma-separated
+subset of the engine modes (default: all of batched, overlap, scan).
+``placement`` is an optional placement spec (a registered name, ``auto``,
+or ``plane``); unset it defers to the ``REPRO_PLACEMENT`` env var — the
+CI placement matrix sets only the env var.
 
-Checks, for a toy n-body-style interaction: every engine execution mode ==
-allgather_allpairs == pure-numpy O(N^2) oracle.
+Checks, for a toy n-body-style interaction: every engine execution mode
+under the selected placement == allgather_allpairs == pure-numpy O(N^2)
+oracle.  A full-replication placement delegates to allgather inside the
+engine, so the check degenerates to oracle equality (still asserted per
+requested mode).
 """
 
 from __future__ import annotations
@@ -21,7 +27,7 @@ from jax.sharding import PartitionSpec as P
 
 from .allpairs import (ENGINE_MODES, allgather_allpairs, pair_mask_table,
                        quorum_allpairs)
-from .scheduler import build_schedule
+from .placement import placement_from_env, resolve_placement
 
 
 def pairwise_force(bi, bj):
@@ -45,21 +51,29 @@ def oracle(x: np.ndarray) -> np.ndarray:
 
 
 def main(nblocks: int | None = None,
-         modes: tuple[str, ...] = ENGINE_MODES) -> None:
+         modes: tuple[str, ...] = ENGINE_MODES,
+         placement: str | None = None) -> None:
     devs = jax.devices()
     Pn = nblocks or len(devs)
     assert len(devs) >= Pn, f"need {Pn} devices, have {len(devs)}"
+    plc = (placement_from_env(Pn) if placement is None
+           else resolve_placement(placement, Pn))
     mesh = jax.make_mesh((Pn,), ("q",), devices=devs[:Pn])
-    sched = build_schedule(Pn)
+    sched = None if plc.full else plc.schedule()
     block = 8
     rng = np.random.default_rng(0)
     x = rng.normal(size=(Pn * block, 3)).astype(np.float32)
-    masks = pair_mask_table(sched)  # [P, n_pairs]
+    masks = (np.ones((Pn, 1), np.float32) if sched is None
+             else pair_mask_table(sched))  # [P, n_pairs]
 
     def run_quorum(xs, ms, mode):
         def f(xb, mb):
+            if plc.full:  # engine routes to allgather; mask does not apply
+                return quorum_allpairs(pairwise_force, xb, axis_name="q",
+                                       mode=mode, placement=plc)
             return quorum_allpairs(pairwise_force, xb, axis_name="q",
-                                   schedule=sched, mask=mb, mode=mode)
+                                   schedule=sched, mask=mb, mode=mode,
+                                   placement=plc)
         return jax.jit(jax.shard_map(f, mesh=mesh,
                                      in_specs=(P("q"), P("q")),
                                      out_specs=P("q")))(xs, ms)
@@ -82,10 +96,13 @@ def main(nblocks: int | None = None,
         np.testing.assert_allclose(got_q, got_a, rtol=2e-4, atol=2e-5,
                                    err_msg=f"mode={mode} vs allgather")
         max_err = max(max_err, float(np.abs(got_q - want).max()))
-    print(f"selfcheck OK: P={Pn} k={sched.k} pairs/dev={sched.n_pairs} "
+    pairs = "P" if plc.full else str(sched.n_pairs)
+    print(f"selfcheck OK: P={Pn} placement={plc.describe()} "
+          f"k={plc.replication} pairs/dev={pairs} "
           f"modes={','.join(modes)} max|err|={max_err:.2e}")
 
 
 if __name__ == "__main__":
     main(int(sys.argv[1]) if len(sys.argv) > 1 else None,
-         tuple(sys.argv[2].split(",")) if len(sys.argv) > 2 else ENGINE_MODES)
+         tuple(sys.argv[2].split(",")) if len(sys.argv) > 2 else ENGINE_MODES,
+         sys.argv[3] if len(sys.argv) > 3 else None)

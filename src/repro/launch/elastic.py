@@ -1,11 +1,15 @@
 """Elastic scaling + failure handling for the quorum all-pairs runtime.
 
-The quorum schedule is a pure function of P (core.quorum difference-set
-construction is O(ms), memo-cached), so the control plane here is small:
+The schedule and residency are pure functions of (P, placement)
+(core.placement; difference-set construction is O(ms), memo-cached), so
+the control plane here is small:
 
-  * ``rescale(P_old, P_new)``    — derive the new schedule + the minimal
+  * ``rescale(P_old, P_new, ...)`` — derive the new schedule + the minimal
     block-movement plan (which devices must fetch which blocks to satisfy
-    their new quorum), used when a pod grows/shrinks.
+    their new residency), used when a pod grows/shrinks — and, at equal P,
+    when the *placement* changes (e.g. a live cyclic -> projective-plane
+    migration): block ids keep their meaning, so each device fetches only
+    its residency delta.
   * ``failover(schedule, failed)`` — wrap core.scheduler.reassign into a
     runnable plan (paper section 6 "quorum redundancy" future work).
 
@@ -16,10 +20,11 @@ re-sharding with jax.device_put under the new mesh.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict, List, Sequence
 
-from ..core.quorum import cyclic_quorums
-from ..core.scheduler import PairSchedule, ReassignPlan, build_schedule, reassign
+from ..core.placement import (Placement, placement_from_env,
+                              resolve_placement)
+from ..core.scheduler import PairSchedule, ReassignPlan, reassign
 
 
 @dataclasses.dataclass(frozen=True)
@@ -27,38 +32,70 @@ class RescalePlan:
     P_old: int
     P_new: int
     schedule: PairSchedule
-    # device -> global block ids it must hold afterwards (its new quorum)
+    # device -> global block ids it must hold afterwards (its new residency)
     new_quorums: List[List[int]]
     # device -> blocks it needs but cannot derive locally (must fetch)
     fetches: Dict[int, List[int]]
+    # the placements the plan moves between (equal => pure resize logic)
+    placement_old: Placement | None = None
+    placement_new: Placement | None = None
 
     @property
     def total_fetch_blocks(self) -> int:
         return sum(len(v) for v in self.fetches.values())
 
+    @property
+    def is_migration(self) -> bool:
+        """True when the plan changes placement at constant P (block ids
+        keep their meaning; only the residency delta moves)."""
+        return (self.P_old == self.P_new
+                and self.placement_old != self.placement_new)
 
-def rescale(P_old: int, P_new: int) -> RescalePlan:
-    """Plan a quorum-axis resize.  Blocks are re-chunked to P_new equal
-    parts by the data layer; this plan reports which *new* quorum members
-    each device must obtain (an upper bound when old shards can be reused).
 
-    An identity rescale (P_old == P_new) is a no-op: block ids keep their
-    meaning and every device already holds its full quorum, so the fetch
-    plan is empty.  Across a real resize block ids are re-chunked and
-    nothing previously held is reusable, so every device fetches its whole
-    new quorum.
+def rescale(P_old: int, P_new: int, placement_old=None,
+            placement_new=None) -> RescalePlan:
+    """Plan a quorum-axis resize and/or placement migration.
+
+    Placement specs default to the ``REPRO_PLACEMENT`` selection at each
+    P (auto == cyclic when unset — the historical behavior).  Three
+    regimes, by (P, placement) delta:
+
+      * identity (same P, same placement) — a no-op: block ids keep their
+        meaning and every device already holds its full residency, so the
+        fetch plan is empty.
+      * migration (same P, different placement) — block ids keep their
+        meaning, so device i fetches exactly ``new_residency(i) -
+        old_residency(i)``: a cyclic -> plane migration at a
+        plane-friendly P moves only the residency delta, not the corpus.
+      * resize (different P) — blocks are re-chunked to P_new equal parts
+        by the data layer, nothing previously held is reusable, and every
+        device fetches its whole new residency (an upper bound when old
+        shards can be reused).
     """
-    sched = build_schedule(P_new)
-    quorums = cyclic_quorums(P_new)
+    plc_old = (placement_from_env(P_old) if placement_old is None
+               else resolve_placement(placement_old, P_old))
+    plc_new = (placement_from_env(P_new) if placement_new is None
+               else resolve_placement(placement_new, P_new))
+    sched = plc_new.schedule()
+    new_res = [sorted(plc_new.residency(i)) for i in range(P_new)]
     fetches: Dict[int, List[int]] = {}
-    if P_old != P_new:
-        fetches = {i: list(S) for i, S in enumerate(quorums)}
+    if P_old == P_new:
+        for i in range(P_new):
+            delta = sorted(set(new_res[i]) - plc_old.residency(i))
+            if delta:
+                fetches[i] = delta
+    else:
+        fetches = {i: list(S) for i, S in enumerate(new_res)}
     return RescalePlan(P_old=P_old, P_new=P_new, schedule=sched,
-                       new_quorums=quorums, fetches=fetches)
+                       new_quorums=new_res, fetches=fetches,
+                       placement_old=plc_old, placement_new=plc_new)
 
 
-def failover(schedule: PairSchedule, failed: Sequence[int]) -> ReassignPlan:
-    """Work reassignment after device failure (no resize): quorum peers that
+def failover(schedule: PairSchedule, failed: Sequence[int],
+             placement=None) -> ReassignPlan:
+    """Work reassignment after device failure (no resize): peers that
     co-hold a failed device's pairs absorb them; pairs whose co-residency
-    died fetch one block from a surviving holder.  See scheduler.reassign."""
-    return reassign(schedule, failed)
+    died fetch one block from a surviving holder.  ``placement`` supplies
+    the residency sets when the schedule derives from a non-default
+    placement.  See scheduler.reassign."""
+    return reassign(schedule, failed, placement=placement)

@@ -30,17 +30,24 @@ The **dedup mask** assigns every block to exactly one (cover device, slot)
 so replicated blocks score each query exactly once; `mask_table` turns the
 assignment into a [P, k] sharded operand (zero rows for devices outside
 the cover), mirroring ``core.allpairs.pair_mask_table``.
+
+Covers are built over any registered *placement* (core.placement,
+DESIGN.md section 10): ``build_cover(P, placement)`` unions that
+placement's residency sets — plane placements give plane covers, full
+replication collapses to one device — and :func:`exact_cover_sets` runs
+the branch-and-bound over arbitrary residency sets (the cyclic
+:func:`exact_cover` wrapper keeps bit-identical historical results).
 """
 
 from __future__ import annotations
 
 import dataclasses
 import math
-from typing import List, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from ..core.quorum import difference_set
+from ..core.placement import get_placement, resolve_placement
 
 __all__ = [
     "CoverPlan",
@@ -49,6 +56,7 @@ __all__ = [
     "step_cover",
     "greedy_cover",
     "exact_cover",
+    "exact_cover_sets",
     "is_cover",
 ]
 
@@ -119,16 +127,28 @@ def greedy_cover(P: int, A: Sequence[int]) -> List[int]:
     return sorted(cover)
 
 
-def exact_cover(P: int, A: Sequence[int], ub: int) -> List[int] | None:
-    """Minimal cover by branch-and-bound, or None if nothing beats ``ub``.
+def exact_cover_sets(residency: Sequence[Sequence[int]], ub: int, *,
+                     holders: Optional[Dict[int, List[int]]] = None,
+                     pin_first: Optional[int] = None) -> List[int] | None:
+    """Minimal device cover of *arbitrary* residency sets by
+    branch-and-bound, or None if nothing beats ``ub``.
 
-    Branches on the k holders of the smallest uncovered block; prunes on
-    ``|cover| + ceil(|uncovered| / k) >= ub``.  By translational symmetry
-    some optimal cover contains device 0, so the root is pinned there.
+    ``residency[i]`` is the block set device i holds (any placement, not
+    just cyclic translates).  Branches on the holders of the smallest
+    uncovered block; prunes on ``|cover| + ceil(|uncovered| / kmax) >=
+    ub`` with kmax the largest residency.  ``pin_first`` roots the search
+    at one device — only sound under a symmetry argument (for cyclic
+    translates, some optimal cover contains device 0), so the default
+    leaves the root open.  ``holders`` optionally fixes the per-block
+    branch order (the cyclic wrapper uses the historical shift order so
+    results stay bit-identical with the pre-generalization search).
     """
-    k = len(A)
-    quorums = [_quorum(P, A, i) for i in range(P)]
-    holders = {b: [(b - a) % P for a in sorted(A)] for b in range(P)}
+    sets = [frozenset(S) for S in residency]
+    blocks = frozenset().union(*sets) if sets else frozenset()
+    kmax = max((len(S) for S in sets), default=0)
+    if holders is None:
+        holders = {b: [i for i, S in enumerate(sets) if b in S]
+                   for b in blocks}
     best: List[int] | None = None
     bound = ub
 
@@ -139,18 +159,31 @@ def exact_cover(P: int, A: Sequence[int], ub: int) -> List[int] | None:
                 bound = len(cover)
                 best = list(cover)
             return
-        if len(cover) + math.ceil(len(uncovered) / k) >= bound:
+        if len(cover) + math.ceil(len(uncovered) / kmax) >= bound:
             return
         b = min(uncovered)
         for i in holders[b]:
             if i in cover:  # pragma: no cover - holders of uncovered b aren't in cover
                 continue
             cover.append(i)
-            bb(cover, uncovered - quorums[i])
+            bb(cover, uncovered - sets[i])
             cover.pop()
 
-    bb([0], frozenset(range(P)) - quorums[0])
+    if pin_first is None:
+        bb([], blocks)
+    else:
+        bb([pin_first], blocks - sets[pin_first])
     return sorted(best) if best is not None else None
+
+
+def exact_cover(P: int, A: Sequence[int], ub: int) -> List[int] | None:
+    """Minimal cover of the P cyclic translates of A, or None if nothing
+    beats ``ub``.  Thin wrapper over :func:`exact_cover_sets` pinning
+    device 0 (sound by translational symmetry) and branching holders in
+    the historical shift order, so cyclic results are unchanged."""
+    sets = [_quorum(P, A, i) for i in range(P)]
+    holders = {b: [(b - a) % P for a in sorted(A)] for b in range(P)}
+    return exact_cover_sets(sets, ub, holders=holders, pin_first=0)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -160,7 +193,10 @@ class CoverPlan:
     Attributes
     ----------
     P : quorum axis size.
-    A : the (P,k)-difference set the quorums derive from (sorted).
+    A : the placement's shift structure (sorted difference cover) the
+        residency derives from — ``difference_set(P)`` for the default
+        cyclic placement.
+    placement : name of the placement the plan was built over.
     devices : sorted cover device ids; their quorums union to all P blocks.
     block_owner : np [P] int32 — the cover device assigned to score each
         block (the first cover device holding it): the dedup rule.
@@ -175,6 +211,7 @@ class CoverPlan:
     devices: Tuple[int, ...]
     block_owner: np.ndarray
     slot_mask: np.ndarray
+    placement: str = "cyclic"
 
     @property
     def k(self) -> int:
@@ -192,17 +229,29 @@ class CoverPlan:
 _COVER_CACHE: dict = {}
 
 
-def build_cover(P: int) -> CoverPlan:
+def build_cover(P: int, placement=None) -> CoverPlan:
     """Build (and memo-cache) the smallest verified cover plan for P.
 
-    Pure function of P (like the schedules), so elastic resize just
-    recomputes it.
+    Pure function of (P, placement) — like the schedules — so elastic
+    resize just recomputes it.  ``placement`` is a
+    ``core.placement.Placement`` instance or spec name; None keeps the
+    bit-exact default (the cyclic placement, whose shifts are
+    ``difference_set(P)``).  Any shift-structured placement works: the
+    residency sets the cover unions are the P translates of its shifts
+    (for full replication the plan collapses to a single device).
     """
     if P < 1:
         raise ValueError(f"P must be >= 1, got {P}")
-    if P in _COVER_CACHE:
-        return _COVER_CACHE[P]
-    A = difference_set(P)
+    plc = (get_placement("cyclic", P) if placement is None
+           else resolve_placement(placement, P))
+    key = (P, plc.name)
+    if key in _COVER_CACHE:
+        return _COVER_CACHE[key]
+    if plc.shifts is None:
+        raise NotImplementedError(
+            f"placement {plc.name!r} has no shift structure; CoverPlan's "
+            "slot mask is defined over shift slots")
+    A = list(plc.shifts)
     k = len(A)
 
     candidates = [closed_form_cover(P, A), greedy_cover(P, A)]
@@ -234,6 +283,7 @@ def build_cover(P: int) -> CoverPlan:
                 slot_mask[i, s] = 1.0
 
     plan = CoverPlan(P=P, A=tuple(shifts), devices=devices,
-                     block_owner=block_owner, slot_mask=slot_mask)
-    _COVER_CACHE[P] = plan
+                     block_owner=block_owner, slot_mask=slot_mask,
+                     placement=plc.name)
+    _COVER_CACHE[key] = plan
     return plan

@@ -47,7 +47,9 @@ from jax.sharding import PartitionSpec as PS
 
 from ..core.allpairs import (ENGINE_MODES, auto_batch_bytes,
                              env_mode_override)
-from ..core.scheduler import PairSchedule, build_schedule
+from ..core.placement import (Placement, get_placement, placement_from_env,
+                              resolve_placement)
+from ..core.scheduler import PairSchedule
 from ..kernels.ref import IDX_SENTINEL, NEG_INF, QUERY_METRICS as METRICS
 from .cover import build_cover
 from .stream import ServingState, build_state, replace_block
@@ -255,15 +257,22 @@ def quorum_query_topk(
 
 @functools.lru_cache(maxsize=64)
 def query_fn(mesh, axis_name: str, topk: int, mode: str, metric: str,
-             use_kernel: bool):
+             use_kernel: bool, placement: Placement | None = None):
     """Build (and cache) the jitted distributed query program.
 
     Returns ``f(queries [Q, d], state) -> (scores [Q, topk], idx [Q,
     topk])`` — re-jits only per microbatch shape, like nbody.forces_fn.
+    ``placement`` selects the residency layer (None = cyclic; pass a
+    memoized Placement — it is part of the program cache key).  The
+    serving data plane is the generic shift pipeline for every placement
+    (full replication degenerates to a one-device cover over an
+    everything-resident stack; no allgather special case needed).
     """
     P = mesh.shape[axis_name]
-    sched = build_schedule(P)
-    plan = build_cover(P)
+    if placement is None:
+        placement = get_placement("cyclic", P)
+    sched = placement.schedule()
+    plan = build_cover(P, placement)
     mask_table = jnp.asarray(plan.mask_table())          # [P, k]
     batch_fn = None
     if use_kernel:
@@ -304,29 +313,37 @@ class ServingCorpus:
     """
 
     def __init__(self, mesh, axis_name: str, state: ServingState,
-                 filled: np.ndarray):
+                 filled: np.ndarray, placement: Placement | None = None):
         self.mesh = mesh
         self.axis_name = axis_name
         self.state = state
         self.filled = filled                 # [P] valid-row count per block
         self.P = mesh.shape[axis_name]
+        self.placement = (get_placement("cyclic", self.P)
+                          if placement is None
+                          else resolve_placement(placement, self.P))
         self.block = state.shard.shape[0] // self.P
         self.d = state.shard.shape[1]
-        self.schedule = build_schedule(self.P)
-        self.plan = build_cover(self.P)
+        self.schedule = self.placement.schedule()
+        self.plan = build_cover(self.P, self.placement)
 
     @classmethod
     def build(cls, corpus: np.ndarray, mesh, axis_name: str = "q",
-              block: int | None = None) -> "ServingCorpus":
+              block: int | None = None, placement=None) -> "ServingCorpus":
         """``block`` (optional) reserves a larger per-block row capacity
-        than ceil(N/P), leaving empty slots for streamed appends."""
-        state = build_state(np.asarray(corpus, np.float32), mesh, axis_name,
-                            block=block)
+        than ceil(N/P), leaving empty slots for streamed appends.
+        ``placement`` picks the residency layer (a Placement or spec
+        name); None defers to ``REPRO_PLACEMENT`` (default auto ==
+        cyclic)."""
         P = mesh.shape[axis_name]
+        plc = (placement_from_env(P) if placement is None
+               else resolve_placement(placement, P))
+        state = build_state(np.asarray(corpus, np.float32), mesh, axis_name,
+                            block=block, placement=plc)
         block = state.shard.shape[0] // P
         N = corpus.shape[0]
         filled = np.clip(N - block * np.arange(P), 0, block).astype(np.int64)
-        return cls(mesh, axis_name, state, filled)
+        return cls(mesh, axis_name, state, filled, placement=plc)
 
     @property
     def n_valid(self) -> int:
@@ -336,7 +353,7 @@ class ServingCorpus:
               metric: str = "dot", use_kernel: bool = False):
         """queries [Q, d] -> (scores [Q, topk], global row ids [Q, topk])."""
         run = query_fn(self.mesh, self.axis_name, topk, mode, metric,
-                       use_kernel)
+                       use_kernel, self.placement)
         return run(jnp.asarray(queries, jnp.float32), self.state)
 
     def replace_block(self, b: int, data, nvalid: int | None = None) -> None:
@@ -344,7 +361,8 @@ class ServingCorpus:
         if not 0 <= b < self.P:
             raise ValueError(f"block id {b} out of range [0, {self.P})")
         self.state = replace_block(self.state, self.mesh, self.axis_name,
-                                   b, np.asarray(data, np.float32), nvalid)
+                                   b, np.asarray(data, np.float32), nvalid,
+                                   placement=self.placement)
         self.filled[b] = (data.shape[0] if nvalid is None else nvalid)
 
     def append_block(self, data) -> int:

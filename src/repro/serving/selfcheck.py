@@ -1,10 +1,14 @@
 """Distributed self-check for the online query serving subsystem.
 
 Run as ``XLA_FLAGS=--xla_force_host_platform_device_count=<P> python -m
-repro.serving.selfcheck [P] [modes]`` — the test suite invokes this in a
-subprocess (dry-run isolation rule).  ``modes`` is an optional
-comma-separated subset of the engine modes plus ``kernel`` (the fused
-Pallas batched path); default: all of batched, overlap, scan, kernel.
+repro.serving.selfcheck [P] [modes] [placement]`` — the test suite
+invokes this in a subprocess (dry-run isolation rule).  ``modes`` is an
+optional comma-separated subset of the engine modes plus ``kernel`` (the
+fused Pallas batched path); default: all of batched, overlap, scan,
+kernel.  ``placement`` is an optional placement spec (registered name,
+``auto``, or ``plane``); unset it defers to ``REPRO_PLACEMENT`` — plane
+placements route covers over plane residency, full replication serves
+from a single-device cover.
 
 Checks, against a single-host brute-force oracle (same score formula and
 (-score, index) tie order; indices are global row ids in the P*block slot
@@ -25,6 +29,7 @@ import jax
 import numpy as np
 
 from ..core.allpairs import ENGINE_MODES
+from ..core.placement import placement_from_env, resolve_placement
 from .engine import IDX_SENTINEL, ServingCorpus
 
 CHECK_MODES = ENGINE_MODES + ("kernel",)
@@ -67,10 +72,13 @@ def check(full: np.ndarray, valid: np.ndarray, sc: ServingCorpus,
 
 
 def main(nblocks: int | None = None,
-         modes: tuple[str, ...] = CHECK_MODES) -> None:
+         modes: tuple[str, ...] = CHECK_MODES,
+         placement: str | None = None) -> None:
     devs = jax.devices()
     Pn = nblocks or len(devs)
     assert len(devs) >= Pn, f"need {Pn} devices, have {len(devs)}"
+    plc = (placement_from_env(Pn) if placement is None
+           else resolve_placement(placement, Pn))
     mesh = jax.make_mesh((Pn,), ("q",), devices=devs[:Pn])
     block, d, Q, topk = 16, 24, 12, 8
     rng = np.random.default_rng(0)
@@ -81,7 +89,7 @@ def main(nblocks: int | None = None,
     corpus = rng.normal(size=(N, d)).astype(np.float32)
     queries = rng.normal(size=(Q, d)).astype(np.float32)
 
-    sc = ServingCorpus.build(corpus, mesh, block=block)
+    sc = ServingCorpus.build(corpus, mesh, block=block, placement=plc)
     # host mirror in the global P*block slot numbering
     full = np.zeros((Pn * block, d), np.float32)
     full[:N] = corpus
@@ -106,11 +114,12 @@ def main(nblocks: int | None = None,
         check(full, valid, sc, queries, topk, modes, "append")
 
     plan = sc.plan
-    print(f"serving selfcheck OK: P={Pn} k={plan.k} "
-          f"cover={plan.n_cover}/{Pn} modes={','.join(modes)} "
+    print(f"serving selfcheck OK: P={Pn} placement={plc.describe()} "
+          f"k={plan.k} cover={plan.n_cover}/{Pn} modes={','.join(modes)} "
           f"topk={topk} N_valid={int(valid.sum())}")
 
 
 if __name__ == "__main__":
     main(int(sys.argv[1]) if len(sys.argv) > 1 else None,
-         tuple(sys.argv[2].split(",")) if len(sys.argv) > 2 else CHECK_MODES)
+         tuple(sys.argv[2].split(",")) if len(sys.argv) > 2 else CHECK_MODES,
+         sys.argv[3] if len(sys.argv) > 3 else None)

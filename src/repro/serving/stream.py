@@ -32,7 +32,7 @@ import numpy as np
 from jax.sharding import PartitionSpec as PS
 
 from ..core.allpairs import quorum_gather
-from ..core.scheduler import PairSchedule, build_schedule
+from ..core.placement import Placement, placement_from_env, resolve_placement
 
 __all__ = ["ServingState", "build_state", "update_fn", "replace_block"]
 
@@ -60,9 +60,11 @@ def _with_valid(shard: jax.Array, valid: jax.Array) -> jax.Array:
 
 
 @functools.lru_cache(maxsize=32)
-def _build_fn(mesh, axis_name: str, P: int):
-    """Jitted initial-residency program: shard -> quorum stack (one gather)."""
-    sched = build_schedule(P)
+def _build_fn(mesh, axis_name: str, P: int, placement: Placement):
+    """Jitted initial-residency program: shard -> quorum stack (one gather).
+    ``placement`` supplies the shift structure (and is part of the program
+    cache key — placements are hashable memoized value objects)."""
+    sched = placement.schedule()
 
     def f(shard, valid):
         stacked = quorum_gather(_with_valid(shard, valid), sched, axis_name)
@@ -74,7 +76,7 @@ def _build_fn(mesh, axis_name: str, P: int):
 
 
 @functools.lru_cache(maxsize=32)
-def update_fn(mesh, axis_name: str, P: int):
+def update_fn(mesh, axis_name: str, P: int, placement: Placement):
     """Jitted update program shared by replace and append.
 
     ``f(shard, valid, b, data, nvalid)``: the owner of block ``b``
@@ -82,9 +84,11 @@ def update_fn(mesh, axis_name: str, P: int):
     k cyclic shifts redistribute the updated shards — each holder of b
     receives the new block at its matching slot, every other slot arrives
     unchanged (the stack invariant: slot s on device i always holds block
-    (i + A[s]) % P), so the gather *is* the propagation.
+    (i + A[s]) % P with A the placement's shifts), so the gather *is* the
+    propagation.  Works for any shift-structured placement, including
+    full replication (where every device is a holder).
     """
-    sched = build_schedule(P)
+    sched = placement.schedule()
 
     def f(shard, valid, b, data, nvalid):
         i = jax.lax.axis_index(axis_name)
@@ -103,29 +107,37 @@ def update_fn(mesh, axis_name: str, P: int):
 
 
 def build_state(corpus: np.ndarray, mesh, axis_name: str = "q",
-                block: int | None = None) -> ServingState:
+                block: int | None = None, placement=None) -> ServingState:
     """Chunk ``corpus`` [N, d] into P blocks (zero-padded; padding rows
     invalid) and build the resident quorum stacks with one gather.
     ``block`` overrides the per-block row capacity (>= ceil(N/P)) to leave
-    empty slots for streamed appends."""
+    empty slots for streamed appends.  ``placement`` picks the residency
+    layer (None defers to ``REPRO_PLACEMENT`` / auto == cyclic)."""
     P = mesh.shape[axis_name]
+    plc = (placement_from_env(P) if placement is None
+           else resolve_placement(placement, P))
     N, d = corpus.shape
     block = max(block or 1, 1, -(-N // P))
     pad = P * block - N
     shard = jnp.asarray(np.pad(np.asarray(corpus, np.float32),
                                ((0, pad), (0, 0))))
     valid = jnp.arange(P * block) < N
-    stack, stack_valid = _build_fn(mesh, axis_name, P)(shard, valid)
+    stack, stack_valid = _build_fn(mesh, axis_name, P, plc)(shard, valid)
     return ServingState(shard=shard, valid=valid, stack=stack,
                         stack_valid=stack_valid)
 
 
 def replace_block(state: ServingState, mesh, axis_name: str, b: int,
-                  data: np.ndarray, nvalid: int | None = None) -> ServingState:
+                  data: np.ndarray, nvalid: int | None = None,
+                  placement=None) -> ServingState:
     """Replace block ``b`` with ``data`` ([rows <= block, d]) and push it to
     the k holder quorums.  Rows beyond ``nvalid`` (default: data row count)
-    are marked invalid; data is zero-padded to the block size."""
+    are marked invalid; data is zero-padded to the block size.
+    ``placement`` must match the one the state was built with (the stack
+    layout is placement-defined)."""
     P = mesh.shape[axis_name]
+    plc = (placement_from_env(P) if placement is None
+           else resolve_placement(placement, P))
     block = state.shard.shape[0] // P
     rows, d = data.shape
     if rows > block:
@@ -136,7 +148,7 @@ def replace_block(state: ServingState, mesh, axis_name: str, b: int,
                          "rows must not be marked valid")
     full = np.zeros((block, d), np.float32)
     full[:rows] = np.asarray(data, np.float32)
-    out = update_fn(mesh, axis_name, P)(
+    out = update_fn(mesh, axis_name, P, plc)(
         state.shard, state.valid,
         jnp.int32(b), jnp.asarray(full), jnp.int32(nvalid))
     return ServingState(*out)

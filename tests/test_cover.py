@@ -15,9 +15,11 @@ import math
 import numpy as np
 import pytest
 
+from repro.core.placement import get_placement, plane_placement
 from repro.core.quorum import difference_set
 from repro.serving.cover import (build_cover, closed_form_cover,
-                                 greedy_cover, is_cover, step_cover)
+                                 exact_cover, exact_cover_sets, greedy_cover,
+                                 is_cover, step_cover)
 
 
 @pytest.mark.parametrize("P", list(range(1, 65)))
@@ -94,3 +96,89 @@ def test_cover_is_cached_and_pure():
     b = build_cover(12)
     assert a is b
     assert a.devices == b.devices
+    # per-placement plans are cached separately and don't collide
+    c = build_cover(12, "affine")
+    assert c is build_cover(12, get_placement("affine", 12))
+    assert c.placement == "affine" and a.placement == "cyclic"
+
+
+# ---------------------------------------------------------------------------
+# Placement sweep: plane covers (ISSUE satellite)
+# ---------------------------------------------------------------------------
+
+_PLANE_P = [6, 7, 12, 13, 21, 31, 57]
+
+
+@pytest.mark.parametrize("P", _PLANE_P)
+def test_plane_cover_properties_and_size_pin(P):
+    """Plane placements route covers too, and at plane-friendly P the
+    plane cover is never larger than the cyclic one (the plane's
+    replication is the theoretical optimum, so its translates cover at
+    least as efficiently)."""
+    plc = plane_placement(P)
+    assert plc is not None
+    plan = build_cover(P, plc)
+    # validity: union of the cover's residency is everything
+    got: set = set()
+    for i in plan.devices:
+        got |= plc.residency(i)
+    assert got == set(range(P))
+    # dedup mask: each block scored exactly once
+    hits = np.zeros(P, int)
+    for i in range(P):
+        for s, a in enumerate(plan.A):
+            if plan.slot_mask[i, s]:
+                hits[(a + i) % P] += 1
+    assert (hits == 1).all()
+    # the pin: plane cover <= cyclic cover at the same P
+    assert plan.n_cover <= build_cover(P).n_cover
+
+
+@pytest.mark.parametrize("P", [2, 5, 8, 31])
+def test_full_placement_cover_is_single_device(P):
+    plan = build_cover(P, "full")
+    assert plan.n_cover == 1
+    assert np.asarray(plan.slot_mask).sum() == P  # that device scores all
+
+
+# ---------------------------------------------------------------------------
+# exact_cover generalization (ISSUE small fix): arbitrary residency sets
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("P", [5, 12, 21, 22, 31])
+def test_exact_cover_sets_matches_cyclic_wrapper(P):
+    """Regression: the generalized branch-and-bound over explicit
+    residency sets finds the same minimum as the historical cyclic
+    search (which stays bit-identical via its pinned root and shift
+    branch order)."""
+    A = difference_set(P)
+    sets = [frozenset((a + i) % P for a in A) for i in range(P)]
+    ub = len(greedy_cover(P, A)) + 1
+    old = exact_cover(P, A, ub)
+    new = exact_cover_sets(sets, ub)          # no symmetry pin, any sets
+    assert old is not None and new is not None
+    assert len(old) == len(new)
+    assert is_cover(P, A, old) and is_cover(P, A, new)
+
+
+def test_exact_cover_sets_handles_non_cyclic_residency():
+    """The point of the generalization: residency that is NOT a translate
+    system (irregular sizes, no shift structure) is solved exactly."""
+    sets = [{0, 1}, {1, 2, 3}, {3, 4}, {0, 4, 5}, {2, 5}]
+    got = exact_cover_sets(sets, ub=len(sets) + 1)
+    assert got is not None
+    covered: set = set()
+    for i in got:
+        covered |= set(sets[i])
+    assert covered == set(range(6))
+    assert len(got) == 2                      # {1,2,3} + {0,4,5} is optimal
+    # and an infeasible bound returns None rather than a worse cover
+    assert exact_cover_sets(sets, ub=2) is None
+
+
+def test_exact_cover_cyclic_results_unchanged():
+    """Pin the exact minima the pre-generalization search produced for a
+    spread of P (these feed build_cover, so any drift would change
+    serving fan-out)."""
+    for P, n in [(5, 2), (12, 4), (13, 4), (22, 6), (31, 6)]:
+        assert build_cover(P).n_cover == n, P

@@ -1,7 +1,9 @@
-"""Elastic rescale plans (launch/elastic.py): identity, grow, shrink."""
+"""Elastic rescale plans (launch/elastic.py): identity, grow, shrink,
+and same-P placement migration (cyclic -> plane / full)."""
 
 import pytest
 
+from repro.core.placement import get_placement
 from repro.core.quorum import cyclic_quorums
 from repro.launch.elastic import rescale
 
@@ -38,3 +40,53 @@ def test_shrink_fetches_full_new_quorums(P_old, P_new):
     assert set(plan.fetches) == set(range(P_new))
     for i, S in enumerate(quorums):
         assert plan.fetches[i] == list(S)
+
+
+@pytest.mark.parametrize("P,name", [(12, "affine"), (13, "projective"),
+                                    (31, "projective"), (8, "full")])
+def test_migration_fetches_residency_delta(P, name):
+    """Same-P placement change: block ids keep their meaning, so each
+    device fetches exactly its residency delta — a live cyclic -> plane
+    (or -> full) migration moves only what's missing, never the corpus."""
+    plc = get_placement(name, P)
+    cyc = get_placement("cyclic", P)
+    plan = rescale(P, P, placement_old="cyclic", placement_new=plc)
+    assert plan.is_migration or plan.total_fetch_blocks == 0
+    for i in range(P):
+        new_res = set(plc.residency(i))
+        old_res = cyc.residency(i)
+        assert plan.new_quorums[i] == sorted(new_res)
+        assert set(plan.fetches.get(i, [])) == new_res - old_res
+    # schedule rides the new placement
+    assert tuple(plan.schedule.shifts.tolist()) == tuple(sorted(plc.shifts))
+
+
+def test_migration_to_full_fetches_complement():
+    P = 6
+    cyc = get_placement("cyclic", P)
+    plan = rescale(P, P, placement_old="cyclic", placement_new="full")
+    assert plan.is_migration
+    assert plan.total_fetch_blocks == sum(
+        P - len(cyc.residency(i)) for i in range(P))
+
+
+def test_migration_roundtrip_is_reversible():
+    """cyclic -> projective -> cyclic at P = 31 (where the Singer set
+    differs from the search set): the reverse migration fetches exactly
+    what the forward one dropped."""
+    P = 31
+    fwd = rescale(P, P, "cyclic", "projective")
+    back = rescale(P, P, "projective", "cyclic")
+    assert fwd.is_migration and back.is_migration
+    assert fwd.total_fetch_blocks == back.total_fetch_blocks > 0
+
+
+def test_env_placement_steers_rescale(monkeypatch):
+    """REPRO_PLACEMENT selects the rescale target when no placement is
+    passed (mirroring the engine's implicit selection)."""
+    monkeypatch.setenv("REPRO_PLACEMENT", "full")
+    plan = rescale(4, 8)
+    assert plan.placement_new.name == "full"
+    assert all(plan.fetches[i] == list(range(8)) for i in range(8))
+    monkeypatch.delenv("REPRO_PLACEMENT")
+    assert rescale(4, 8).placement_new.name == "cyclic"

@@ -1,0 +1,317 @@
+"""Placement conformance suite — the executable interface contract.
+
+Every placement registered in ``repro.core.placement`` must pass every
+check here for every P <= 64 where it is defined (``supports(P)``), so
+future placements are correct by construction (DESIGN.md section 10):
+
+  1. **all-pairs co-residency** — every unordered block pair (including
+     self-pairs) is co-resident on at least one device (paper Theorem 1
+     generalized),
+  2. **ownership partition** — ``owner_of`` assigns each of the
+     C(P,2) + P unordered pairs to exactly one device that holds both
+     blocks, symmetrically in its arguments,
+  3. **balance** — per-device owned-pair loads within the paper's bound:
+     max load <= ceil(total / P), max - min <= 1 (Eq. 12's "equal work",
+     exact up to the indivisible even-P half orbit),
+  4. **replication floor** — residency can't beat the
+     ``quorum_size_lower_bound`` k(k-1)+1 >= P floor, and the placement's
+     advertised ``replication`` matches the observed per-block copy count,
+  5. **cover validity** — ``build_cover(P, placement)`` visits devices
+     whose residency unions to all blocks, scoring each block exactly
+     once (the serving dedup contract),
+  6. **reassign/rescale closure** — failures reassign every lost pair to
+     live holders exactly once, and rescale plans (resize or same-P
+     migration) leave every device able to assemble its new residency.
+
+Plus the plane-specific acceptance pins: projective/affine replication is
+exactly q + 1 and never worse than cyclic at the same P.
+"""
+
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.placement import (AffinePlanePlacement,
+                                  ProjectivePlanePlacement, auto_placement,
+                                  get_placement, plane_placement,
+                                  registered_placements, resolve_placement,
+                                  supported_placements)
+from repro.core.quorum import quorum_size_lower_bound
+from repro.core.scheduler import reassign
+from repro.launch.elastic import rescale
+from repro.serving.cover import build_cover
+
+MAX_P = 64
+
+
+def _cases():
+    return [(name, P)
+            for name, cls in sorted(registered_placements().items())
+            for P in range(1, MAX_P + 1) if cls.supports(P)]
+
+
+def _ids():
+    return [f"{name}-P{P}" for name, P in _cases()]
+
+
+def owned_loads(plc) -> np.ndarray:
+    """[P] owned-pair count per device; asserts the partition on the way."""
+    P = plc.P
+    loads = np.zeros(P, dtype=int)
+    for x in range(P):
+        for y in range(x, P):
+            o = plc.owner_of(x, y)
+            assert o == plc.owner_of(y, x), (plc.name, P, x, y)
+            assert 0 <= o < P
+            res = plc.residency_sets[o]
+            assert x in res and y in res, (plc.name, P, x, y, o)
+            loads[o] += 1
+    return loads
+
+
+@pytest.mark.parametrize("name,P", _cases(), ids=_ids())
+def test_all_pairs_co_residency(name, P):
+    plc = get_placement(name, P)
+    sets = plc.residency_sets
+    assert len(sets) == P
+    ok = np.zeros((P, P), dtype=bool)
+    for S in sets:
+        blocks = sorted(S)
+        for x in blocks:
+            for y in blocks:
+                ok[x, y] = True
+    assert ok.all(), (name, P)
+
+
+@pytest.mark.parametrize("name,P", _cases(), ids=_ids())
+def test_ownership_is_balanced_partition(name, P):
+    plc = get_placement(name, P)
+    loads = owned_loads(plc)          # asserts owner holds both + symmetry
+    total = P * (P + 1) // 2          # C(P,2) + P unordered pairs
+    assert loads.sum() == total       # a function is a partition; pin total
+    assert loads.max() <= math.ceil(total / P)
+    assert loads.max() - loads.min() <= 1, (name, P, loads)
+
+
+@pytest.mark.parametrize("name,P", _cases(), ids=_ids())
+def test_replication_floor_and_consistency(name, P):
+    plc = get_placement(name, P)
+    counts = np.zeros(P, dtype=int)
+    for S in plc.residency_sets:
+        for b in S:
+            counts[b] += 1
+    assert counts.min() >= 1
+    assert plc.replication == counts.max()
+    # the k(k-1)+1 >= P floor: co-residency is impossible below it
+    assert plc.max_residency >= quorum_size_lower_bound(P)
+    if plc.shifts is not None:
+        assert plc.max_residency == len(plc.shifts) == plc.replication
+
+
+@pytest.mark.parametrize("name,P", _cases(), ids=_ids())
+def test_cover_validity(name, P):
+    plc = get_placement(name, P)
+    plan = build_cover(P, plc)
+    assert plan.placement == name
+    got: set = set()
+    for i in plan.devices:
+        got |= plc.residency_sets[i]
+    assert got == set(range(P))
+    assert plan.n_cover <= plc.replication
+    # dedup: summed over devices and slots each block scores exactly once
+    hits = np.zeros(P, dtype=int)
+    for i in range(P):
+        for s, a in enumerate(plan.A):
+            if plan.slot_mask[i, s]:
+                assert i in plan.devices
+                hits[(a + i) % P] += 1
+    assert (hits == 1).all(), (name, P)
+
+
+# reassign is O(P^2 * k) per case; a diagonal slice of P values keeps the
+# closure check meaningful at every placement without quadratic suite time
+_REASSIGN_P = (1, 2, 5, 6, 7, 12, 13, 16, 31, 57, 64)
+
+
+@pytest.mark.parametrize(
+    "name,P", [(n, P) for (n, P) in _cases() if P in _REASSIGN_P],
+    ids=[f"{n}-P{P}" for (n, P) in _cases() if P in _REASSIGN_P])
+def test_reassign_closure(name, P):
+    plc = get_placement(name, P)
+    if P == 1:
+        return  # no device can fail with a survivor left
+    sched = plc.schedule()
+    failed = [0] if P <= 4 else [0, P // 2]
+    plan = reassign(sched, failed, placement=plc)
+    recovered = []
+    for i, pairs in plan.extra_pairs.items():
+        assert i not in failed
+        recovered += pairs
+    for i, entries in plan.fetch_pairs.items():
+        assert i not in failed
+        for (pair, missing, src) in entries:
+            assert src not in failed
+            assert missing in plc.residency_sets[src]
+            recovered.append(pair)
+    want = []
+    for f in failed:
+        want += [(min(x, y), max(x, y)) for (x, y) in sched.global_pairs_of(f)]
+    assert sorted(recovered) == sorted(want)
+
+
+@pytest.mark.parametrize("name,P", _cases(), ids=_ids())
+def test_rescale_closure(name, P):
+    """Same-P migration from cyclic: fetches are exactly the residency
+    delta, so old residency + fetches assembles the new placement."""
+    plc = get_placement(name, P)
+    cyc = get_placement("cyclic", P)
+    plan = rescale(P, P, placement_old=cyc, placement_new=plc)
+    assert plan.schedule.P == P
+    for i in range(P):
+        new_res = set(plan.new_quorums[i])
+        assert new_res == set(plc.residency(i))
+        fetched = set(plan.fetches.get(i, []))
+        assert fetched == new_res - cyc.residency(i)
+        assert new_res <= cyc.residency(i) | fetched
+    if name == "cyclic":
+        assert plan.total_fetch_blocks == 0 and not plan.is_migration
+
+
+# ---------------------------------------------------------------------------
+# Plane-specific acceptance pins
+# ---------------------------------------------------------------------------
+
+def test_projective_13_replication_exactly_4():
+    """Acceptance: P = 13 = 3^2+3+1 — replication exactly q+1 = 4, never
+    worse than the cyclic construction at the same P."""
+    plc = get_placement("projective", 13)
+    assert plc.order == 3
+    assert plc.replication == 4
+    assert plc.replication <= get_placement("cyclic", 13).replication
+
+
+@pytest.mark.parametrize("P", [7, 13, 21, 31, 57])
+def test_projective_replication_is_q_plus_1(P):
+    plc = get_placement("projective", P)
+    q = plc.order
+    assert q * q + q + 1 == P
+    assert plc.replication == q + 1 == quorum_size_lower_bound(P)
+    assert plc.replication <= get_placement("cyclic", P).replication
+
+
+@pytest.mark.parametrize("P", [6, 12])
+def test_affine_replication_is_q_plus_1(P):
+    plc = get_placement("affine", P)
+    q = plc.order
+    assert q * q + q == P
+    assert plc.replication == q + 1 == quorum_size_lower_bound(P)
+    assert plc.replication <= get_placement("cyclic", P).replication
+
+
+def test_affine_not_defined_where_provably_impossible():
+    """q = 4, 5: the exact search shows no (q+1)-element difference cover
+    mod q^2+q exists (module docstring feasibility note), so the
+    placement must report itself undefined rather than degrade."""
+    for P in (20, 30):
+        assert not AffinePlanePlacement.supports(P)
+    assert not ProjectivePlanePlacement.supports(20)
+    with pytest.raises(ValueError, match="not defined"):
+        get_placement("affine", 20)
+
+
+def test_projective_definition_domain():
+    got = [P for P in range(1, MAX_P + 1)
+           if ProjectivePlanePlacement.supports(P)]
+    assert got == [7, 13, 21, 31, 57]
+    aff = [P for P in range(1, MAX_P + 1) if AffinePlanePlacement.supports(P)]
+    assert aff == [6, 12]
+
+
+# ---------------------------------------------------------------------------
+# Selection: auto / plane / env override
+# ---------------------------------------------------------------------------
+
+def test_auto_picks_smallest_replication_tie_cyclic():
+    for P in range(1, MAX_P + 1):
+        plc = auto_placement(P)
+        best = min(p.replication for p in supported_placements(P))
+        assert plc.replication == best
+        # cyclic is optimal-or-tied everywhere planes are defined (exact
+        # search / Singer), so the tie-break keeps auto bit-exact cyclic
+        assert plc.name == "cyclic"
+
+
+def test_plane_placement_prefers_projective_then_affine():
+    assert plane_placement(13).name == "projective"
+    assert plane_placement(12).name == "affine"
+    assert plane_placement(8) is None
+    assert resolve_placement("plane", 8).name == "cyclic"   # documented fallback
+    assert resolve_placement("plane", 13).name == "projective"
+
+
+def test_env_override(monkeypatch):
+    from repro.core.placement import placement_from_env
+    monkeypatch.delenv("REPRO_PLACEMENT", raising=False)
+    assert placement_from_env(13).name == "cyclic"
+    monkeypatch.setenv("REPRO_PLACEMENT", "plane")
+    assert placement_from_env(13).name == "projective"
+    assert placement_from_env(8).name == "cyclic"           # plane fallback
+    monkeypatch.setenv("REPRO_PLACEMENT", "full")
+    assert placement_from_env(8).name == "full"
+    monkeypatch.setenv("REPRO_PLACEMENT", "projective")
+    with pytest.raises(ValueError, match="not defined"):
+        placement_from_env(8)                               # strict by name
+    monkeypatch.setenv("REPRO_PLACEMENT", "hexagonal")      # typo
+    with pytest.raises(ValueError, match="REPRO_PLACEMENT"):
+        placement_from_env(8)
+
+
+def test_downstream_registration_joins_selection():
+    """register_placement's contract: a placement registered after import
+    is swept by auto/supported without touching the built-in order (and
+    wins selection where its replication is strictly smaller)."""
+    import repro.core.placement as pm
+
+    @pm.register_placement
+    class EverythingOnDeviceZeroish(pm.ShiftPlacement):
+        # strictly-better-than-cyclic replication is impossible (the
+        # floor is tight), so prove selection mechanics with a tie-worse
+        # placement: it must appear in supported, and never win auto
+        name = "zz-test-only"
+
+        @classmethod
+        def supports(cls, P):
+            return P == 9
+
+        def _cover(self):
+            return tuple(range(self.P))  # full-style cover, k = 9
+
+    try:
+        assert "zz-test-only" in [p.name for p in supported_placements(9)]
+        assert auto_placement(9).name == "cyclic"
+    finally:
+        del pm._REGISTRY["zz-test-only"]
+        pm.get_placement.cache_clear()
+    assert "zz-test-only" not in [p.name for p in supported_placements(9)]
+
+
+def test_placements_are_memoized_value_objects():
+    a = get_placement("cyclic", 12)
+    b = get_placement("cyclic", 12)
+    assert a is b
+    assert a == b and hash(a) == hash(b)
+    assert a != get_placement("affine", 12)
+    assert a.schedule().A == tuple(sorted(a.shifts))
+
+
+def test_schedule_matches_placement_shifts():
+    """build_schedule(P, placement) must derive from the placement's
+    shifts — the engine layout contract (slot s holds (i + shifts[s]) % P)."""
+    for name, P in [("cyclic", 8), ("projective", 31), ("affine", 12),
+                    ("full", 5)]:
+        plc = get_placement(name, P)
+        sched = plc.schedule()
+        assert sched.P == P
+        assert tuple(sched.shifts.tolist()) == tuple(sorted(plc.shifts))
+        assert sched.k == plc.replication

@@ -1,0 +1,101 @@
+"""Hypothesis property sweeps for the placement layer.
+
+Skipped wholesale when hypothesis is not installed; the deterministic
+per-(placement, P) conformance suite in
+tests/test_placement_conformance.py always runs.
+
+Two headline properties (ISSUE satellite):
+  * a random P <= 64 -> the ``auto`` placement satisfies the conformance
+    invariants (co-residency, balanced ownership partition, replication
+    floor),
+  * a random failed-device subset (small enough that no block can lose
+    all its holders) -> ``reassign`` still partitions all of the failed
+    devices' pairs onto live holders, under a randomly chosen supported
+    placement.
+"""
+
+import math
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.placement import (auto_placement, get_placement,
+                                  supported_placements)
+from repro.core.quorum import quorum_size_lower_bound
+from repro.core.scheduler import reassign
+
+
+@given(st.integers(min_value=1, max_value=64))
+@settings(max_examples=40, deadline=None)
+def test_auto_placement_conformance_invariants(P):
+    plc = auto_placement(P)
+    sets = plc.residency_sets
+    # co-residency of every unordered pair (incl. self-pairs)
+    ok = np.zeros((P, P), dtype=bool)
+    for S in sets:
+        blocks = sorted(S)
+        for x in blocks:
+            for y in blocks:
+                ok[x, y] = True
+    assert ok.all()
+    # balanced ownership partition
+    loads = np.zeros(P, dtype=int)
+    for x in range(P):
+        for y in range(x, P):
+            o = plc.owner_of(x, y)
+            assert o == plc.owner_of(y, x)
+            assert x in sets[o] and y in sets[o]
+            loads[o] += 1
+    total = P * (P + 1) // 2
+    assert loads.sum() == total
+    assert loads.max() <= math.ceil(total / P)
+    assert loads.max() - loads.min() <= 1
+    # replication floor, and auto really is minimal among supported
+    assert plc.max_residency >= quorum_size_lower_bound(P)
+    assert plc.replication == min(p.replication
+                                  for p in supported_placements(P))
+
+
+@given(st.data())
+@settings(max_examples=30, deadline=None)
+def test_reassign_partitions_all_failed_pairs(data):
+    P = data.draw(st.integers(min_value=2, max_value=32), label="P")
+    names = [p.name for p in supported_placements(P)]
+    plc = get_placement(data.draw(st.sampled_from(names), label="plc"), P)
+    # keep |failed| < replication so no block can lose all its holders
+    # (with replication holders per block, that needs >= replication
+    # failures) and at least one device survives
+    max_fail = min(P - 1, plc.replication - 1)
+    if max_fail < 1:
+        return
+    failed = sorted(data.draw(
+        st.sets(st.integers(min_value=0, max_value=P - 1),
+                min_size=1, max_size=max_fail), label="failed"))
+    sched = plc.schedule()
+    plan = reassign(sched, failed, placement=plc)
+
+    recovered = []
+    for i, pairs in plan.extra_pairs.items():
+        assert i not in failed
+        for pair in pairs:
+            assert set(pair) <= plc.residency_sets[i]
+            recovered.append(pair)
+    for i, entries in plan.fetch_pairs.items():
+        assert i not in failed
+        for (pair, missing, src) in entries:
+            assert src not in failed
+            assert missing in plc.residency_sets[src]
+            recovered.append(pair)
+
+    want = []
+    for f in failed:
+        want += [(min(x, y), max(x, y))
+                 for (x, y) in sched.global_pairs_of(f)]
+    # every failed pair recovered exactly once — a partition of lost work
+    assert sorted(recovered) == sorted(want)
+    assert plan.n_recovered == len(want)
