@@ -11,6 +11,10 @@ Prints ``name,us_per_call,derived`` CSV rows:
                          per mode, fused kernel vs unfused reference
                          (writes BENCH_serve.json; ``--fast-serve`` runs
                          only this one, for CI)
+  bench_sparse         — thresholded similarity join: norm-bound
+                         prefilter vs dense scoring at low selectivity
+                         (writes BENCH_sparse.json; ``--fast-sparse``
+                         runs only this one, for CI)
   bench_attention_comm — comm-volume model: quorum vs ring vs all-gather
 
 Roofline extraction from the dry-run lives in benchmarks/roofline.py (it
@@ -26,15 +30,17 @@ import traceback
 def main() -> None:
     from . import (bench_attention_comm, bench_attention_hlo, bench_engine,
                    bench_memory, bench_pcit_speedup, bench_quorum,
-                   bench_serve)
+                   bench_serve, bench_sparse)
     rows = [("name", "us_per_call", "derived")]
     modules = [bench_quorum, bench_memory, bench_attention_comm,
                bench_attention_hlo, bench_engine, bench_serve,
-               bench_pcit_speedup]
+               bench_sparse, bench_pcit_speedup]
     if "--fast-engine" in sys.argv:
         modules = [bench_engine]
     elif "--fast-serve" in sys.argv:
         modules = [bench_serve]
+    elif "--fast-sparse" in sys.argv:
+        modules = [bench_sparse]
     elif "--fast" in sys.argv:
         modules = modules[:3]
     for mod in modules:

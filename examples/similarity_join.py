@@ -1,0 +1,61 @@
+"""Thresholded all-pairs similarity join over a quorum-sharded corpus —
+the sparse workload of DESIGN.md section 11: report only the vector pairs
+whose similarity passes a threshold, with the norm-bound prefilter
+skipping whole block pairs and fixed-capacity buffers escalating on
+overflow.  Plants a few near-duplicate pairs in a random corpus and
+recovers exactly them (verified against the dense brute-force oracle).
+
+Run:  PYTHONPATH=src python examples/similarity_join.py
+"""
+
+import os
+import sys
+
+if "XLA_FLAGS" not in os.environ:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    os.execv(sys.executable, [sys.executable] + sys.argv)
+
+import numpy as np  # noqa: E402
+import jax  # noqa: E402
+
+from repro.core.sparse import brute_force_join, similarity_join  # noqa: E402
+
+
+def main():
+    P, d, n_dups = 8, 32, 6
+    N = 512
+    rng = np.random.default_rng(0)
+    # unit vectors so cosine similarity == dot product
+    corpus = rng.normal(size=(N, d)).astype(np.float32)
+    corpus /= np.linalg.norm(corpus, axis=1, keepdims=True)
+    # plant near-duplicates: row i + tiny noise lands at row N - n_dups + i
+    src = rng.choice(N - n_dups, size=n_dups, replace=False)
+    for t, s in enumerate(src):
+        noisy = corpus[s] + 0.02 * rng.normal(size=d).astype(np.float32)
+        corpus[N - n_dups + t] = noisy / np.linalg.norm(noisy)
+
+    mesh = jax.make_mesh((P,), ("q",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    thr = 0.9                      # cosine threshold: near-duplicates only
+    res = similarity_join(corpus, mesh, threshold=thr, metric="dot")
+    print(f"corpus: {N} unit vectors in {P} blocks; threshold {thr}")
+    print(f"join found {res.n_pairs} passing pairs "
+          f"(capacity {res.capacity}, {res.escalations} escalations):")
+    for i, j, s in zip(res.i, res.j, res.scores):
+        print(f"  ({i:3d}, {j:3d})  cos = {s:.4f}")
+
+    wi, wj, wv = brute_force_join(corpus, thr, "dot")
+    assert (res.i == wi).all() and (res.j == wj).all(), "oracle mismatch"
+    np.testing.assert_allclose(res.scores, wv, rtol=1e-5, atol=1e-5)
+    planted = set(zip(src.tolist(),
+                      (N - n_dups + np.arange(n_dups)).tolist()))
+    found = set(zip(res.i.tolist(), res.j.tolist()))
+    assert planted <= {(min(a, b), max(a, b)) for a, b in found}, \
+        "every planted near-duplicate pair must pass the join"
+    print(f"all {n_dups} planted near-duplicate pairs recovered; "
+          "pair set matches the dense brute-force oracle")
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

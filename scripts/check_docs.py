@@ -1,0 +1,143 @@
+#!/usr/bin/env python
+"""Documentation gate for CI (the docs-check job in .github/workflows).
+
+Two checks, pure standard library (no jax import — the job stays fast):
+
+  1. **docstring audit** — every public function, class, and public
+     method defined under ``src/repro`` must carry a docstring.  Public
+     means: name does not start with ``_``, not nested inside a
+     function, and the module is not itself private.  The four modules
+     whose API grew across PRs 1-4 (core/allpairs, core/placement,
+     serving/cover, kernels/ops) are additionally required to cite their
+     DESIGN.md section in every public *function* docstring, so the
+     design doc and the code cannot drift apart silently.
+  2. **markdown link check** — every relative link target in the
+     repo-root markdown files must exist, and every intra-document
+     ``#anchor`` must match a heading slug of the file it points into.
+
+Exit status 0 iff both pass; offenders are listed one per line.
+
+Run:  python scripts/check_docs.py
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+SRC = ROOT / "src" / "repro"
+MD_FILES = ["README.md", "DESIGN.md", "ROADMAP.md", "PAPERS.md",
+            "CHANGES.md"]
+# public functions here must cite the design doc ("DESIGN.md" in the
+# docstring) — the PR 1-4 API surface the docs pass anchors
+MUST_CITE_DESIGN = [
+    "core/allpairs.py",
+    "core/placement.py",
+    "core/sparse.py",
+    "serving/cover.py",
+    "kernels/ops.py",
+]
+
+
+def is_public_module(path: Path) -> bool:
+    rel = path.relative_to(SRC)
+    return not any(part.startswith("_") for part in rel.parts)
+
+
+def check_docstrings() -> list[str]:
+    problems: list[str] = []
+    for path in sorted(SRC.rglob("*.py")):
+        if not is_public_module(path):
+            continue
+        rel = path.relative_to(ROOT)
+        tree = ast.parse(path.read_text(), filename=str(rel))
+        must_cite = any(str(path).endswith(m) for m in MUST_CITE_DESIGN)
+        if ast.get_docstring(tree) is None:
+            problems.append(f"{rel}: missing module docstring")
+
+        def walk(node, prefix: str, in_class: bool) -> None:
+            for child in ast.iter_child_nodes(node):
+                if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                      ast.ClassDef)):
+                    name = child.name
+                    if name.startswith("_"):
+                        continue
+                    qual = f"{prefix}{name}"
+                    doc = ast.get_docstring(child)
+                    if doc is None:
+                        kind = ("class" if isinstance(child, ast.ClassDef)
+                                else "function")
+                        problems.append(
+                            f"{rel}:{child.lineno}: public {kind} {qual} "
+                            "has no docstring")
+                    elif (must_cite and not in_class
+                          and not isinstance(child, ast.ClassDef)
+                          and "DESIGN.md" not in doc):
+                        problems.append(
+                            f"{rel}:{child.lineno}: {qual} docstring must "
+                            "cite its DESIGN.md section")
+                    if isinstance(child, ast.ClassDef):
+                        walk(child, qual + ".", True)
+                    # nested defs (closures) are implementation detail
+        walk(tree, "", False)
+    return problems
+
+
+_LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+
+
+def _slug(heading: str) -> str:
+    """GitHub-style anchor slug: lowercase, drop punctuation, dashes."""
+    s = heading.strip().lower()
+    s = re.sub(r"[`*_]", "", s)
+    s = re.sub(r"[^\w\- ]", "", s)
+    return s.replace(" ", "-")
+
+
+def check_markdown_links() -> list[str]:
+    problems: list[str] = []
+    slugs: dict[Path, set] = {}
+
+    def slugs_of(path: Path) -> set:
+        if path not in slugs:
+            slugs[path] = {_slug(h)
+                           for h in _HEADING_RE.findall(path.read_text())}
+        return slugs[path]
+
+    for name in MD_FILES:
+        md = ROOT / name
+        if not md.exists():
+            continue
+        for target in _LINK_RE.findall(md.read_text()):
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            base, _, anchor = target.partition("#")
+            dest = md if not base else (md.parent / base).resolve()
+            if base and not dest.exists():
+                problems.append(f"{name}: broken link target {target!r}")
+                continue
+            if anchor and dest.suffix == ".md":
+                if _slug(anchor) not in slugs_of(dest):
+                    problems.append(
+                        f"{name}: anchor {target!r} matches no heading "
+                        f"in {dest.name}")
+    return problems
+
+
+def main() -> int:
+    problems = check_docstrings() + check_markdown_links()
+    for p in problems:
+        print(p)
+    if problems:
+        print(f"\ndocs-check: {len(problems)} problem(s)")
+        return 1
+    print("docs-check OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -73,6 +73,7 @@ def merge_partials(a: Tuple, b: Tuple) -> Tuple:
 
 
 def empty_partial(shape_q, H, dtype=jnp.float32):
+    """Identity element of the flash (o, m, l) merge monoid."""
     B, Tq, hd = shape_q
     return (jnp.zeros((B, Tq, H, hd), dtype),
             jnp.full((B, Tq, H), NEG_INF, dtype),

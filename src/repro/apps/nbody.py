@@ -37,6 +37,7 @@ def pair_forces(bi: jax.Array, bj: jax.Array):
 
 
 def forces_reference(bodies: np.ndarray) -> np.ndarray:
+    """Numpy O(N^2) force oracle (tests/benchmarks compare against it)."""
     p, m = bodies[:, :3], bodies[:, 3]
     d = p[None, :, :] - p[:, None, :]
     r2 = (d * d).sum(-1) + SOFTENING

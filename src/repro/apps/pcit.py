@@ -47,6 +47,7 @@ def standardize(X: np.ndarray) -> np.ndarray:
     return Xc / np.maximum(nrm, EPS)
 
 def correlation_reference(X: np.ndarray) -> np.ndarray:
+    """Numpy correlation-matrix oracle over standardized rows."""
     Xs = standardize(X)
     return Xs @ Xs.T
 

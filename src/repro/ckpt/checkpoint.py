@@ -69,6 +69,7 @@ def save_checkpoint(directory: str | Path, step: int, tree: Tree) -> Path:
 
 
 def latest_step(directory: str | Path) -> Optional[int]:
+    """Largest step with a complete (manifest-bearing) checkpoint."""
     directory = Path(directory)
     if not directory.exists():
         return None
@@ -117,6 +118,8 @@ class CheckpointManager:
         self._error: Optional[BaseException] = None
 
     def wait(self):
+        """Block until the in-flight async save finishes (re-raising
+        any error it hit)."""
         if self._thread is not None:
             self._thread.join()
             self._thread = None
@@ -140,6 +143,7 @@ class CheckpointManager:
         self._thread.start()
 
     def restore_latest(self, tree_like: Tree, shardings=None):
+        """Load the newest complete checkpoint into tree_like's shape."""
         return load_checkpoint(self.directory, tree_like, shardings=shardings)
 
     def _gc(self):

@@ -34,6 +34,7 @@ _ALIAS = {a.replace("_", "-"): a for a in ARCHS}
 
 @dataclasses.dataclass(frozen=True)
 class Shape:
+    """A benchmark cell shape: run kind, sequence length, batch."""
     name: str
     kind: str        # train | prefill | decode
     seq_len: int
@@ -52,18 +53,21 @@ LONG_OK = {"mamba2_130m", "jamba_v0_1_52b", "h2o_danube_1_8b"}
 
 
 def get_config(arch: str) -> ModelConfig:
+    """The full-scale ModelConfig registered under ``arch``."""
     arch = _ALIAS.get(arch, arch)
     mod = importlib.import_module(f".{arch}", package=__package__)
     return mod.CONFIG
 
 
 def get_smoke_config(arch: str) -> ModelConfig:
+    """The tiny smoke-test variant of ``arch`` (same topology)."""
     arch = _ALIAS.get(arch, arch)
     mod = importlib.import_module(f".{arch}", package=__package__)
     return mod.SMOKE
 
 
 def shape_cells(arch: str) -> Iterable[Shape]:
+    """The benchmark shapes ``arch`` runs (long-context gated)."""
     arch = _ALIAS.get(arch, arch)
     for s in SHAPES.values():
         if s.name == "long_500k" and arch not in LONG_OK:
@@ -72,4 +76,5 @@ def shape_cells(arch: str) -> Iterable[Shape]:
 
 
 def all_cells() -> List[Tuple[str, Shape]]:
+    """Every (arch, shape) benchmark cell in the matrix."""
     return [(a, s) for a in ARCHS for s in shape_cells(a)]

@@ -60,10 +60,11 @@ _DEFAULT_BATCH_BYTES = 1 << 28
 
 
 def auto_batch_bytes() -> int:
-    """The auto-mode byte budget, read from ``REPRO_BATCH_BYTES_LIMIT`` at
-    *selection* time (every ``mode="auto"`` trace), not at import — setting
-    the env var after ``import repro`` works.  Shared by the batch engine's
-    heuristic and the serving query engine's."""
+    """The auto-mode byte budget (DESIGN.md section 4), read from
+    ``REPRO_BATCH_BYTES_LIMIT`` at *selection* time (every ``mode="auto"``
+    trace), not at import — setting the env var after ``import repro``
+    works.  Shared by the batch engine's heuristic, the serving query
+    engine's, and the sparse join's."""
     env = os.environ.get("REPRO_BATCH_BYTES_LIMIT", "").strip()
     return int(env) if env else _DEFAULT_BATCH_BYTES
 
@@ -75,7 +76,7 @@ def _shift_perm(P: int, shift: int) -> list[tuple[int, int]]:
 
 def quorum_gather(x: jax.Array, schedule: PairSchedule, axis_name: str,
                   *, overlap_fn: Callable[[int, jax.Array], Any] | None = None):
-    """Gather this device's quorum blocks.
+    """Gather this device's quorum blocks (DESIGN.md section 2, phase 1).
 
     Args:
       x: the local block, shape [block, ...] (inside shard_map).
@@ -108,7 +109,8 @@ def quorum_gather(x: jax.Array, schedule: PairSchedule, axis_name: str,
 
 def quorum_scatter(partials, schedule: PairSchedule, axis_name: str,
                    *, reduce_fn: Callable[[jax.Array, jax.Array], jax.Array] = jnp.add):
-    """Route per-slot partial results back to block owners and reduce.
+    """Route per-slot partial results back to block owners and reduce
+    (DESIGN.md section 2, phase 3).
 
     partials: [k, block, ...] stacked, or a length-k sequence of [block, ...]
     arrays; slot s is a partial result for global block (i + shifts[s]) % P.
@@ -130,7 +132,8 @@ def quorum_scatter(partials, schedule: PairSchedule, axis_name: str,
 
 
 def pair_mask_table(schedule: PairSchedule) -> np.ndarray:
-    """[P, n_pairs] float mask deduplicating the d = P/2 orbit for even P.
+    """[P, n_pairs] float mask deduplicating the d = P/2 orbit for even P
+    (DESIGN.md section 3.2).
 
     Each unordered pair with difference P/2 is generated by exactly two
     devices (i and i + P/2); the device with the smaller canonical lower
@@ -155,7 +158,9 @@ def pair_mask_table(schedule: PairSchedule) -> np.ndarray:
 
 
 def mark_varying(x: jax.Array, axis_name: str) -> jax.Array:
-    """Mark x as varying over the quorum axis (jax >= 0.7 VMA tracking)."""
+    """Mark x as varying over the quorum axis (jax >= 0.7 VMA tracking;
+    the shard_map plumbing every engine-internal constant goes through —
+    DESIGN.md section 2)."""
     try:
         return lax.pcast(x, axis_name, to="varying")
     except (AttributeError, TypeError):  # pragma: no cover - older jax
@@ -163,10 +168,11 @@ def mark_varying(x: jax.Array, axis_name: str) -> jax.Array:
 
 
 def env_mode_override() -> str | None:
-    """The validated ``REPRO_ALLPAIRS_MODE`` forced mode, or None if unset.
+    """The validated ``REPRO_ALLPAIRS_MODE`` forced mode, or None if unset
+    (DESIGN.md section 4).
 
     The benchmark / CI A/B hook, consulted by every ``mode="auto"``
-    selection (engine and PCIT tile phases).  Read at trace time — set it
+    selection (engine, PCIT tile phases, serving scoring, sparse join).  Read at trace time — set it
     before the first jitted call; already-compiled auto-mode programs keep
     their baked-in choice.  Unknown values raise rather than silently
     falling through to the heuristic.
@@ -181,7 +187,8 @@ def env_mode_override() -> str | None:
 
 
 def pair_ready_order(schedule: PairSchedule) -> list[list[int]]:
-    """Pair indices grouped by *ready slot* for the overlap modes.
+    """Pair indices grouped by *ready slot* for the overlap modes
+    (DESIGN.md section 4).
 
     A pair (lo, hi) can compute once its later block lands in the gather
     shift sequence, i.e. at slot max(lo, hi); ready[s] lists the pairs that
@@ -441,7 +448,8 @@ def allgather_allpairs(
     axis_name: str,
     axis_size: int,
 ):
-    """Baseline: replicate ALL blocks on every device (paper section 1.1 schemes).
+    """Baseline: replicate ALL blocks on every device (paper section 1.1
+    schemes; DESIGN.md section 2).
 
     Each device all-gathers the full dataset (N elements of memory — what the
     paper's method avoids) and computes every interaction involving its own

@@ -100,15 +100,17 @@ _REGISTRY: Dict[str, Type["Placement"]] = {}
 
 def register_placement(cls: Type["Placement"]) -> Type["Placement"]:
     """Class decorator: add ``cls`` to the placement registry under
-    ``cls.name``.  Registered placements are what the conformance suite
-    sweeps and what ``REPRO_PLACEMENT`` / ``auto`` select among."""
+    ``cls.name`` (DESIGN.md section 10).  Registered placements are what
+    the conformance suite sweeps and what ``REPRO_PLACEMENT`` / ``auto``
+    select among."""
     assert cls.name and cls.name not in ("abstract", "plane", "auto"), cls
     _REGISTRY[cls.name] = cls
     return cls
 
 
 def registered_placements() -> Dict[str, Type["Placement"]]:
-    """Snapshot of the registry: name -> placement class."""
+    """Snapshot of the registry: name -> placement class (DESIGN.md
+    section 10)."""
     return dict(_REGISTRY)
 
 
@@ -244,16 +246,18 @@ class ShiftPlacement(Placement):
 
     @functools.cached_property
     def shifts(self) -> Tuple[int, ...]:  # type: ignore[override]
+        """The verified difference cover, sorted (the ppermute routes)."""
         A = tuple(sorted(a % self.P for a in self._cover()))
         assert is_difference_cover(A, self.P), (self.name, self.P, A)
         return A
 
     def residency(self, i: int) -> frozenset:
+        """Cyclic translate residency: device i holds ``A + i mod P``."""
         return frozenset((i + a) % self.P for a in self.shifts)
 
     @functools.cached_property
     def replication(self) -> int:  # type: ignore[override]
-        # every block lands in exactly k = |A| translates (paper Eq. 13)
+        """k = |A|: every block lands in exactly k translates (Eq. 13)."""
         return len(self.shifts)
 
     @functools.cached_property
@@ -299,6 +303,7 @@ class CyclicQuorumPlacement(ShiftPlacement):
 
     @classmethod
     def supports(cls, P: int) -> bool:
+        """Defined for every P >= 1 (the universal fallback)."""
         return P >= 1
 
     def _cover(self) -> Tuple[int, ...]:
@@ -373,6 +378,7 @@ class ProjectivePlanePlacement(ShiftPlacement):
 
     @classmethod
     def supports(cls, P: int) -> bool:
+        """True iff P = q^2+q+1 with a constructible Singer set."""
         return P >= 1 and _projective_cover(P) is not None
 
     @property
@@ -417,6 +423,7 @@ class AffinePlanePlacement(ShiftPlacement):
 
     @classmethod
     def supports(cls, P: int) -> bool:
+        """True iff P = q^2+q with a constructible almost-perfect cover."""
         return P >= 1 and _affine_cover(P) is not None
 
     @property
@@ -443,10 +450,12 @@ class FullReplicationPlacement(ShiftPlacement):
 
     @classmethod
     def supports(cls, P: int) -> bool:
+        """Defined for every P >= 1 (the all-gather baseline)."""
         return P >= 1
 
     @property
     def full(self) -> bool:  # type: ignore[override]
+        """True: the batch engine routes through allgather_allpairs."""
         return True
 
     def _cover(self) -> Tuple[int, ...]:
@@ -474,8 +483,9 @@ def _selection_order() -> Tuple[str, ...]:
 
 @functools.lru_cache(maxsize=512)
 def get_placement(name: str, P: int) -> Placement:
-    """Memoized placement instances — the canonical constructor.  Raises
-    ``ValueError`` for unknown names or P outside the definition domain."""
+    """Memoized placement instances — the canonical constructor
+    (DESIGN.md section 10).  Raises ``ValueError`` for unknown names or
+    P outside the definition domain."""
     cls = _REGISTRY.get(name)
     if cls is None:
         raise ValueError(
@@ -484,13 +494,15 @@ def get_placement(name: str, P: int) -> Placement:
 
 
 def supported_placements(P: int) -> List[Placement]:
-    """All registered placements defined at P (selection order)."""
+    """All registered placements defined at P, in selection order
+    (DESIGN.md section 10)."""
     return [get_placement(name, P) for name in _selection_order()
             if _REGISTRY[name].supports(P)]
 
 
 def auto_placement(P: int) -> Placement:
-    """The smallest-replication placement defined at P (ties -> cyclic).
+    """The smallest-replication placement defined at P, ties -> cyclic
+    (DESIGN.md section 10 "Selection").
 
     Deliberately not memoized on P alone: the winner depends on the
     registry, so a placement registered after a first selection still
@@ -509,7 +521,7 @@ def auto_placement(P: int) -> Placement:
 
 def plane_placement(P: int) -> Optional[Placement]:
     """The plane placement at P — projective first, then affine — or
-    None when neither plane is defined at P."""
+    None when neither plane is defined at P (DESIGN.md section 10)."""
     for name in ("projective", "affine"):
         if _REGISTRY[name].supports(P):
             return get_placement(name, P)
@@ -517,7 +529,7 @@ def plane_placement(P: int) -> Optional[Placement]:
 
 
 def resolve_placement(spec, P: int) -> Placement:
-    """Resolve a placement spec for P.
+    """Resolve a placement spec for P (DESIGN.md section 10 "Selection").
 
     ``spec`` may be a Placement instance (P must match), a registered
     name, ``"auto"`` (smallest replication), ``"plane"`` (projective ->
@@ -537,7 +549,8 @@ def resolve_placement(spec, P: int) -> Placement:
 
 
 def placement_from_env(P: int) -> Placement:
-    """The placement selected by ``REPRO_PLACEMENT`` (default ``auto``).
+    """The placement selected by ``REPRO_PLACEMENT`` (default ``auto``;
+    DESIGN.md section 10 "Selection").
 
     Mirrors ``core.allpairs.env_mode_override``: read at selection time
     (setting the env var after import works; already-compiled programs

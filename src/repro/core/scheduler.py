@@ -63,10 +63,12 @@ class PairSchedule:
 
     @property
     def k(self) -> int:
+        """Quorum size (blocks resident per device)."""
         return len(self.A)
 
     @property
     def n_pairs(self) -> int:
+        """Scheduled slot pairs per device (one per difference)."""
         return int(self.pair_slots.shape[0])
 
     def owner_of(self, x: int, y: int) -> int:
@@ -186,10 +188,12 @@ class CausalSchedule:
 
     @property
     def k(self) -> int:
+        """Quorum size (blocks resident per device)."""
         return len(self.A)
 
     @property
     def n_pairs(self) -> int:
+        """Candidate slot pairs per device (validity-masked)."""
         return int(self.pair_slots.shape[0])
 
 
@@ -252,6 +256,7 @@ class ReassignPlan:
 
     @property
     def n_recovered(self) -> int:
+        """Pairs this plan reassigns across both tiers."""
         return (sum(len(v) for v in self.extra_pairs.values())
                 + sum(len(v) for v in self.fetch_pairs.values()))
 

@@ -41,6 +41,7 @@ def pairwise_force(bi, bj):
 
 
 def oracle(x: np.ndarray) -> np.ndarray:
+    """Numpy O(N^2) oracle for the toy interaction."""
     n = x.shape[0]
     d = x[:, None, :] - x[None, :, :]
     r2 = (d * d).sum(-1) + 1e-3
@@ -53,6 +54,7 @@ def oracle(x: np.ndarray) -> np.ndarray:
 def main(nblocks: int | None = None,
          modes: tuple[str, ...] = ENGINE_MODES,
          placement: str | None = None) -> None:
+    """Run the engine selfcheck (see module docstring for the CLI)."""
     devs = jax.devices()
     Pn = nblocks or len(devs)
     assert len(devs) >= Pn, f"need {Pn} devices, have {len(devs)}"

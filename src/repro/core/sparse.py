@@ -1,0 +1,816 @@
+"""Thresholded sparse all-pairs similarity join over quorum placements.
+
+The batch engine (core.allpairs, DESIGN.md section 2) always reduces dense
+O(N^2) pair results back to blocks.  The canonical all-pairs workload in
+practice is the *similarity join* — report only the pairs whose score
+passes a threshold (Özkural & Aykanat's all-pairs similarity problem;
+Ullman's "some pairs") — where most of the pairwise work is a cheap
+rejection.  This module reuses the quorum schedule and every registered
+placement but emits only the passing ``(i, j, score)`` triples
+(DESIGN.md section 11):
+
+  1. **prefilter** — per-slot norm extrema give an upper bound on every
+     block-pair tile's best score (``|x·y| <= |x||y|`` for dot; the norm
+     interval gap for L2), so whole tiles whose bound misses the
+     threshold are skipped before any pairwise work.
+  2. **tile compute + threshold compaction** — each scheduled slot pair's
+     [block, block] score tile is thresholded and the passing entries are
+     cumsum-compacted into a fixed-capacity per-device buffer (jit-safe:
+     shapes are static, the count is a traced scalar).  A fused Pallas
+     kernel (kernels/pairwise_threshold.py) replaces the batched inner
+     step via the ``batch_fn`` hook, mirroring the dense engine.
+  3. **exactly-once emission** — the per-difference ownership rule
+     (core.scheduler, DESIGN.md section 3.2) plus the engine dedup mask
+     partition all unordered pairs across devices; self-pair tiles keep
+     only the strict upper triangle, so every passing global pair
+     ``i < j`` is reported by exactly one device.  An optional ppermute
+     ring gather (:func:`ring_allgather_hits`) replicates the per-device
+     sparse buffers everywhere while preserving that partition.
+
+**Capacity / overflow contract** (DESIGN.md section 11.2): buffers hold
+``capacity`` triples; ``count`` is always the *true* number of passing
+pairs on the device, and entries past ``capacity`` are dropped — never
+reordered or wrapped — so ``count > capacity`` (the overflow flag) is an
+exact escalation signal and the kept prefix is valid either way.
+:func:`similarity_join` implements the documented two-pass escalation:
+re-run with doubled capacity until the overflow flag clears.
+
+Execution modes mirror the dense engine's surface (DESIGN.md section 4)
+and honor the same ``REPRO_ALLPAIRS_MODE`` override: ``batched`` (all
+tiles in one einsum + one compaction), ``overlap`` (tiles compact
+incrementally as their later block lands, so XLA overlaps the remaining
+gather shifts), ``scan`` (serial per-pair carry; with the prefilter the
+``lax.cond`` genuinely skips pruned tiles' compute — the configuration
+BENCH_sparse.json measures).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import os
+from typing import Callable, NamedTuple, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from ..kernels.ref import IDX_SENTINEL, NEG_INF
+from .allpairs import (ENGINE_MODES, auto_batch_bytes, env_mode_override,
+                       mark_varying, pair_mask_table, pair_ready_order,
+                       quorum_gather)
+from .scheduler import PairSchedule
+
+__all__ = [
+    "SparseHits",
+    "JoinResult",
+    "default_capacity",
+    "pair_score_bounds",
+    "quorum_allpairs_threshold",
+    "ring_allgather_hits",
+    "similarity_join",
+    "brute_force_join",
+    "threshold_with_gap",
+    "threshold_for_selectivity",
+    "JOIN_METRICS",
+]
+
+JOIN_METRICS = ("dot", "l2")
+
+# global row ids ride through the fused kernel's one-hot matmul compaction
+# as exact float32 integers, which caps the corpus size (DESIGN.md 11.2)
+MAX_ROWS_F32_EXACT = 1 << 24
+
+
+class SparseHits(NamedTuple):
+    """One device's compacted passing pairs (inside shard_map).
+
+    vals  : [capacity] float32 — passing scores; slots >= min(count,
+            capacity) hold ``NEG_INF``.
+    i, j  : [capacity] int32 — global row ids with i < j; empty slots
+            hold ``IDX_SENTINEL``.
+    count : [] int32 — the TRUE number of passing pairs on this device
+            (may exceed capacity; see the overflow contract above).
+    """
+
+    vals: jax.Array
+    i: jax.Array
+    j: jax.Array
+    count: jax.Array
+
+
+def default_capacity(n_candidates: int) -> int:
+    """Starting per-device buffer capacity (DESIGN.md section 11.2).
+
+    ``REPRO_SPARSE_CAPACITY`` (documented in the README env-var table)
+    overrides; otherwise 1/8 of the device's candidate count, rounded up
+    to a lane-friendly multiple of 128 with a floor of 128.  Read at
+    selection time like the other ``REPRO_*`` knobs, and only a *start*:
+    :func:`similarity_join` doubles it until the overflow flag clears.
+    """
+    env = os.environ.get("REPRO_SPARSE_CAPACITY", "").strip()
+    if env:
+        cap = int(env)
+        if cap < 1:
+            raise ValueError(
+                f"REPRO_SPARSE_CAPACITY must be >= 1, got {cap}")
+        return cap
+    cap = max(128, -(-n_candidates // 8))
+    return -(-cap // 128) * 128
+
+
+def _norm_extrema(blk: jax.Array, valid: jax.Array):
+    """(max, min) row norm over a block's valid rows; (0, +inf) when the
+    block has none (which makes every bound below reject the tile)."""
+    norms = jnp.sqrt(jnp.sum(blk * blk, axis=-1))
+    return (jnp.max(jnp.where(valid, norms, 0.0), axis=-1),
+            jnp.min(jnp.where(valid, norms, jnp.inf), axis=-1))
+
+
+def _interval_bound(maxn_i, minn_i, maxn_j, minn_j, metric: str):
+    """Tile score upper bound from two blocks' norm extrema — the single
+    home of the DESIGN.md 11.1 derivation, shared by every mode.
+
+    ``dot``: Cauchy-Schwarz, ``x·y <= max|x| * max|y|``.  ``l2`` (score
+    = -|x-y|^2): reverse triangle inequality, ``|x-y| >= gap`` with gap
+    the distance between the [min|x|, max|x|] norm intervals, so the
+    score is at most ``-gap^2`` (an all-invalid block's +inf min norm
+    yields a -inf bound: always skipped).
+    """
+    if metric == "dot":
+        return maxn_i * maxn_j
+    gap = jnp.maximum(jnp.maximum(minn_i - maxn_j, minn_j - maxn_i), 0.0)
+    return -jnp.where(jnp.isinf(gap), jnp.inf, gap * gap)
+
+
+def pair_score_bounds(quorum: jax.Array, valid: jax.Array,
+                      lo_slots: jax.Array, hi_slots: jax.Array,
+                      metric: str) -> jax.Array:
+    """Upper bound on each scheduled tile's best score (DESIGN.md 11.1).
+
+    quorum: [k, block, d]; valid: [k, block] row validity; lo/hi_slots:
+    [n_pairs] slot ids.  Per-slot norm extrema feed
+    :func:`_interval_bound`; a tile whose bound misses the threshold
+    contains no passing pair and is skipped whole — the sparse engine's
+    prefilter.
+    """
+    if metric not in JOIN_METRICS:
+        raise ValueError(f"metric must be one of {JOIN_METRICS}, "
+                         f"got {metric!r}")
+    maxn, minn = _norm_extrema(quorum, valid)                    # [k]
+    return _interval_bound(maxn[lo_slots], minn[lo_slots],
+                           maxn[hi_slots], minn[hi_slots], metric)
+
+
+def _tile_scores(bi: jax.Array, bj: jax.Array, metric: str) -> jax.Array:
+    """[block, d] x [block, d] -> [block, block] under the join metric.
+
+    The L2 score is ``2 x·y - |x|^2 - |y|^2 = -|x - y|^2`` — the same
+    formula as the serving engine and the fused kernels, so float
+    rounding (and therefore threshold membership) agrees across paths.
+    """
+    dot = bi @ bj.T
+    if metric == "dot":
+        return dot
+    return (2.0 * dot - jnp.sum(bj * bj, axis=-1)[None, :]
+            - jnp.sum(bi * bi, axis=-1)[:, None])
+
+
+def _tile_emit(scores, keep, ga, gb, block: int):
+    """Per-tile global-id planes + canonical (i < j) orientation.
+
+    Blocks are disjoint row ranges, so the elementwise (min, max) of the
+    two global ids orients every entry; the self-pair tile is restricted
+    to the strict upper triangle by the caller, so i < j always holds.
+    """
+    r = lax.broadcasted_iota(jnp.int32, keep.shape, 0)
+    s = lax.broadcasted_iota(jnp.int32, keep.shape, 1)
+    gi = ga * block + r
+    gj = gb * block + s
+    return jnp.minimum(gi, gj), jnp.maximum(gi, gj)
+
+
+def _scatter_hits(bufs, count, keep_flat, vals_flat, i_flat, j_flat,
+                  capacity: int):
+    """Cumsum-compact passing entries into the running (bufs, count).
+
+    Positions are ``count + cumsum(keep) - 1``; entries at or past
+    ``capacity`` are dropped by the scatter (``mode="drop"``) while the
+    returned count still grows by the true passing total — the overflow
+    contract.  jit-safe: every shape is static.
+    """
+    vbuf, ibuf, jbuf = bufs
+    keep_i = keep_flat.astype(jnp.int32)
+    pos = count + jnp.cumsum(keep_i) - 1
+    pos = jnp.where(keep_flat, pos, capacity)        # parked out of range
+    vbuf = vbuf.at[pos].set(vals_flat, mode="drop")
+    ibuf = ibuf.at[pos].set(i_flat, mode="drop")
+    jbuf = jbuf.at[pos].set(j_flat, mode="drop")
+    return (vbuf, ibuf, jbuf), count + jnp.sum(keep_i)
+
+
+def _empty_bufs(capacity: int, axis_name: str):
+    """Varying-marked empty buffers (the scan carry / compaction init)."""
+    return (mark_varying(jnp.zeros((capacity,), jnp.float32), axis_name),
+            mark_varying(jnp.zeros((capacity,), jnp.int32), axis_name),
+            mark_varying(jnp.zeros((capacity,), jnp.int32), axis_name))
+
+
+def _finalize(bufs, count, capacity: int) -> SparseHits:
+    """Sentinel-fill the unused tail so every mode returns the same
+    padded layout: (NEG_INF, IDX_SENTINEL) past min(count, capacity)."""
+    vbuf, ibuf, jbuf = bufs
+    used = lax.broadcasted_iota(jnp.int32, (capacity,), 0) < count
+    return SparseHits(
+        vals=jnp.where(used, vbuf, NEG_INF),
+        i=jnp.where(used, ibuf, jnp.int32(IDX_SENTINEL)),
+        j=jnp.where(used, jbuf, jnp.int32(IDX_SENTINEL)),
+        count=count,
+    )
+
+
+def _select_mode(schedule: PairSchedule, block: int,
+                 batch_fn: Optional[Callable]) -> str:
+    """``mode="auto"`` for the sparse engine, mirroring the dense
+    heuristic (DESIGN.md section 4): env override first (a conflict with
+    a fused ``batch_fn`` raises), fused kernel -> batched, batched while
+    the [n_pairs, block, block] score/id working set fits the shared
+    ``REPRO_BATCH_BYTES_LIMIT`` budget, overlap when there are shifts to
+    hide (k >= 3), scan as the low-memory last resort."""
+    env = env_mode_override()
+    if env is not None:
+        if batch_fn is not None and env != "batched":
+            raise ValueError(
+                f"REPRO_ALLPAIRS_MODE={env} conflicts with a fused batch_fn "
+                "(the kernel only replaces the batched inner step)")
+        return env
+    if batch_fn is not None:
+        return "batched"
+    # scores f32 + two i32 id planes per tile entry
+    if schedule.n_pairs * block * block * 12 <= auto_batch_bytes():
+        return "batched"
+    if schedule.k >= 3:
+        return "overlap"
+    return "scan"
+
+
+def _pair_meta(schedule: PairSchedule, axis_name: str, block: int,
+               n_valid: Optional[int]):
+    """Per-pair traced metadata on this device: global block ids, valid
+    row counts, self-pair flags.  ``n_valid`` (static) marks trailing
+    padding rows of the global [P * block] numbering invalid."""
+    P = schedule.P
+    i = lax.axis_index(axis_name)
+    shifts = jnp.asarray(schedule.shifts, jnp.int32)
+    gblocks = (i + shifts) % P                                    # [k]
+    lo = jnp.asarray(schedule.pair_slots[:, 0])
+    hi = jnp.asarray(schedule.pair_slots[:, 1])
+    ga = gblocks[lo]
+    gb = gblocks[hi]
+    if n_valid is None:
+        nv = jnp.full((schedule.k,), block, jnp.int32)
+    else:
+        nv = jnp.clip(n_valid - gblocks * block, 0, block).astype(jnp.int32)
+    is_self = jnp.asarray(schedule.pair_diff == 0)
+    return lo, hi, ga, gb, nv[lo], nv[hi], is_self, gblocks, nv
+
+
+def quorum_allpairs_threshold(
+    x: jax.Array,
+    *,
+    threshold: float,
+    axis_name: str,
+    capacity: int,
+    schedule: PairSchedule | None = None,
+    axis_size: int | None = None,
+    placement=None,
+    metric: str = "dot",
+    mode: str = "auto",
+    mask: jax.Array | None = None,
+    n_valid: int | None = None,
+    prefilter: bool = True,
+    batch_fn: Callable[..., Tuple[jax.Array, ...]] | None = None,
+) -> SparseHits:
+    """Distributed thresholded similarity join (DESIGN.md section 11).
+
+    Must run inside shard_map with ``x`` the local [block, d] shard.
+    Emits every global pair ``i < j`` with ``score(x_i, x_j) >=
+    threshold`` exactly once across devices (the per-difference ownership
+    partition; self-pair tiles keep the strict upper triangle, the even-P
+    d = P/2 orbit is deduplicated by ``mask`` exactly as in the dense
+    engine).  Returns this device's :class:`SparseHits` under the
+    capacity/overflow contract in the module docstring.
+
+    ``placement`` / ``schedule`` / ``axis_size`` select the residency
+    layer exactly as in :func:`core.allpairs.quorum_allpairs` (env
+    ``REPRO_PLACEMENT`` consulted when both are None); a full-replication
+    placement runs the same generic pipeline over its A = {0..P-1}
+    shifts — no allgather special case, the join output is already
+    sparse.  ``mode`` is the batched/overlap/scan surface of DESIGN.md
+    section 4 (``REPRO_ALLPAIRS_MODE`` honored); ``prefilter`` toggles
+    the norm-bound tile skip (:func:`pair_score_bounds`);
+    ``n_valid`` (static int) invalidates global rows >= n_valid (corpus
+    padding); ``batch_fn(quorum, lo, hi, meta) -> (vals, i, j, count)``
+    is the fused-kernel hook (kernels.ops.pairwise_threshold), batched
+    mode only.
+    """
+    if metric not in JOIN_METRICS:
+        raise ValueError(f"metric must be one of {JOIN_METRICS}, "
+                         f"got {metric!r}")
+    if mode not in ENGINE_MODES + ("auto",):
+        raise ValueError(f"mode must be one of {ENGINE_MODES + ('auto',)}, "
+                         f"got {mode!r}")
+    if batch_fn is not None and mode not in ("batched", "auto"):
+        raise ValueError(
+            f"batch_fn only replaces the batched inner step (got "
+            f"mode={mode!r}); drop it or use mode='batched'")
+    if capacity < 1:
+        raise ValueError(f"capacity must be >= 1, got {capacity}")
+    if placement is not None:
+        if axis_size is not None and placement.P != axis_size:
+            raise ValueError(
+                f"placement is for P={placement.P} but axis_size={axis_size}")
+        if schedule is not None and schedule.P != placement.P:
+            raise ValueError(
+                f"placement is for P={placement.P} but schedule.P="
+                f"{schedule.P}")
+    if placement is None and schedule is None:
+        assert axis_size is not None, "need schedule, placement, or axis_size"
+        from .placement import placement_from_env
+        placement = placement_from_env(axis_size)
+    if schedule is None:
+        schedule = placement.schedule()
+
+    block = x.shape[0]
+    if mask is None:
+        table = jnp.asarray(pair_mask_table(schedule))   # [P, n_pairs]
+        mask = jnp.take(table, lax.axis_index(axis_name), axis=0)
+    mask = mask.reshape(-1)
+
+    if mode == "auto":
+        mode = _select_mode(schedule, block, batch_fn)
+
+    lo, hi, ga, gb, nv_lo, nv_hi, is_self, gblocks, nv = _pair_meta(
+        schedule, axis_name, block, n_valid)
+    thr = jnp.float32(threshold)
+
+    if mode == "overlap":
+        return _overlap_join(x, schedule, mask, thr, capacity, metric,
+                             prefilter, axis_name,
+                             (lo, hi, ga, gb, nv_lo, nv_hi, is_self), nv)
+
+    quorum = quorum_gather(x, schedule, axis_name)       # [k, block, d]
+    valid = (lax.broadcasted_iota(jnp.int32, (schedule.k, block), 1)
+             < nv[:, None])
+    active = mask > 0
+    if prefilter:
+        bounds = pair_score_bounds(quorum, valid, lo, hi, metric)
+        active = active & (bounds >= thr)
+
+    if mode == "batched":
+        # the batched jnp step IS the ref oracle — one home for the
+        # threshold-membership compute/compaction (DESIGN.md 11.3), with
+        # a fused Pallas kernel swapping in through the same hook
+        if batch_fn is None:
+            from ..kernels import ref as kref
+            batch_fn = functools.partial(
+                kref.pairwise_threshold, threshold=thr, capacity=capacity,
+                block_rows=block, metric=metric)
+        meta = jnp.stack([active.astype(jnp.int32),
+                          is_self.astype(jnp.int32),
+                          ga, gb, nv_lo, nv_hi], axis=1)  # [n_pairs, 6]
+        vals, ei, ej, count = batch_fn(quorum, lo, hi, meta)
+        return SparseHits(vals=vals, i=ei, j=ej,
+                          count=count.reshape(()).astype(jnp.int32))
+
+    return _scan_join(quorum, schedule, active, thr, capacity, metric, block,
+                      (lo, hi, ga, gb, nv_lo, nv_hi, is_self), axis_name)
+
+
+def _tile_keep(scores, thr, nv_lo, nv_hi, is_self):
+    """Threshold + row-validity + self-pair strict-triangle mask."""
+    r = lax.broadcasted_iota(jnp.int32, scores.shape, 0)
+    s = lax.broadcasted_iota(jnp.int32, scores.shape, 1)
+    keep = (scores >= thr) & (r < nv_lo) & (s < nv_hi)
+    return keep & jnp.where(is_self, r < s, True)
+
+
+def _scan_join(quorum, schedule, active, thr, capacity, metric, block,
+               meta, axis_name) -> SparseHits:
+    """Serial per-pair scan; pruned/masked tiles skip their compute via
+    ``lax.cond`` — with the prefilter this is a real FLOP saving, not
+    just a masked multiply (the BENCH_sparse.json configuration)."""
+    lo, hi, ga, gb, nv_lo, nv_hi, is_self = meta
+
+    def body(carry, inp):
+        bufs, count = carry
+        lo_p, hi_p, act_p, self_p, ga_p, gb_p, nvl_p, nvh_p = inp
+
+        def compute(c):
+            bufs_c, cnt = c
+            bi = jnp.take(quorum, lo_p, axis=0)
+            bj = jnp.take(quorum, hi_p, axis=0)
+            scores = _tile_scores(bi, bj, metric)
+            keep = _tile_keep(scores, thr, nvl_p, nvh_p, self_p)
+            ei, ej = _tile_emit(scores, keep, ga_p, gb_p, block)
+            return _scatter_hits(bufs_c, cnt, keep.reshape(-1),
+                                 scores.reshape(-1).astype(jnp.float32),
+                                 ei.reshape(-1), ej.reshape(-1), capacity)
+
+        return lax.cond(act_p, compute, lambda c: c, (bufs, count)), None
+
+    init = (_empty_bufs(capacity, axis_name),
+            mark_varying(jnp.int32(0), axis_name))
+    (bufs, count), _ = lax.scan(
+        body, init, (lo, hi, active, is_self, ga, gb, nv_lo, nv_hi))
+    return _finalize(bufs, count, capacity)
+
+
+def _overlap_join(x, schedule, mask, thr, capacity, metric, prefilter,
+                  axis_name, meta, nv) -> SparseHits:
+    """Double-buffered gather/compact: each tile is scored and compacted
+    as soon as its later block lands, so XLA's latency-hiding scheduler
+    overlaps the remaining ppermutes with tile compute (the sparse analog
+    of the dense overlap mode, DESIGN.md section 4).  Memory stays
+    O(block^2) per in-flight tile group plus the output buffers.
+    ``nv`` is the per-slot valid-row count: each slot's norm extrema are
+    computed once at land time and feed the shared bound helper."""
+    lo, hi, ga, gb, nv_lo, nv_hi, is_self = meta
+    ready = pair_ready_order(schedule)
+    lo_np = schedule.pair_slots[:, 0]
+    hi_np = schedule.pair_slots[:, 1]
+    block = x.shape[0]
+
+    landed: list = []
+    extrema: list = []
+    state = [(_empty_bufs(capacity, axis_name),
+              mark_varying(jnp.int32(0), axis_name))]
+
+    def on_land(slot: int, blk: jax.Array) -> None:
+        landed.append(blk)
+        if prefilter:
+            vrow = lax.broadcasted_iota(jnp.int32, (block,), 0) < nv[slot]
+            extrema.append(_norm_extrema(blk, vrow))
+        for idx in ready[slot]:
+            l_s, h_s = int(lo_np[idx]), int(hi_np[idx])
+            bi, bj = landed[l_s], landed[h_s]
+            act = mask[idx] > 0
+            if prefilter:
+                (mx_i, mn_i), (mx_j, mn_j) = extrema[l_s], extrema[h_s]
+                act = act & (_interval_bound(mx_i, mn_i, mx_j, mn_j,
+                                             metric) >= thr)
+
+            def compute(c, bi=bi, bj=bj, idx=idx):
+                bufs_c, cnt = c
+                scores = _tile_scores(bi, bj, metric)
+                keep = _tile_keep(scores, thr, nv_lo[idx], nv_hi[idx],
+                                  is_self[idx])
+                ei, ej = _tile_emit(scores, keep, ga[idx], gb[idx],
+                                    x.shape[0])
+                return _scatter_hits(bufs_c, cnt, keep.reshape(-1),
+                                     scores.reshape(-1).astype(jnp.float32),
+                                     ei.reshape(-1), ej.reshape(-1), capacity)
+
+            state[0] = lax.cond(act, compute, lambda c: c, state[0])
+
+    quorum_gather(x, schedule, axis_name, overlap_fn=on_land)
+    bufs, count = state[0]
+    return _finalize(bufs, count, capacity)
+
+
+def ring_allgather_hits(hits: SparseHits, *, axis_name: str,
+                        P: int) -> SparseHits:
+    """Replicate every device's sparse buffers with a ppermute ring
+    (DESIGN.md section 11.3).
+
+    P - 1 single-step ``lax.ppermute`` shifts rotate each device's
+    (vals, i, j, count) past every other device; arrivals are placed at
+    their source device's row, so all devices end with the identical
+    device-ordered [P, capacity] stack — the sparse analog of the dense
+    engine's collectives (no ``all_gather``, matching the repo's
+    shift-only data plane).  The pair-ownership partition guarantees the
+    union of rows lists every passing pair exactly once.
+    """
+    i = lax.axis_index(axis_name)
+    fields = [hits.vals, hits.i, hits.j, hits.count.reshape(1)]
+    out = [jnp.zeros((P,) + f.shape, f.dtype).at[i].set(f) for f in fields]
+    perm = [(j, (j + 1) % P) for j in range(P)]
+    cur = fields
+    for step in range(1, P):
+        cur = [lax.ppermute(c, axis_name, perm) for c in cur]
+        src = (i - step) % P
+        out = [o.at[src].set(c) for o, c in zip(out, cur)]
+    vals, ei, ej, count = out
+    return SparseHits(vals=vals, i=ei, j=ej, count=count.reshape(P))
+
+
+# ---------------------------------------------------------------------------
+# Host-level driver: padding, program cache, capacity escalation
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class JoinResult:
+    """Host-side similarity-join output (:func:`similarity_join`).
+
+    i, j, scores : the passing pairs, sorted by (i, j); i < j, each pair
+        exactly once.  ``counts`` is the per-device true passing totals,
+        ``capacity`` the final per-device buffer size, ``escalations``
+        how many capacity doublings the overflow contract forced, and
+        ``overflow`` whether the final pass still overflowed (only with
+        ``escalate=False`` — the kept pairs are then a valid prefix).
+    """
+
+    i: np.ndarray
+    j: np.ndarray
+    scores: np.ndarray
+    counts: np.ndarray
+    capacity: int
+    escalations: int
+    overflow: bool
+
+    @property
+    def n_pairs(self) -> int:
+        """Number of passing pairs reported."""
+        return int(self.i.shape[0])
+
+
+@functools.lru_cache(maxsize=64)
+def _join_fn(mesh, axis_name: str, N: int, block: int, threshold: float,
+             metric: str, mode: str, capacity: int, prefilter: bool,
+             use_kernel: bool, placement):
+    """Build (and cache) the jitted distributed join program — one trace
+    per (mesh, shape, threshold, capacity, ...) key, reused across
+    escalation retries at the same capacity and repeated joins."""
+    from jax.sharding import PartitionSpec as PS
+    sched = placement.schedule()
+    mask_table = jnp.asarray(pair_mask_table(sched))
+    batch_fn = None
+    if use_kernel:
+        if mode not in ("batched", "auto"):
+            raise ValueError(
+                f"use_kernel needs the batched mode (got mode={mode!r}); "
+                "the fused kernel only replaces the batched inner step")
+        from ..kernels import ops as kops
+        batch_fn = functools.partial(
+            kops.pairwise_threshold, threshold=threshold, capacity=capacity,
+            block_rows=block, metric=metric)
+
+    def body(xb, mb):
+        hits = quorum_allpairs_threshold(
+            xb, threshold=threshold, axis_name=axis_name, capacity=capacity,
+            schedule=sched, mask=mb, metric=metric, mode=mode,
+            n_valid=N, prefilter=prefilter, batch_fn=batch_fn)
+        return hits.vals, hits.i, hits.j, hits.count.reshape(1)
+
+    spec = PS(axis_name)
+    fn = jax.jit(jax.shard_map(
+        body, mesh=mesh, in_specs=(spec, spec),
+        out_specs=(spec, spec, spec, spec)))
+    return lambda xs: fn(xs, mask_table)
+
+
+def similarity_join(corpus, mesh, *, threshold: float, axis_name: str = "q",
+                    metric: str = "dot", mode: str = "auto", placement=None,
+                    capacity: int | None = None, prefilter: bool = True,
+                    use_kernel: bool = False, escalate: bool = True,
+                    max_doublings: int = 16) -> JoinResult:
+    """All pairs of ``corpus`` rows with score >= threshold, exactly once.
+
+    The host entry point (DESIGN.md section 11): pads the [N, d] corpus
+    into P quorum blocks, runs :func:`quorum_allpairs_threshold` under
+    the selected placement (None defers to ``REPRO_PLACEMENT``), and
+    applies the two-pass capacity escalation — whenever any device's
+    overflow flag is set, the per-device ``capacity`` doubles and the
+    join re-runs (a fresh jit at each capacity; the kept work is only the
+    cheap rejected majority, which is the point of the workload).  With
+    ``escalate=False`` an overflowing pass returns its valid prefix with
+    ``overflow=True`` instead of retrying.
+
+    ``use_kernel`` routes the batched inner step through the fused Pallas
+    kernel (kernels/pairwise_threshold.py); ``prefilter`` toggles the
+    norm-bound block-pair skip.  Returns a :class:`JoinResult` with pairs
+    sorted by (i, j).
+    """
+    corpus = np.asarray(corpus, np.float32)
+    N, d = corpus.shape
+    if N >= MAX_ROWS_F32_EXACT:
+        raise ValueError(
+            f"corpus has {N} rows >= 2^24; global row ids would lose "
+            "float32 exactness in the fused kernel's compaction")
+    P = mesh.shape[axis_name]
+    from .placement import placement_from_env, resolve_placement
+    plc = (placement_from_env(P) if placement is None
+           else resolve_placement(placement, P))
+    block = -(-N // P)
+    x = np.zeros((P * block, d), np.float32)
+    x[:N] = corpus
+    xs = jnp.asarray(x)
+    sched = plc.schedule()
+    n_cand = sched.n_pairs * block * block
+    cap = int(capacity) if capacity is not None else default_capacity(n_cand)
+
+    escalations = 0
+    while True:
+        run = _join_fn(mesh, axis_name, N, block, float(threshold), metric,
+                       mode, cap, prefilter, use_kernel, plc)
+        vals, gi, gj, counts = (np.asarray(a) for a in run(xs))
+        counts = counts.reshape(-1)
+        overflow = bool((counts > cap).any())
+        if not overflow or not escalate or escalations >= max_doublings:
+            break
+        cap = 2 * cap
+        escalations += 1
+    if overflow and escalate:
+        raise RuntimeError(
+            f"similarity join still overflows capacity {cap} after "
+            f"{escalations} doublings; raise `capacity`/`max_doublings` "
+            "or the threshold")
+
+    vals = vals.reshape(P, -1)
+    gi = gi.reshape(P, -1)
+    gj = gj.reshape(P, -1)
+    keep_i, keep_j, keep_v = [], [], []
+    for dev in range(P):
+        n = min(int(counts[dev]), cap)
+        keep_i.append(gi[dev, :n])
+        keep_j.append(gj[dev, :n])
+        keep_v.append(vals[dev, :n])
+    ai = np.concatenate(keep_i)
+    aj = np.concatenate(keep_j)
+    av = np.concatenate(keep_v)
+    order = np.lexsort((aj, ai))
+    return JoinResult(i=ai[order], j=aj[order], scores=av[order],
+                      counts=counts, capacity=cap, escalations=escalations,
+                      overflow=overflow)
+
+
+def _pair_score_matrix(corpus: np.ndarray, metric: str) -> np.ndarray:
+    """Host-side [N, N] score matrix with the engine's f32 formulas."""
+    if metric not in JOIN_METRICS:
+        raise ValueError(f"metric must be one of {JOIN_METRICS}, "
+                         f"got {metric!r}")
+    c = np.asarray(corpus, np.float32)
+    s = c @ c.T
+    if metric == "l2":
+        n2 = (c * c).sum(-1)
+        s = 2.0 * s - n2[None, :] - n2[:, None]
+    return s
+
+
+def brute_force_join(corpus: np.ndarray, threshold: float,
+                     metric: str = "dot"):
+    """Dense O(N^2) oracle: all (i, j, score) with i < j and score >=
+    threshold, sorted by (i, j).  Scores use the same float32 formula as
+    the engine (DESIGN.md section 11.3) so membership agrees away from
+    exact-threshold ties; tests pick thresholds with a guaranteed gap."""
+    s = _pair_score_matrix(corpus, metric)
+    iu, ju = np.triu_indices(s.shape[0], k=1)
+    keep = s[iu, ju] >= threshold
+    return iu[keep], ju[keep], s[iu, ju][keep]
+
+
+def threshold_with_gap(scores, selectivity: float,
+                       min_gap: float = 1e-4) -> float:
+    """A threshold passing ~``selectivity`` of ``scores`` (any shape),
+    placed at the midpoint of a score gap wider than ``min_gap`` near
+    that quantile, so float-rounding differences between engine paths
+    cannot flip membership (DESIGN.md section 11.3).  The single home of
+    the gap-placement idiom — the pairwise wrapper below and the serving
+    selfcheck both use it."""
+    flat = np.sort(np.asarray(scores, np.float32).reshape(-1))[::-1]
+    target = max(1, min(len(flat) - 2, int(round(selectivity * len(flat)))))
+    # widen the search until an adjacent gap exceeds min_gap
+    for off in range(0, len(flat) - 1):
+        for idx in (target - off, target + off):
+            if 0 < idx < len(flat):
+                gap = flat[idx - 1] - flat[idx]
+                if gap > min_gap:
+                    return float((flat[idx - 1] + flat[idx]) / 2.0)
+    raise ValueError("no score gap wide enough for a robust threshold")
+
+
+def threshold_for_selectivity(corpus: np.ndarray, selectivity: float,
+                              metric: str = "dot",
+                              min_gap: float = 1e-4) -> float:
+    """A join threshold passing ~``selectivity`` of all unordered pairs
+    of ``corpus`` rows — :func:`threshold_with_gap` over the upper
+    triangle of the pairwise score matrix (DESIGN.md section 11.3)."""
+    s = _pair_score_matrix(corpus, metric)
+    iu, ju = np.triu_indices(s.shape[0], k=1)
+    return threshold_with_gap(s[iu, ju], selectivity, min_gap)
+
+
+# ---------------------------------------------------------------------------
+# Selfcheck (subprocess entry point — tests/test_sparse.py sweeps this)
+# ---------------------------------------------------------------------------
+
+def selfcheck_main(nblocks: int | None = None,
+                   modes: Sequence[str] = ENGINE_MODES + ("kernel",),
+                   placement: str | None = None) -> None:
+    """Distributed sparse-join selfcheck, mirroring core.selfcheck
+    (DESIGN.md section 11.5).
+
+    Run as ``XLA_FLAGS=--xla_force_host_platform_device_count=<P> python
+    -m repro.core.sparse [P] [modes] [placement]``.  Asserts index-level
+    pair-set equality with the dense brute-force oracle for every
+    requested mode (incl. the fused ``kernel`` batched path), both
+    metrics, prefilter on/off, plus the ring-gather replication and the
+    overflow/escalation contract.
+    """
+    from .placement import placement_from_env, resolve_placement
+
+    devs = jax.devices()
+    Pn = nblocks or len(devs)
+    assert len(devs) >= Pn, f"need {Pn} devices, have {len(devs)}"
+    plc = (placement_from_env(Pn) if placement is None
+           else resolve_placement(placement, Pn))
+    mesh = jax.make_mesh((Pn,), ("q",), devices=devs[:Pn])
+    block, d = 8, 16
+    rng = np.random.default_rng(0)
+    N = Pn * block - 3          # ragged tail: exercises row validity
+    corpus = rng.normal(size=(N, d)).astype(np.float32)
+    # two low-norm block spans make whole tiles prunable for `dot`
+    corpus[: 2 * block] *= 0.05
+
+    for metric in JOIN_METRICS:
+        thr = threshold_for_selectivity(corpus, 0.08, metric)
+        wi, wj, wv = brute_force_join(corpus, thr, metric)
+        label = f"P={Pn} metric={metric}"
+        for m in modes:
+            mode, uk = ("batched", True) if m == "kernel" else (m, False)
+            for pf in (True, False):
+                res = similarity_join(corpus, mesh, threshold=thr,
+                                      metric=metric, mode=mode,
+                                      placement=plc, use_kernel=uk,
+                                      prefilter=pf)
+                np.testing.assert_array_equal(
+                    res.i, wi, err_msg=f"{label} mode={m} prefilter={pf}")
+                np.testing.assert_array_equal(
+                    res.j, wj, err_msg=f"{label} mode={m} prefilter={pf}")
+                np.testing.assert_allclose(
+                    res.scores, wv, rtol=1e-5, atol=1e-5,
+                    err_msg=f"{label} mode={m} prefilter={pf}")
+
+    # overflow contract: a capacity below the busiest device's true count
+    # must flag, keep a valid prefix, and escalate back to the full answer
+    thr = threshold_for_selectivity(corpus, 0.08, "dot")
+    wi, wj, _ = brute_force_join(corpus, thr, "dot")
+    base = similarity_join(corpus, mesh, threshold=thr, placement=plc)
+    np.testing.assert_array_equal(base.i, wi)
+    np.testing.assert_array_equal(base.j, wj)
+    mx = int(base.counts.max())
+    assert mx >= 2, (mx, "corpus too small to exercise overflow")
+    cap_small = max(1, mx // 2)
+    low = similarity_join(corpus, mesh, threshold=thr, capacity=cap_small,
+                          placement=plc, escalate=False)
+    assert low.overflow and (low.counts > cap_small).any(), low.counts
+    got = set(zip(low.i.tolist(), low.j.tolist()))
+    assert got <= set(zip(wi.tolist(), wj.tolist())) and len(got) == len(low.i)
+    esc = similarity_join(corpus, mesh, threshold=thr, capacity=cap_small,
+                          placement=plc)
+    assert esc.escalations >= 1, esc.escalations
+    np.testing.assert_array_equal(esc.i, wi)
+    np.testing.assert_array_equal(esc.j, wj)
+
+    # ppermute ring gather: every device ends with the identical stack
+    from jax.sharding import PartitionSpec as PS
+    sched = plc.schedule()
+    blockc = -(-N // Pn)
+    xs = np.zeros((Pn * blockc, d), np.float32)
+    xs[:N] = corpus
+    mask_table = jnp.asarray(pair_mask_table(sched))
+    cap = esc.capacity
+
+    def body(xb, mb):
+        hits = quorum_allpairs_threshold(
+            xb, threshold=thr, axis_name="q", capacity=cap, schedule=sched,
+            mask=mb, n_valid=N)
+        g = ring_allgather_hits(hits, axis_name="q", P=Pn)
+        return (hits.vals, hits.i, hits.count.reshape(1),
+                g.vals[None], g.i[None], g.count[None])
+
+    spec = PS("q")
+    out = jax.jit(jax.shard_map(
+        body, mesh=mesh, in_specs=(spec, spec),
+        out_specs=(spec,) * 6))(jnp.asarray(xs), mask_table)
+    lv, li, lc, gv, gi_, gc = (np.asarray(a) for a in out)
+    lv, li = lv.reshape(Pn, cap), li.reshape(Pn, cap)
+    for dev in range(Pn):           # every device's gathered copy agrees
+        np.testing.assert_array_equal(gv[dev], lv)
+        np.testing.assert_array_equal(gi_[dev], li)
+        np.testing.assert_array_equal(gc[dev], lc.reshape(Pn))
+
+    sel = len(wi) / max(1, N * (N - 1) // 2)
+    print(f"sparse selfcheck OK: P={Pn} placement={plc.describe()} "
+          f"modes={','.join(modes)} hits={len(wi)} "
+          f"selectivity={100 * sel:.1f}% capacity={esc.capacity}")
+
+
+if __name__ == "__main__":
+    import sys
+    selfcheck_main(
+        int(sys.argv[1]) if len(sys.argv) > 1 else None,
+        tuple(sys.argv[2].split(",")) if len(sys.argv) > 2
+        else ENGINE_MODES + ("kernel",),
+        sys.argv[3] if len(sys.argv) > 3 else None)

@@ -23,6 +23,7 @@ import numpy as np
 
 @dataclasses.dataclass(frozen=True)
 class DataConfig:
+    """Data-source settings shared by the synthetic and file loaders."""
     kind: str = "synthetic"       # synthetic | file
     path: Optional[str] = None    # .bin of uint16/uint32 tokens (file kind)
     seed: int = 0
@@ -62,6 +63,7 @@ def _file_tokens(cfg: DataConfig, step: int, arr: np.ndarray) -> np.ndarray:
 
 def make_batch(cfg: DataConfig, step: int, arr: Optional[np.ndarray] = None
                ) -> Dict[str, np.ndarray]:
+    """One deterministic (tokens, labels) batch for ``step``."""
     if cfg.kind == "file":
         assert arr is not None
         chunk = _file_tokens(cfg, step, arr)     # [B, T+1]
@@ -86,6 +88,7 @@ def make_batch(cfg: DataConfig, step: int, arr: Optional[np.ndarray] = None
 
 def synthetic_batches(cfg: DataConfig, start_step: int = 0
                       ) -> Iterator[Dict[str, np.ndarray]]:
+    """Endless batch iterator (file-backed when cfg.kind == "file")."""
     arr = None
     if cfg.kind == "file":
         raw = np.fromfile(cfg.path, dtype=np.uint16)

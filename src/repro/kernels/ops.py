@@ -1,14 +1,28 @@
-"""Jit'd public entry points for the Pallas kernels.
+"""Jit'd public entry points for the Pallas kernels (DESIGN.md section 6).
 
 On TPU backends the kernels run compiled; elsewhere (CPU tests, smoke) they
 run in interpret mode, which executes the kernel body in Python with
 identical block semantics — the per-kernel allclose sweeps in
 tests/test_kernels.py validate every (shape, dtype) cell against ref.py.
+
+The three engine ``batch_fn`` hooks (:func:`pairwise_batch_forces`,
+:func:`query_topk`, :func:`pairwise_threshold`) additionally degrade
+gracefully when the Pallas lowering itself is unavailable on the running
+backend (an ``ImportError``/``NotImplementedError`` from the kernel
+machinery — e.g. a jax build without Pallas support): they fall back to
+the bit-parity jnp oracle in ref.py with a one-time warning, so an engine
+configured with ``use_kernel=True`` stays correct everywhere.  Numeric
+kernel bugs are *not* masked — those surface as value mismatches in the
+kernel sweeps, never as these exception types.  Both dispatch layers
+(interpret-vs-compiled via :func:`_interpret`, kernel-absent via
+:func:`_call_with_fallback`) are covered directly in
+tests/test_ops_dispatch.py.
 """
 
 from __future__ import annotations
 
 import functools
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -21,7 +35,29 @@ from .pcit_filter import pcit_filter_pallas
 
 
 def _interpret() -> bool:
+    """True when the Pallas kernels should run in interpret mode (any
+    backend without a Mosaic TPU compiler — CPU tests, GPU smoke).  The
+    dispatch every jit'd entry point below routes through (DESIGN.md
+    section 6)."""
     return jax.default_backend() != "tpu"
+
+
+def _call_with_fallback(kernel_thunk, ref_thunk, name: str):
+    """Run a Pallas engine-hook kernel, degrading to its ref.py oracle.
+
+    Only ``ImportError`` / ``NotImplementedError`` — the "kernel is
+    absent on this backend" signals raised at trace time by the Pallas
+    machinery — trigger the fallback; anything else (shape errors,
+    numeric asserts) propagates so real kernel bugs stay visible.
+    """
+    try:
+        return kernel_thunk()
+    except (ImportError, NotImplementedError) as e:
+        warnings.warn(
+            f"Pallas kernel {name!r} unavailable on this backend "
+            f"({type(e).__name__}: {e}); falling back to the jnp "
+            "reference implementation", RuntimeWarning, stacklevel=2)
+        return ref_thunk()
 
 
 def _pad_to(x, multiple, axis):
@@ -36,7 +72,8 @@ def _pad_to(x, multiple, axis):
 
 @functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
 def pairwise_corr(xs_i, xs_j, *, bm=128, bn=128, bk=128):
-    """Correlation tile [M, N] of standardized blocks [M, G] x [N, G].
+    """Correlation tile [M, N] of standardized blocks [M, G] x [N, G]
+    (PCIT phase 2; DESIGN.md section 6).
 
     Pads every dim up to the tile multiple and slices back, so arbitrary
     shapes are accepted (padded K columns are zeros — exact for the dot).
@@ -52,7 +89,8 @@ def pairwise_corr(xs_i, xs_j, *, bm=128, bn=128, bk=128):
 
 @functools.partial(jax.jit, static_argnames=("bm", "bn", "bz"))
 def pcit_filter(r_xy, rows_x, rows_y, gx, gy, *, bm=128, bn=128, bz=128):
-    """PCIT keep tile [M, N]; see kernels/pcit_filter.py.
+    """PCIT keep tile [M, N]; see kernels/pcit_filter.py (DESIGN.md
+    section 6).
 
     Padded z columns get rows == 0 which yields eps ratios that never
     explain an edge with |r_xy| > 0; padded z ids are also >= N so the
@@ -79,7 +117,8 @@ def pcit_filter(r_xy, rows_x, rows_y, gx, gy, *, bm=128, bn=128, bz=128):
 
 @functools.partial(jax.jit, static_argnames=("softening",))
 def pairwise_batch_forces(quorum, lo, hi, wi, wj, *, softening=1e-2):
-    """Fused batched n-body step for the engine's ``batch_fn`` hook.
+    """Fused batched n-body step for the engine's ``batch_fn`` hook
+    (DESIGN.md section 6).
 
     quorum: [k, block, 4]; lo/hi: [n_pairs] slot ids; wi/wj: [n_pairs]
     per-side pair weights (engine passes mask and self-zeroed mask).
@@ -87,19 +126,25 @@ def pairwise_batch_forces(quorum, lo, hi, wi, wj, *, softening=1e-2):
 
     Pads block up to the 8-sublane multiple with zero-mass bodies at the
     origin — exact, since zero mass contributes zero force either way —
-    and slices back.
+    and slices back.  Falls back to ref.pairwise_batch_forces when the
+    Pallas lowering is absent (see module docstring).
     """
     q, block = _pad_to(quorum, 8, 1)
     w = jnp.stack([jnp.asarray(wi, jnp.float32),
                    jnp.asarray(wj, jnp.float32)], axis=1)
-    out = pairwise_batch_pallas(q, lo, hi, w, softening=softening,
-                                interpret=_interpret())
+    out = _call_with_fallback(
+        lambda: pairwise_batch_pallas(q, lo, hi, w, softening=softening,
+                                      interpret=_interpret()),
+        lambda: ref.pairwise_batch_forces(q, lo, hi, w[:, 0], w[:, 1],
+                                          softening=softening),
+        "pairwise_batch_forces")
     return out[:, :block]
 
 
 @functools.partial(jax.jit, static_argnames=("topk", "metric"))
 def query_topk(stack, queries, mask, gidx, *, topk, metric="dot"):
-    """Fused serving scoring step for the query engine's ``batch_fn`` hook.
+    """Fused serving scoring step for the query engine's ``batch_fn``
+    hook (DESIGN.md section 9.3).
 
     stack: [k, block, d] quorum blocks; queries: [Q, d]; mask: [k, block]
     float (cover dedup x row validity); gidx: [k, block] int32 global row
@@ -108,17 +153,61 @@ def query_topk(stack, queries, mask, gidx, *, topk, metric="dot"):
 
     Pads Q up to the 8-sublane multiple with zero queries and slices the
     padded rows back off — exact, the extra rows never leave the wrapper.
+    Falls back to ref.query_topk when the Pallas lowering is absent (see
+    module docstring).
     """
     from .query_score import query_topk_pallas
     q, Q = _pad_to(queries, 8, 0)
-    vals, idx = query_topk_pallas(stack, q, mask, gidx, topk=topk,
-                                  metric=metric, interpret=_interpret())
+    vals, idx = _call_with_fallback(
+        lambda: query_topk_pallas(stack, q, mask, gidx, topk=topk,
+                                  metric=metric, interpret=_interpret()),
+        lambda: ref.query_topk(stack, q, mask, gidx, topk=topk,
+                               metric=metric),
+        "query_topk")
     return vals[:Q], idx[:Q]
+
+
+@functools.partial(jax.jit, static_argnames=("threshold", "capacity",
+                                             "block_rows", "metric"))
+def pairwise_threshold(quorum, lo, hi, meta, *, threshold, capacity,
+                       block_rows, metric="dot"):
+    """Fused thresholded-join step for the sparse engine's ``batch_fn``
+    hook (core/sparse.py; DESIGN.md section 11).
+
+    quorum: [k, block, d]; lo/hi: [n_pairs] slot ids; meta: [n_pairs, 6]
+    int32 ``(active, is_self, ga, gb, nv_lo, nv_hi)``.  ``threshold`` is
+    a *static* float (the kernel bakes it in; the host join program is
+    cached per threshold), ``capacity`` the per-device buffer size,
+    ``block_rows`` the global block stride for row-id math.  Returns
+    ``(vals f32 [capacity], i i32 [capacity], j i32 [capacity],
+    count i32 [])`` under the overflow contract of DESIGN.md 11.2.
+
+    Pads block rows up to the 8-sublane multiple with zero rows — exact,
+    the valid-row bounds in ``meta`` already reject them — and capacity
+    up to the 128-lane multiple, slicing back (the dropped tail keeps the
+    first-``capacity`` prefix semantics).  Falls back to
+    ref.pairwise_threshold when the Pallas lowering is absent (see
+    module docstring).
+    """
+    from .pairwise_threshold import pairwise_threshold_pallas
+    q, _ = _pad_to(quorum, 8, 1)
+    capp = -(-capacity // 128) * 128
+    vals, gi, gj, count = _call_with_fallback(
+        lambda: pairwise_threshold_pallas(
+            q, lo, hi, meta, threshold=threshold, capacity=capp,
+            block_rows=block_rows, metric=metric, interpret=_interpret()),
+        lambda: ref.pairwise_threshold(
+            q, lo, hi, meta, threshold=threshold, capacity=capp,
+            block_rows=block_rows, metric=metric),
+        "pairwise_threshold")
+    return (vals[:capacity], gi[:capacity], gj[:capacity],
+            count.reshape(()))
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "bq", "bk"))
 def flash_attention(q, k, v, *, causal=True, bq=128, bk=128):
-    """4-d entry point: q [B, Tq, H, hd], k/v [B, Tk, KV, hd] (GQA).
+    """4-d entry point: q [B, Tq, H, hd], k/v [B, Tk, KV, hd] (GQA; the
+    attention substrate of DESIGN.md section 6).
 
     K/V heads are broadcast to H before flattening to the kernel's [BH, T,
     hd] layout.  (A production TPU kernel indexes kv-heads in the grid map
@@ -141,7 +230,8 @@ def flash_attention(q, k, v, *, causal=True, bq=128, bk=128):
 
 @functools.partial(jax.jit, static_argnames=("chunk",))
 def ssd_chunk(x, dt, A, Bm, Cm, *, chunk=256):
-    """Full SSD via the Pallas intra-chunk kernel + jnp inter-chunk scan.
+    """Full SSD via the Pallas intra-chunk kernel + jnp inter-chunk scan
+    (the SSM substrate of DESIGN.md section 6).
 
     x: [B, T, H, P]; dt: [B, T, H]; A: [H]; Bm/Cm: [B, T, N].
     Returns y [B, T, H, P] float32 (parity with ref.ssd_chunk).

@@ -104,6 +104,66 @@ def query_topk(stack, queries, mask, gidx, *, topk: int,
     return -sv[:, :topk], si[:, :topk]
 
 
+def pairwise_threshold(quorum, lo, hi, meta, *, threshold: float,
+                       capacity: int, block_rows: int, metric: str = "dot"):
+    """Thresholded sparse-join compaction oracle
+    (kernels/pairwise_threshold.py; DESIGN.md section 11).
+
+    quorum: [k, block, d]; lo/hi: [n_pairs] slot ids; meta: [n_pairs, 6]
+    int32 rows ``(active, is_self, ga, gb, nv_lo, nv_hi)`` — tile skip
+    flag (prefilter x dedup mask), self-pair flag, the two global block
+    ids, and the two valid-row counts.  Emits each passing entry's
+    ``(score, min_gid, max_gid)`` with ``gid = g * block_rows + row``,
+    compacted in (pair-major, row-major) order into [capacity] buffers;
+    entries past capacity are dropped while the returned count keeps the
+    true total (the overflow contract).  Returns
+    ``(vals f32 [capacity], i i32 [capacity], j i32 [capacity],
+    count i32 [])``; unused slots are (NEG_INF, IDX_SENTINEL).
+    """
+    if metric not in ("dot", "l2"):
+        raise ValueError(f"metric must be one of ('dot', 'l2'), "
+                         f"got {metric!r}")
+    quorum = quorum.astype(jnp.float32)
+    lo = jnp.asarray(lo, jnp.int32)
+    hi = jnp.asarray(hi, jnp.int32)
+    meta = jnp.asarray(meta, jnp.int32)
+    lhs = jnp.take(quorum, lo, axis=0)          # [n_pairs, block, d]
+    rhs = jnp.take(quorum, hi, axis=0)
+    dots = jnp.einsum("pbd,pcd->pbc", lhs, rhs)
+    if metric == "l2":
+        scores = (2.0 * dots
+                  - jnp.sum(rhs * rhs, axis=-1)[:, None, :]
+                  - jnp.sum(lhs * lhs, axis=-1)[:, :, None])
+    else:
+        scores = dots
+    active, is_self, ga, gb, nv_lo, nv_hi = (meta[:, c] for c in range(6))
+    r = jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
+    s = jax.lax.broadcasted_iota(jnp.int32, scores.shape, 2)
+    keep = (scores >= threshold) & (active == 1)[:, None, None]
+    keep &= (r < nv_lo[:, None, None]) & (s < nv_hi[:, None, None])
+    keep &= jnp.where((is_self == 1)[:, None, None], r < s, True)
+    gi = ga[:, None, None] * block_rows + r
+    gj = gb[:, None, None] * block_rows + s
+    ei = jnp.minimum(gi, gj).reshape(-1)
+    ej = jnp.maximum(gi, gj).reshape(-1)
+    keep = keep.reshape(-1)
+    vals = scores.reshape(-1).astype(jnp.float32)
+    pos = jnp.cumsum(keep.astype(jnp.int32)) - 1
+    pos = jnp.where(keep, pos, capacity)
+    count = jnp.sum(keep.astype(jnp.int32))
+    vbuf = jnp.full((capacity,), NEG_INF, jnp.float32
+                    ).at[pos].set(vals, mode="drop")
+    ibuf = jnp.full((capacity,), jnp.int32(IDX_SENTINEL)
+                    ).at[pos].set(ei, mode="drop")
+    jbuf = jnp.full((capacity,), jnp.int32(IDX_SENTINEL)
+                    ).at[pos].set(ej, mode="drop")
+    used = jnp.arange(capacity) < count
+    return (jnp.where(used, vbuf, NEG_INF),
+            jnp.where(used, ibuf, jnp.int32(IDX_SENTINEL)),
+            jnp.where(used, jbuf, jnp.int32(IDX_SENTINEL)),
+            count)
+
+
 def flash_attention(q, k, v, *, causal: bool) -> jax.Array:
     """Plain attention oracle: q [B, Tq, H, hd], k/v [B, Tk, KV, hd]."""
     B, Tq, H, hd = q.shape

@@ -1,12 +1,10 @@
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-
 """Multi-pod dry-run: lower + compile every (arch x shape) cell on the
 production meshes and extract memory / cost / collective-schedule data.
 
-The two lines above MUST stay first: jax locks the device count at first
-initialization, and the 512 placeholder host devices exist only inside this
-process (tests and benches see 1 device).
+The XLA_FLAGS assignment below MUST stay ahead of every jax import: jax
+locks the device count at first initialization, and the 512 placeholder
+host devices exist only inside this process (tests and benches see 1
+device).
 
 Per cell this produces:
   * full compile  — the real scanned model; proves sharding coherence and
@@ -22,6 +20,9 @@ Usage:
   python -m repro.launch.dryrun --arch qwen3_14b --shape train_4k [--multi-pod]
   python -m repro.launch.dryrun --all [--out results/dryrun]
 """
+
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 
 import argparse
 import dataclasses
@@ -193,6 +194,7 @@ def _jit_for_cell(cfg, shape, mesh, opt_cfg, *, accum: int = 1):
 def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
              cost_variants: bool = True, verbose: bool = True,
              overrides: Dict[str, Any] | None = None) -> Dict[str, Any]:
+    """Compile one (arch, shape) cell; returns its metrics dict."""
     shape = SHAPES[shape_name]
     mesh = make_production_mesh(multi_pod=multi_pod)
     base_cfg = get_config(arch)
@@ -281,6 +283,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
 
 
 def main(argv=None):
+    """CLI driver (see module docstring for usage)."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=[*ARCHS], default=None)
     ap.add_argument("--shape", choices=list(SHAPES), default=None)

@@ -29,6 +29,8 @@ from ..core.scheduler import PairSchedule, ReassignPlan, reassign
 
 @dataclasses.dataclass(frozen=True)
 class RescalePlan:
+    """A quorum-axis resize / placement-migration plan (DESIGN.md
+    section 8): per-device new residency and the blocks to fetch."""
     P_old: int
     P_new: int
     schedule: PairSchedule
@@ -42,6 +44,7 @@ class RescalePlan:
 
     @property
     def total_fetch_blocks(self) -> int:
+        """Blocks moved across devices by this plan (the cost)."""
         return sum(len(v) for v in self.fetches.values())
 
     @property

@@ -20,6 +20,7 @@ from jax.sharding import PartitionSpec as PS
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    """The 256-device (or 512, multi-pod) production dry-run mesh."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
     return jax.make_mesh(shape, axes,
@@ -28,6 +29,7 @@ def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
 
 def make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...],
               devices=None) -> Mesh:
+    """jax.make_mesh with every axis in Auto mode (the repo default)."""
     return jax.make_mesh(shape, axes, devices=devices,
                          axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
 
@@ -61,6 +63,7 @@ def resolve_spec(placeholder, cfg, mesh: Mesh, *, zero1: bool = False) -> PS:
 
 
 def resolve_spec_tree(placeholders, cfg, mesh: Mesh, *, zero1: bool = False):
+    """Map resolve_spec over a placeholder pytree."""
     return jax.tree.map(
         lambda ph: resolve_spec(ph, cfg, mesh, zero1=zero1), placeholders,
         is_leaf=lambda x: isinstance(x, tuple) and all(
@@ -68,6 +71,7 @@ def resolve_spec_tree(placeholders, cfg, mesh: Mesh, *, zero1: bool = False):
 
 
 def named(mesh: Mesh, spec: PS) -> NamedSharding:
+    """Shorthand NamedSharding constructor."""
     return NamedSharding(mesh, spec)
 
 
@@ -105,6 +109,7 @@ def fix_spec_for_shape(shape: Tuple[int, ...], spec: PS, mesh: Mesh) -> PS:
 
 
 def fix_spec_tree(sds_tree, spec_tree, mesh: Mesh):
+    """Map fix_spec_for_shape over matching (shape, spec) pytrees."""
     return jax.tree.map(
         lambda sds, spec: fix_spec_for_shape(sds.shape, spec, mesh),
         sds_tree, spec_tree)

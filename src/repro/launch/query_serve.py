@@ -65,6 +65,7 @@ def serve_queries(sc: ServingCorpus, queries: np.ndarray, *, microbatch: int,
 
 
 def main(argv=None):
+    """CLI driver: steady-state queries/sec report (see module doc)."""
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--n", type=int, default=4096, help="corpus rows")
     ap.add_argument("--d", type=int, default=64, help="embedding dim")

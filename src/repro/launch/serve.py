@@ -22,6 +22,7 @@ from .mesh import make_mesh
 
 def serve(arch: str, *, smoke: bool = True, batch: int = 4, prompt_len: int = 16,
           gen_len: int = 32, seed: int = 0, greedy: bool = True):
+    """Prefill + decode ``gen_len`` tokens with the arch's LM."""
     cfg = get_smoke_config(arch) if smoke else get_config(arch)
     if cfg.encdec:
         raise SystemExit("enc-dec serving is exercised in tests (whisper)")
@@ -54,6 +55,7 @@ def serve(arch: str, *, smoke: bool = True, batch: int = 4, prompt_len: int = 16
 
 
 def main(argv=None):
+    """CLI driver for :func:`serve`."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=list(ARCHS), required=True)
     ap.add_argument("--batch", type=int, default=4)

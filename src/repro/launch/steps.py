@@ -30,6 +30,7 @@ Tree = Any
 
 
 def model_module(cfg: ModelConfig):
+    """The model family module (lm or whisper) for this config."""
     return whisper if cfg.encdec else lm
 
 
@@ -102,6 +103,7 @@ def build_prefill_step(cfg: ModelConfig):
 
 
 def build_serve_step(cfg: ModelConfig):
+    """One-token decode step closure over the model family."""
     mod = model_module(cfg)
 
     def serve_step(params, state, tokens):
@@ -217,6 +219,7 @@ def decode_state_specs(cfg: ModelConfig, shape, mesh: Mesh):
 
 
 def param_and_opt_specs(cfg: ModelConfig, mesh: Mesh):
+    """Resolved (param, optimizer-state) PartitionSpec trees."""
     from .mesh import fix_spec_tree
     mod = model_module(cfg)
     placeholders = mod.param_specs(cfg)
@@ -230,10 +233,12 @@ def param_and_opt_specs(cfg: ModelConfig, mesh: Mesh):
 
 
 def param_shapes(cfg: ModelConfig):
+    """Parameter ShapeDtypeStructs via eval_shape (no allocation)."""
     mod = model_module(cfg)
     return jax.eval_shape(functools.partial(mod.init_params, cfg),
                           jax.random.key(0))
 
 
 def opt_shapes(params_sds):
+    """AdamW state ShapeDtypeStructs matching ``params_sds``."""
     return jax.eval_shape(adamw_init, params_sds)

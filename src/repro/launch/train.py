@@ -35,6 +35,7 @@ def train(arch: str, *, smoke: bool = True, steps: int = 50, batch: int = 8,
           seq: int = 128, ckpt_dir: str | None = None, ckpt_every: int = 25,
           mesh_spec: str | None = None, lr: float = 3e-4,
           log_every: int = 10, resume: bool = True, seed: int = 0):
+    """Train ``arch`` for ``steps`` on synthetic data; returns losses."""
     cfg = get_smoke_config(arch) if smoke else get_config(arch)
     if cfg.encdec:
         raise SystemExit("use examples/train_lm.py families; enc-dec training "
@@ -93,6 +94,7 @@ def train(arch: str, *, smoke: bool = True, steps: int = 50, batch: int = 8,
 
 
 def main(argv=None):
+    """CLI driver for :func:`train`."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=list(ARCHS), required=True)
     ap.add_argument("--smoke", action="store_true", default=True)

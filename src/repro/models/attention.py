@@ -21,6 +21,7 @@ NEG_INF = -1e30
 
 
 def attn_defs(cfg) -> Tree:
+    """Attention block ParamDefs (GQA q/k/v/o + norms)."""
     d, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
     defs = {
         "wq": ParamDef((d, H, hd), ("F", "T", None), fan_in=d),

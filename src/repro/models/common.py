@@ -22,6 +22,7 @@ Tree = Dict[str, Any]
 
 @dataclasses.dataclass(frozen=True)
 class ParamDef:
+    """Declarative parameter: shape, placeholder spec, init recipe."""
     shape: Tuple[int, ...]
     spec: Tuple[Optional[str], ...]      # placeholder spec, same rank as shape
     init: str = "normal"                 # normal | zeros | ones | embed
@@ -76,12 +77,14 @@ def spec_tree(defs: Tree) -> Tree:
 # ---------------------------------------------------------------------------
 
 def rmsnorm(x, gamma, eps=1e-6):
+    """RMSNorm in f32 accumulation, cast back to x.dtype."""
     x32 = x.astype(jnp.float32)
     var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
     return (x32 * jax.lax.rsqrt(var + eps)).astype(x.dtype) * gamma
 
 
 def layernorm(x, gamma, beta, eps=1e-5):
+    """LayerNorm in f32 accumulation, cast back to x.dtype."""
     x32 = x.astype(jnp.float32)
     mu = jnp.mean(x32, axis=-1, keepdims=True)
     var = jnp.var(x32, axis=-1, keepdims=True)
@@ -90,6 +93,7 @@ def layernorm(x, gamma, beta, eps=1e-5):
 
 
 def norm_defs(cfg) -> Tree:
+    """ParamDefs for the config's norm flavor."""
     if cfg.norm == "layernorm":
         return {"gamma": ParamDef((cfg.d_model,), (None,), "ones"),
                 "beta": ParamDef((cfg.d_model,), (None,), "zeros")}
@@ -97,6 +101,7 @@ def norm_defs(cfg) -> Tree:
 
 
 def apply_norm(cfg, p: Tree, x):
+    """Apply the config's norm flavor with params ``p``."""
     if cfg.norm == "layernorm":
         return layernorm(x, p["gamma"], p["beta"])
     return rmsnorm(x, p["gamma"])
@@ -107,6 +112,7 @@ def apply_norm(cfg, p: Tree, x):
 # ---------------------------------------------------------------------------
 
 def rope_freqs(head_dim: int, theta: float) -> np.ndarray:
+    """RoPE inverse frequencies for ``head_dim`` (numpy, host-side)."""
     return 1.0 / (theta ** (np.arange(0, head_dim, 2) / head_dim))
 
 
@@ -158,6 +164,7 @@ def sincos_positions(seq: int, d_model: int) -> np.ndarray:
 # ---------------------------------------------------------------------------
 
 def mlp_defs(cfg, d_ff: Optional[int] = None) -> Tree:
+    """MLP ParamDefs (swiglu or gelu layout per config)."""
     d, f = cfg.d_model, d_ff or cfg.d_ff
     if cfg.mlp == "swiglu":
         return {
@@ -172,6 +179,7 @@ def mlp_defs(cfg, d_ff: Optional[int] = None) -> Tree:
 
 
 def apply_mlp(cfg, p: Tree, x):
+    """Apply the config's MLP flavor with params ``p``."""
     if cfg.mlp == "swiglu":
         h = jax.nn.silu(x @ p["wg"]) * (x @ p["wi"])
     else:

@@ -10,6 +10,8 @@ import jax.numpy as jnp
 
 @dataclasses.dataclass(frozen=True)
 class ModelConfig:
+    """One frozen hyperparameter record describing a model family
+    member (dense / ssm / hybrid / moe / audio / vlm)."""
     name: str = "model"
     family: str = "dense"          # dense | ssm | hybrid | moe | audio | vlm
     n_layers: int = 2
@@ -90,10 +92,12 @@ class ModelConfig:
 
     @property
     def d_inner(self) -> int:      # mamba2 inner width
+        """Mamba2 inner width (expand * d_model)."""
         return self.ssm_expand * self.d_model
 
     @property
     def ssm_heads(self) -> int:
+        """SSM head count implied by inner width / head dim."""
         return max(1, self.d_inner // self.ssm_head_dim)
 
     def pattern(self) -> Tuple[str, ...]:
@@ -112,11 +116,13 @@ class ModelConfig:
 
     @property
     def n_superblocks(self) -> int:
+        """How many times the layer pattern repeats."""
         pat = self.pattern()
         assert self.n_layers % len(pat) == 0, (self.n_layers, pat)
         return self.n_layers // len(pat)
 
     def is_moe_layer(self, layer_in_pattern: int) -> bool:
+        """True iff this pattern position carries the MoE MLP."""
         if self.moe_experts == 0:
             return False
         return layer_in_pattern % self.moe_every == (self.moe_every - 1)

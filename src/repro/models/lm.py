@@ -52,6 +52,7 @@ def _layer_defs(cfg: ModelConfig, kind: str, j: int) -> Tree:
 
 
 def model_defs(cfg: ModelConfig) -> Tree:
+    """The full LM ParamDef tree (embed, layers, final norm)."""
     V, d = cfg.vocab_size, cfg.d_model
     defs: Tree = {
         "embed": ParamDef((V, d), ("T", "F"), "embed"),
@@ -71,14 +72,17 @@ def model_defs(cfg: ModelConfig) -> Tree:
 
 
 def init_params(cfg: ModelConfig, key: jax.Array) -> Tree:
+    """Materialize model_defs with the config init recipes."""
     return init_tree(model_defs(cfg), key, cfg.dtype)
 
 
 def param_specs(cfg: ModelConfig) -> Tree:
+    """Placeholder PartitionSpec tree matching model_defs."""
     return spec_tree(model_defs(cfg))
 
 
 def count_params(cfg: ModelConfig) -> int:
+    """Exact parameter count from the def tree (no allocation)."""
     leaves = jax.tree.leaves(model_defs(cfg),
                              is_leaf=lambda x: isinstance(x, ParamDef))
     return int(sum(int(np.prod(d.shape)) for d in leaves))

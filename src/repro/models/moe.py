@@ -21,6 +21,7 @@ from .common import ParamDef, Tree
 
 
 def moe_defs(cfg) -> Tree:
+    """MoE block ParamDefs (router + expert-stacked MLPs)."""
     d, f, E = cfg.d_model, cfg.d_ff, cfg.moe_experts
     defs = {
         "router": ParamDef((d, E), (None, None), scale=0.1),

@@ -20,6 +20,7 @@ from .common import ParamDef, Tree, rmsnorm
 
 
 def ssm_defs(cfg) -> Tree:
+    """Mamba2 block ParamDefs (in/out proj, conv, dt/A/D)."""
     d, di = cfg.d_model, cfg.d_inner
     N, H = cfg.ssm_state, cfg.ssm_heads
     conv_ch = di + 2 * N  # conv over x, B, C streams (mamba2 layout)
@@ -146,6 +147,7 @@ def mamba_block(cfg, p: Tree, x, *, state=None):
 
 
 def init_ssm_state(cfg, batch: int):
+    """Zeroed decode-time SSM carry (conv tail + state)."""
     di, N = cfg.d_inner, cfg.ssm_state
     H, Pd = cfg.ssm_heads, cfg.ssm_head_dim
     return {

@@ -32,6 +32,7 @@ def _dec_layer_defs(cfg) -> Tree:
 
 
 def model_defs(cfg: ModelConfig) -> Tree:
+    """Encoder-decoder ParamDef tree (embed, enc/dec stacks, norms)."""
     n_enc = cfg.n_enc_layers or cfg.n_layers
     n_dec = cfg.n_layers
     lead = lambda defs, n: jax.tree.map(  # noqa: E731
@@ -47,14 +48,17 @@ def model_defs(cfg: ModelConfig) -> Tree:
 
 
 def init_params(cfg: ModelConfig, key: jax.Array) -> Tree:
+    """Materialize model_defs with the config init recipes."""
     return init_tree(model_defs(cfg), key, cfg.dtype)
 
 
 def param_specs(cfg: ModelConfig) -> Tree:
+    """Placeholder PartitionSpec tree matching model_defs."""
     return spec_tree(model_defs(cfg))
 
 
 def count_params(cfg: ModelConfig) -> int:
+    """Exact parameter count from the def tree (no allocation)."""
     leaves = jax.tree.leaves(model_defs(cfg),
                              is_leaf=lambda x: isinstance(x, ParamDef))
     return int(sum(int(np.prod(d.shape)) for d in leaves))
@@ -117,12 +121,14 @@ def decode_train(cfg: ModelConfig, params: Tree, tokens: jax.Array,
 
 
 def forward(cfg: ModelConfig, params: Tree, batch: Dict[str, jax.Array]):
+    """Encode frames, teacher-forced decode; returns (logits, aux)."""
     memory = encode(cfg, params, batch["frames"])
     logits = decode_train(cfg, params, batch["tokens"], memory)
     return logits, jnp.zeros((), jnp.float32)
 
 
 def loss_fn(cfg: ModelConfig, params: Tree, batch: Dict[str, jax.Array], **_):
+    """Masked cross-entropy over valid (label >= 0) positions."""
     logits, aux = forward(cfg, params, batch)
     labels = batch["labels"]
     mask = (labels >= 0).astype(jnp.float32)

@@ -19,6 +19,7 @@ import jax.numpy as jnp
 
 @dataclasses.dataclass(frozen=True)
 class AdamWConfig:
+    """AdamW + cosine-schedule hyperparameters."""
     lr: float = 3e-4
     b1: float = 0.9
     b2: float = 0.95
@@ -31,6 +32,7 @@ class AdamWConfig:
 
 
 def cosine_lr(cfg: AdamWConfig, step):
+    """Warmup + cosine decay learning rate at ``step``."""
     step = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
     warm = jnp.minimum(1.0, (step + 1) / max(1, cfg.warmup_steps))
     t = jnp.clip((step - cfg.warmup_steps)
@@ -40,6 +42,7 @@ def cosine_lr(cfg: AdamWConfig, step):
 
 
 def adamw_init(params) -> Dict[str, Any]:
+    """Fresh f32 (m, v, count) state matching ``params``."""
     zeros32 = lambda p: jnp.zeros(p.shape, jnp.float32)  # noqa: E731
     return {
         "m": jax.tree.map(zeros32, params),

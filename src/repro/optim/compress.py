@@ -36,6 +36,7 @@ def _stochastic_round_bf16(x: jax.Array, key) -> jax.Array:
 
 
 def compress_bf16(tree: Tree, key=None) -> Tree:
+    """Cast a gradient tree to bf16 (stochastic rounding with a key)."""
     if key is None:
         return jax.tree.map(lambda g: g.astype(jnp.bfloat16), tree)
     leaves, treedef = jax.tree.flatten(tree)
@@ -59,6 +60,7 @@ def compress_int8(tree: Tree) -> Tree:
 
 
 def decompress_int8(tree: Tree) -> Tree:
+    """Invert compress_int8: rescale block codes back to f32."""
     def dec(e):
         blocks = e["codes"].astype(jnp.float32) * e["scale"]
         flat = blocks.reshape(-1)

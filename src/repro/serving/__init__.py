@@ -14,7 +14,7 @@ See DESIGN.md section 9 ("Online serving").
 """
 
 from .cover import CoverPlan, build_cover
-from .engine import ServingCorpus, quorum_query_topk
+from .engine import ServingCorpus, quorum_query_threshold, quorum_query_topk
 from .stream import ServingState, build_state, replace_block
 
 __all__ = [
@@ -22,6 +22,7 @@ __all__ = [
     "build_cover",
     "ServingCorpus",
     "quorum_query_topk",
+    "quorum_query_threshold",
     "ServingState",
     "build_state",
     "replace_block",

@@ -70,7 +70,8 @@ def _quorum(P: int, A: Sequence[int], i: int) -> frozenset:
 
 
 def is_cover(P: int, A: Sequence[int], devices: Sequence[int]) -> bool:
-    """True iff the quorums of ``devices`` jointly cover all P blocks."""
+    """True iff the quorums of ``devices`` jointly cover all P blocks
+    (the cover-validity predicate of DESIGN.md section 9.1)."""
     got: set = set()
     for i in devices:
         got |= _quorum(P, A, i)
@@ -78,7 +79,8 @@ def is_cover(P: int, A: Sequence[int], devices: Sequence[int]) -> bool:
 
 
 def closed_form_cover(P: int, A: Sequence[int]) -> List[int]:
-    """The always-valid size-k cover ``C = -A mod P`` (cyclic closed form).
+    """The always-valid size-k cover ``C = -A mod P`` (the cyclic closed
+    form of DESIGN.md section 9.1).
 
     For every residue r, the difference-cover property gives a_i - a_j = r
     (mod P), so quorum S_{-a_j} = A - a_j contains r.  No search, O(k).
@@ -88,7 +90,8 @@ def closed_form_cover(P: int, A: Sequence[int]) -> List[int]:
 
 def step_cover(P: int, A: Sequence[int]) -> List[int] | None:
     """Cover by translates at multiples of m, when A hits every residue
-    mod m (e.g. the ladder sets contain the run {0..r-1}).
+    mod m — e.g. the ladder sets contain the run {0..r-1} (DESIGN.md
+    section 9.1).
 
     For block b >= a with a = min{x in A : x ≡ b (mod m)}, b - a is a
     multiple of m below P, so b is in the quorum of a chosen translate;
@@ -116,7 +119,8 @@ def step_cover(P: int, A: Sequence[int]) -> List[int] | None:
 
 
 def greedy_cover(P: int, A: Sequence[int]) -> List[int]:
-    """Classic greedy set-cover over the P cyclic translates."""
+    """Classic greedy set-cover over the P cyclic translates (DESIGN.md
+    section 9.1)."""
     quorums = [_quorum(P, A, i) for i in range(P)]
     uncovered = set(range(P))
     cover: List[int] = []
@@ -131,7 +135,8 @@ def exact_cover_sets(residency: Sequence[Sequence[int]], ub: int, *,
                      holders: Optional[Dict[int, List[int]]] = None,
                      pin_first: Optional[int] = None) -> List[int] | None:
     """Minimal device cover of *arbitrary* residency sets by
-    branch-and-bound, or None if nothing beats ``ub``.
+    branch-and-bound, or None if nothing beats ``ub`` (DESIGN.md
+    sections 9.1 and 10 "Threading").
 
     ``residency[i]`` is the block set device i holds (any placement, not
     just cyclic translates).  Branches on the holders of the smallest
@@ -178,7 +183,8 @@ def exact_cover_sets(residency: Sequence[Sequence[int]], ub: int, *,
 
 def exact_cover(P: int, A: Sequence[int], ub: int) -> List[int] | None:
     """Minimal cover of the P cyclic translates of A, or None if nothing
-    beats ``ub``.  Thin wrapper over :func:`exact_cover_sets` pinning
+    beats ``ub`` (DESIGN.md section 9.1).
+    Thin wrapper over :func:`exact_cover_sets` pinning
     device 0 (sound by translational symmetry) and branching holders in
     the historical shift order, so cyclic results are unchanged."""
     sets = [_quorum(P, A, i) for i in range(P)]
@@ -215,10 +221,12 @@ class CoverPlan:
 
     @property
     def k(self) -> int:
+        """Quorum size (slots per device) the slot mask is defined over."""
         return len(self.A)
 
     @property
     def n_cover(self) -> int:
+        """Devices a query fans out to (~ceil(P/k) in the best case)."""
         return len(self.devices)
 
     def mask_table(self) -> np.ndarray:
@@ -230,7 +238,8 @@ _COVER_CACHE: dict = {}
 
 
 def build_cover(P: int, placement=None) -> CoverPlan:
-    """Build (and memo-cache) the smallest verified cover plan for P.
+    """Build (and memo-cache) the smallest verified cover plan for P
+    (DESIGN.md section 9.1).
 
     Pure function of (P, placement) — like the schedules — so elastic
     resize just recomputes it.  ``placement`` is a

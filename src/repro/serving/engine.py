@@ -46,10 +46,11 @@ from jax import lax
 from jax.sharding import PartitionSpec as PS
 
 from ..core.allpairs import (ENGINE_MODES, auto_batch_bytes,
-                             env_mode_override)
+                             env_mode_override, mark_varying)
 from ..core.placement import (Placement, get_placement, placement_from_env,
                               resolve_placement)
 from ..core.scheduler import PairSchedule
+from ..core.sparse import default_capacity
 from ..kernels.ref import IDX_SENTINEL, NEG_INF, QUERY_METRICS as METRICS
 from .cover import build_cover
 from .stream import ServingState, build_state, replace_block
@@ -60,6 +61,7 @@ __all__ = [
     "merge_topk",
     "tree_merge_topk",
     "quorum_query_topk",
+    "quorum_query_threshold",
     "ServingCorpus",
 ]
 
@@ -255,6 +257,187 @@ def quorum_query_topk(
     return tree_merge_topk(vals, idx, axis_name=axis_name, P=P, topk=topk)
 
 
+def _compact_rows(vbuf, ibuf, cnt, keep, vals, idx, capacity: int):
+    """Append each query row's kept entries to its (vbuf, ibuf) prefix.
+
+    keep/vals/idx: [Q, M] candidates; positions are per-row
+    ``cnt + cumsum(keep) - 1`` and entries past ``capacity`` drop while
+    ``cnt`` grows by the true kept total — the same overflow contract as
+    the batch sparse engine (core/sparse.py, DESIGN.md section 11.2).
+    """
+    keep_i = keep.astype(jnp.int32)
+    pos = cnt[:, None] + jnp.cumsum(keep_i, axis=1) - 1
+    pos = jnp.where(keep, pos, capacity)
+    rows = lax.broadcasted_iota(jnp.int32, pos.shape, 0)
+    vbuf = vbuf.at[rows, pos].set(vals.astype(vbuf.dtype), mode="drop")
+    ibuf = ibuf.at[rows, pos].set(idx.astype(jnp.int32), mode="drop")
+    return vbuf, ibuf, cnt + jnp.sum(keep_i, axis=1)
+
+
+def _select_threshold_mode(schedule: PairSchedule, queries,
+                           block: int) -> str:
+    """``mode="auto"`` for the thresholded query path: the shared
+    ``REPRO_ALLPAIRS_MODE`` override first, then batched while the
+    [Q, k*block] score working set (x2 for the compaction copy) fits the
+    ``REPRO_BATCH_BYTES_LIMIT`` budget, overlap when k >= 3, else scan —
+    the same shape as the top-k heuristic minus the (inapplicable) fused
+    kernel arm."""
+    env = env_mode_override()
+    if env is not None:
+        return env
+    Q = queries.shape[0]
+    itemsize = jnp.dtype(queries.dtype).itemsize
+    if 2 * Q * schedule.k * block * itemsize <= auto_batch_bytes():
+        return "batched"
+    if schedule.k >= 3:
+        return "overlap"
+    return "scan"
+
+
+def quorum_query_threshold(
+    queries: jax.Array,
+    stack: jax.Array,
+    stack_valid: jax.Array,
+    mask_row: jax.Array,
+    *,
+    threshold: jax.Array,
+    capacity: int,
+    axis_name: str,
+    schedule: PairSchedule,
+    mode: str = "auto",
+    metric: str = "dot",
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Range query: every corpus row scoring >= threshold, per query.
+
+    The sparse sibling of :func:`quorum_query_topk` (DESIGN.md section
+    11.4): the same cover-routed local scoring under the dedup mask —
+    each valid corpus row is scored by exactly one device — but instead
+    of a top-k selection, passing rows are cumsum-compacted into
+    fixed-capacity [Q, capacity] buffers, and a **ppermute ring gather**
+    (P - 1 single-step shifts) appends every other device's passing
+    prefix, so all devices end with the identical global result, sorted
+    by ascending corpus index.
+
+    Must run inside shard_map.  ``threshold`` is a traced f32 scalar (one
+    compiled program serves any threshold at a given capacity).  Returns
+    ``(scores [Q, capacity], indices [Q, capacity], count [Q])``; count
+    is each query's TRUE passing total — ``count > capacity`` flags
+    overflow (escalate per DESIGN.md 11.2; overflowing buffers keep a
+    valid but device-order-dependent subset), and slots past
+    ``min(count, capacity)`` hold (NEG_INF, IDX_SENTINEL) sentinels.
+    """
+    if mode not in ENGINE_MODES + ("auto",):
+        raise ValueError(f"mode must be one of {ENGINE_MODES + ('auto',)}, "
+                         f"got {mode!r}")
+    if metric not in METRICS:
+        raise ValueError(f"metric must be one of {METRICS}, got {metric!r}")
+    k, block, d = stack.shape
+    Q = queries.shape[0]
+    mask_row = mask_row.reshape(-1)
+    if mode == "auto":
+        mode = _select_threshold_mode(schedule, queries, block)
+
+    P = schedule.P
+    i = lax.axis_index(axis_name)
+    gblocks = (i + jnp.asarray(schedule.shifts, jnp.int32)) % P      # [k]
+    gidx = gblocks[:, None] * block + jnp.arange(block, dtype=jnp.int32)
+    mask = (mask_row[:, None] > 0) & stack_valid                     # [k, block]
+    thr = jnp.asarray(threshold, jnp.float32)
+
+    vbuf = mark_varying(jnp.full((Q, capacity), NEG_INF, jnp.float32),
+                        axis_name)
+    ibuf = mark_varying(jnp.full((Q, capacity), IDX_SENTINEL, jnp.int32),
+                        axis_name)
+    cnt = mark_varying(jnp.zeros((Q,), jnp.int32), axis_name)
+
+    if mode == "batched":
+        s = jnp.einsum("qd,sbd->qsb", queries, stack)
+        if metric == "l2":
+            s = (2.0 * s - jnp.sum(stack * stack, axis=-1)[None]
+                 - jnp.sum(queries * queries, axis=-1)[:, None, None])
+        keep = (s >= thr) & mask[None]
+        vbuf, ibuf, cnt = _compact_rows(
+            vbuf, ibuf, cnt, keep.reshape(Q, k * block),
+            s.reshape(Q, k * block),
+            jnp.broadcast_to(gidx[None], (Q, k, block)).reshape(Q, k * block),
+            capacity)
+    elif mode == "scan":
+        def body(carry, inp):
+            vb, ib, c = carry
+            blk, mrow, grow = inp
+            s = _scores(queries, blk, metric)
+            keep = (s >= thr) & mrow[None]
+            g = jnp.broadcast_to(grow[None], (Q, block))
+            return _compact_rows(vb, ib, c, keep, s, g, capacity), None
+
+        (vbuf, ibuf, cnt), _ = lax.scan(body, (vbuf, ibuf, cnt),
+                                        (stack, mask, gidx))
+    else:  # overlap: unrolled per-slot scoring, then one compaction
+        slot_s, slot_keep, slot_g = [], [], []
+        for s_i in range(k):
+            s = _scores(queries, stack[s_i], metric)
+            slot_s.append(s)
+            slot_keep.append((s >= thr) & mask[s_i][None])
+            slot_g.append(jnp.broadcast_to(gidx[s_i][None], (Q, block)))
+        vbuf, ibuf, cnt = _compact_rows(
+            vbuf, ibuf, cnt, jnp.concatenate(slot_keep, axis=1),
+            jnp.concatenate(slot_s, axis=1),
+            jnp.concatenate(slot_g, axis=1), capacity)
+
+    # ppermute ring gather: append every other device's passing prefix
+    perm = [(j, (j + 1) % P) for j in range(P)]
+    cur = (vbuf, ibuf, cnt)
+    slot_iota = lax.broadcasted_iota(jnp.int32, (Q, capacity), 1)
+    for _ in range(1, P):
+        cur = tuple(lax.ppermute(c, axis_name, perm) for c in cur)
+        rv, ri, rc = cur
+        valid_in = slot_iota < jnp.minimum(rc, capacity)[:, None]
+        vbuf, ibuf, _unclamped = _compact_rows(vbuf, ibuf, cnt, valid_in,
+                                               rv, ri, capacity)
+        cnt = cnt + rc        # true totals, not the clamped append
+
+    # canonical order: ascending corpus index (sentinels sort last)
+    ibuf, vbuf = lax.sort((ibuf, vbuf), num_keys=1)
+    return vbuf, ibuf, cnt
+
+
+@functools.lru_cache(maxsize=64)
+def threshold_fn(mesh, axis_name: str, capacity: int, mode: str,
+                 metric: str, placement: Placement | None = None):
+    """Build (and cache) the jitted distributed range-query program.
+
+    Returns ``f(queries [Q, d], threshold, state) -> (scores [Q,
+    capacity], idx [Q, capacity], count [Q])`` — cached per capacity
+    like :func:`query_fn`; the threshold is a traced operand, so one
+    compiled program serves every threshold value (DESIGN.md 11.4).
+    """
+    P = mesh.shape[axis_name]
+    if placement is None:
+        placement = get_placement("cyclic", P)
+    sched = placement.schedule()
+    plan = build_cover(P, placement)
+    mask_table = jnp.asarray(plan.mask_table())          # [P, k]
+
+    def body(queries, thr, stack, stack_valid, mask_row):
+        vals, idx, cnt = quorum_query_threshold(
+            queries, stack, stack_valid, mask_row, threshold=thr,
+            capacity=capacity, axis_name=axis_name, schedule=sched,
+            mode=mode, metric=metric)
+        return vals[None], idx[None], cnt[None]   # [1, ...] per device
+
+    spec = PS(axis_name)
+    fn = jax.jit(jax.shard_map(
+        body, mesh=mesh, in_specs=(PS(), PS(), spec, spec, spec),
+        out_specs=(spec, spec, spec)))
+
+    def run(queries, threshold, state: ServingState):
+        vals, idx, cnt = fn(queries, jnp.float32(threshold), state.stack,
+                            state.stack_valid, mask_table)
+        return vals[0], idx[0], cnt[0]      # all device copies identical
+
+    return run
+
+
 @functools.lru_cache(maxsize=64)
 def query_fn(mesh, axis_name: str, topk: int, mode: str, metric: str,
              use_kernel: bool, placement: Placement | None = None):
@@ -347,6 +530,7 @@ class ServingCorpus:
 
     @property
     def n_valid(self) -> int:
+        """Total valid corpus rows across all blocks."""
         return int(self.filled.sum())
 
     def query(self, queries, *, topk: int, mode: str = "auto",
@@ -355,6 +539,46 @@ class ServingCorpus:
         run = query_fn(self.mesh, self.axis_name, topk, mode, metric,
                        use_kernel, self.placement)
         return run(jnp.asarray(queries, jnp.float32), self.state)
+
+    def query_threshold(self, queries, *, threshold: float,
+                        capacity: int | None = None, mode: str = "auto",
+                        metric: str = "dot", escalate: bool = True,
+                        max_doublings: int = 16):
+        """Range query: every corpus row with score >= threshold, per query.
+
+        queries [Q, d] -> ``(scores [Q, capacity], global row ids
+        [Q, capacity], count [Q])``, each query's hits sorted by
+        ascending corpus index with (NEG_INF, IDX_SENTINEL) sentinels
+        past ``count`` (:func:`quorum_query_threshold`, DESIGN.md
+        section 11.4).  ``capacity`` defaults to the
+        ``REPRO_SPARSE_CAPACITY``-aware heuristic and, under the
+        overflow contract (DESIGN.md 11.2), doubles until every query's
+        true ``count`` fits (capped at the corpus size); with
+        ``escalate=False`` the first pass returns as-is — ``count >
+        capacity`` then marks a truncated query.  The compiled program
+        is cached per capacity, not per threshold.
+        """
+        total_rows = self.P * self.block
+        cap = (int(capacity) if capacity is not None
+               else min(default_capacity(total_rows), total_rows))
+        q = jnp.asarray(queries, jnp.float32)
+        escalations = 0
+        while True:
+            run = threshold_fn(self.mesh, self.axis_name, cap, mode, metric,
+                               self.placement)
+            vals, idx, cnt = run(q, threshold, self.state)
+            counts = np.asarray(cnt)
+            if (not (counts > cap).any() or not escalate
+                    or cap >= total_rows or escalations >= max_doublings):
+                break
+            cap = min(2 * cap, total_rows)
+            escalations += 1
+        if escalate and (counts > cap).any():
+            raise RuntimeError(
+                f"thresholded query still overflows capacity {cap} after "
+                f"{escalations} doublings; raise `capacity` or the "
+                "threshold")
+        return vals, idx, cnt
 
     def replace_block(self, b: int, data, nvalid: int | None = None) -> None:
         """Replace block ``b`` in place (streamed to its k holder quorums)."""

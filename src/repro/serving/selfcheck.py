@@ -18,7 +18,12 @@ numbering, restricted to valid rows):
      both metrics, including a partially-filled corpus,
   2. after a streamed ``replace_block`` and an ``append_block`` the
      results track the updated corpus — updates really reach all k holder
-     quorums through the ppermute push.
+     quorums through the ppermute push,
+  3. the thresholded range-query path (``query_threshold``, DESIGN.md
+     section 11.4) returns exactly the oracle's passing index set per
+     query — in every mode, for both metrics, through the same streamed
+     updates — including a capacity-escalation pass from a deliberately
+     tiny starting capacity.
 """
 
 from __future__ import annotations
@@ -30,6 +35,7 @@ import numpy as np
 
 from ..core.allpairs import ENGINE_MODES
 from ..core.placement import placement_from_env, resolve_placement
+from ..core.sparse import threshold_with_gap
 from .engine import IDX_SENTINEL, ServingCorpus
 
 CHECK_MODES = ENGINE_MODES + ("kernel",)
@@ -56,6 +62,7 @@ def oracle_topk(full: np.ndarray, valid: np.ndarray, queries: np.ndarray,
 
 def check(full: np.ndarray, valid: np.ndarray, sc: ServingCorpus,
           queries: np.ndarray, topk: int, modes, label: str) -> None:
+    """Top-k under every requested mode vs the brute-force oracle."""
     for metric in ("dot", "l2"):
         want_v, want_i = oracle_topk(full, valid, queries, topk, metric)
         for m in modes:
@@ -71,9 +78,70 @@ def check(full: np.ndarray, valid: np.ndarray, sc: ServingCorpus,
                 err_msg=f"{label} mode={m} metric={metric}")
 
 
+def oracle_threshold(full: np.ndarray, valid: np.ndarray,
+                     queries: np.ndarray, threshold: float, metric: str):
+    """Brute force range query: per query, the valid rows scoring >=
+    threshold, sorted by ascending row id (the engine's canonical
+    order)."""
+    rows = np.nonzero(valid)[0]
+    c = full[rows].astype(np.float32)
+    q = queries.astype(np.float32)
+    s = q @ c.T
+    if metric == "l2":
+        s = 2.0 * s - (c * c).sum(-1)[None, :] - (q * q).sum(-1)[:, None]
+    out = []
+    for r in range(len(q)):
+        keep = s[r] >= threshold
+        out.append((rows[keep], s[r][keep]))
+    return out
+
+
+def check_threshold(full: np.ndarray, valid: np.ndarray, sc: ServingCorpus,
+                    queries: np.ndarray, modes, label: str) -> None:
+    """Thresholded range query (DESIGN.md 11.4) vs the brute-force
+    oracle: exact index sets per query, counts, sentinels, and a
+    capacity-escalation pass."""
+    engine_modes = [m for m in modes if m != "kernel"]
+    for metric in ("dot", "l2"):
+        # a gap-placed threshold so membership is float-rounding-proof
+        # (the shared idiom of core.sparse, DESIGN.md 11.3)
+        rows = np.nonzero(valid)[0]
+        c = full[rows].astype(np.float32)
+        s = queries.astype(np.float32) @ c.T
+        if metric == "l2":
+            s = (2.0 * s - (c * c).sum(-1)[None, :]
+                 - (queries.astype(np.float32) ** 2).sum(-1)[:, None])
+        thr = threshold_with_gap(s, 0.1)
+        want = oracle_threshold(full, valid, queries, thr, metric)
+        for m in engine_modes:
+            got_v, got_i, got_c = sc.query_threshold(
+                queries, threshold=thr, mode=m, metric=metric)
+            got_v, got_i = np.asarray(got_v), np.asarray(got_i)
+            got_c = np.asarray(got_c)
+            for r, (wi, wv) in enumerate(want):
+                n = int(got_c[r])
+                assert n == len(wi), (label, m, metric, r, n, len(wi))
+                np.testing.assert_array_equal(
+                    got_i[r, :n], wi,
+                    err_msg=f"{label} mode={m} metric={metric} q={r}")
+                assert (got_i[r, n:] == IDX_SENTINEL).all(), (label, m, r)
+                np.testing.assert_allclose(
+                    got_v[r, :n], wv, rtol=1e-5, atol=1e-5,
+                    err_msg=f"{label} mode={m} metric={metric} q={r}")
+    # escalation regression: a tiny starting capacity must double up to
+    # the same exact answer (program cache keyed per capacity)
+    want = oracle_threshold(full, valid, queries, thr, "l2")
+    got_v, got_i, got_c = sc.query_threshold(queries, threshold=thr,
+                                             capacity=2, metric="l2")
+    assert got_i.shape[1] >= max(len(w[0]) for w in want), got_i.shape
+    for r, (wi, _) in enumerate(want):
+        np.testing.assert_array_equal(np.asarray(got_i)[r, :len(wi)], wi)
+
+
 def main(nblocks: int | None = None,
          modes: tuple[str, ...] = CHECK_MODES,
          placement: str | None = None) -> None:
+    """Run the serving selfcheck (see module docstring for the CLI)."""
     devs = jax.devices()
     Pn = nblocks or len(devs)
     assert len(devs) >= Pn, f"need {Pn} devices, have {len(devs)}"
@@ -95,6 +163,7 @@ def main(nblocks: int | None = None,
     full[:N] = corpus
     valid = np.arange(Pn * block) < N
     check(full, valid, sc, queries, topk, modes, "static")
+    check_threshold(full, valid, sc, queries, modes, "static")
 
     # streamed replace: block 0 gets fewer, fresh vectors
     fresh = rng.normal(size=(block - 3, d)).astype(np.float32)
@@ -103,6 +172,7 @@ def main(nblocks: int | None = None,
     full[:len(fresh)] = fresh
     valid[:block] = np.arange(block) < len(fresh)
     check(full, valid, sc, queries, topk, modes, "replace")
+    check_threshold(full, valid, sc, queries, modes, "replace")
 
     # streamed append into the empty tail block
     if (sc.filled == 0).any():

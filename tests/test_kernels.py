@@ -113,6 +113,61 @@ def test_query_topk_kernel(k, block, d, Q, topk, metric):
                                rtol=1e-5, atol=1e-5)
 
 
+@pytest.mark.parametrize("k,block,d,n_pairs,capacity",
+                         [(3, 16, 8, 4, 256), (4, 12, 24, 6, 64),
+                          (2, 8, 4, 2, 128), (5, 8, 16, 8, 16)])
+@pytest.mark.parametrize("metric", ["dot", "l2"])
+def test_pairwise_threshold_kernel(k, block, d, n_pairs, capacity, metric):
+    """Fused thresholded scoring + sparse compaction kernel vs the jnp
+    cumsum oracle: identical compacted (score, i, j) buffers and true
+    counts, including inactive (prefiltered) tiles, a self pair with the
+    strict-triangle rule, partial row validity, capacity overflow (the
+    (5, 8, 16, 8, 16) cell), and non-multiple-of-8 handling through the
+    ops wrapper."""
+    rng = np.random.default_rng(k * 1000 + block)   # order-independent
+    quorum = jnp.asarray(rng.normal(size=(k, block, d)), jnp.float32)
+    lo = rng.integers(0, k, size=n_pairs).astype(np.int32)
+    hi = rng.integers(0, k, size=n_pairs).astype(np.int32)
+    lo[0] = hi[0] = 0                               # self pair
+    meta = np.stack([
+        np.ones(n_pairs),                           # active
+        (lo == hi),                                 # is_self
+        rng.permutation(2 * n_pairs)[:n_pairs],     # ga
+        rng.permutation(2 * n_pairs)[:n_pairs],     # gb
+        np.minimum(block, rng.integers(1, block + 1, n_pairs)),  # nv_lo
+        np.minimum(block, rng.integers(1, block + 1, n_pairs)),  # nv_hi
+    ], axis=1).astype(np.int32)
+    if n_pairs > 1:
+        meta[1, 0] = 0                              # a prefiltered tile
+    # a mid-quantile threshold (under the metric) so both branches of the
+    # compare are hit
+    s = np.asarray(quorum[0] @ quorum[-1].T)
+    if metric == "l2":
+        n0 = np.asarray((quorum[0] ** 2).sum(-1))
+        n1 = np.asarray((quorum[-1] ** 2).sum(-1))
+        s = 2.0 * s - n1[None, :] - n0[:, None]
+    thr = float(np.quantile(s, 0.7))
+    got = ops.pairwise_threshold(quorum, lo, hi, jnp.asarray(meta),
+                                 threshold=thr, capacity=capacity,
+                                 block_rows=block, metric=metric)
+    pad = (-block) % 8                              # ref sees padded rows
+    qp = jnp.pad(quorum, ((0, 0), (0, pad), (0, 0)))
+    capp = -(-capacity // 128) * 128
+    want = ref.pairwise_threshold(qp, lo, hi, meta, threshold=thr,
+                                  capacity=capp, block_rows=block,
+                                  metric=metric)
+    np.testing.assert_array_equal(np.asarray(got[1]),
+                                  np.asarray(want[1])[:capacity])
+    np.testing.assert_array_equal(np.asarray(got[2]),
+                                  np.asarray(want[2])[:capacity])
+    np.testing.assert_allclose(np.asarray(got[0]),
+                               np.asarray(want[0])[:capacity],
+                               rtol=1e-5, atol=1e-5)
+    assert int(got[3]) == int(want[3])
+    if (k, block, d, n_pairs, capacity) == (5, 8, 16, 8, 16):
+        assert int(got[3]) > capacity               # overflow cell flags
+
+
 @pytest.mark.parametrize("k,block,n_pairs", [(2, 8, 2), (3, 12, 5),
                                              (4, 16, 9), (3, 8, 4)])
 def test_pairwise_batch_forces(k, block, n_pairs):

@@ -1,0 +1,148 @@
+"""Direct coverage for the kernels/ops.py dispatch layers.
+
+The engine ``batch_fn`` hooks (pairwise_batch_forces, query_topk,
+pairwise_threshold) route through two fallback paths that the engine
+sweeps only exercise indirectly:
+
+  * **interpret-mode dispatch** — ``_interpret()`` selects interpret mode
+    off-TPU and compiled mode on TPU; the flag must actually reach the
+    Pallas launch.
+  * **kernel-absent fallback** — when the Pallas machinery itself raises
+    ImportError / NotImplementedError (a jax build without a usable
+    lowering), ``_call_with_fallback`` degrades to the ref.py oracle with
+    a RuntimeWarning instead of failing; other exception types (real
+    kernel bugs) must propagate.
+
+Shapes here are deliberately distinct from tests/test_kernels.py so every
+call traces fresh — the jitted entry points would otherwise replay a
+cached trace and bypass the monkeypatched kernels.
+"""
+
+import warnings
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+from repro.kernels import pairwise_threshold as pt_mod
+from repro.kernels import query_score as qs_mod
+
+RNG = np.random.default_rng(7)
+
+
+def _forces_args(k=5, block=9, n_pairs=7):
+    quorum = jnp.asarray(np.concatenate(
+        [RNG.normal(size=(k, block, 3)),
+         RNG.uniform(0.5, 2, (k, block, 1))], -1), jnp.float32)
+    lo = RNG.integers(0, k, size=n_pairs).astype(np.int32)
+    hi = RNG.integers(0, k, size=n_pairs).astype(np.int32)
+    wi = np.ones(n_pairs, np.float32)
+    wj = (lo != hi).astype(np.float32)
+    return quorum, lo, hi, wi, wj
+
+
+def test_interpret_dispatch_tracks_backend(monkeypatch):
+    """_interpret() is the single source of the interpret/compiled
+    decision: True off-TPU, False on TPU."""
+    assert jax.default_backend() != "tpu"       # the CI/test environment
+    assert ops._interpret() is True
+    monkeypatch.setattr(jax, "default_backend", lambda: "tpu")
+    assert ops._interpret() is False
+    monkeypatch.setattr(jax, "default_backend", lambda: "cpu")
+    assert ops._interpret() is True
+
+
+def test_interpret_flag_reaches_pallas_launch(monkeypatch):
+    """The hook wrappers pass _interpret()'s verdict into the Pallas
+    call (recorded via a shim that then falls back, so the assertion
+    works on any backend)."""
+    seen = {}
+
+    def shim(*args, **kwargs):
+        seen["interpret"] = kwargs.get("interpret")
+        raise NotImplementedError("recorded, now force the ref path")
+
+    monkeypatch.setattr(ops, "pairwise_batch_pallas", shim)
+    quorum, lo, hi, wi, wj = _forces_args(block=11)
+    with pytest.warns(RuntimeWarning, match="falling back"):
+        out = ops.pairwise_batch_forces(quorum, lo, hi, wi, wj)
+    assert seen["interpret"] is True            # CPU backend -> interpret
+    want = ref.pairwise_batch_forces(quorum, lo, hi, wi, wj)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_forces_kernel_absent_falls_back_to_ref(monkeypatch):
+    monkeypatch.setattr(
+        ops, "pairwise_batch_pallas",
+        lambda *a, **k: (_ for _ in ()).throw(ImportError("no pallas")))
+    quorum, lo, hi, wi, wj = _forces_args(block=13)
+    with pytest.warns(RuntimeWarning, match="pairwise_batch_forces"):
+        out = ops.pairwise_batch_forces(quorum, lo, hi, wi, wj)
+    want = ref.pairwise_batch_forces(quorum, lo, hi, wi, wj)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_query_topk_kernel_absent_falls_back_to_ref(monkeypatch):
+    def absent(*a, **k):
+        raise NotImplementedError("no mosaic lowering")
+
+    monkeypatch.setattr(qs_mod, "query_topk_pallas", absent)
+    k, block, d, Q, topk = 3, 10, 6, 7, 5
+    stack = jnp.asarray(RNG.normal(size=(k, block, d)), jnp.float32)
+    queries = jnp.asarray(RNG.normal(size=(Q, d)), jnp.float32)
+    mask = (RNG.uniform(size=(k, block)) > 0.4).astype(np.float32)
+    gidx = np.arange(k * block, dtype=np.int32).reshape(k, block)
+    with pytest.warns(RuntimeWarning, match="query_topk"):
+        got_v, got_i = ops.query_topk(stack, queries, jnp.asarray(mask),
+                                      jnp.asarray(gidx), topk=topk)
+    # the ref path sees the same padded-Q operand the kernel would have
+    want_v, want_i = ref.query_topk(stack, jnp.pad(queries, ((0, 1), (0, 0))),
+                                    mask, gidx, topk=topk)
+    np.testing.assert_array_equal(np.asarray(got_i), np.asarray(want_i[:Q]))
+    np.testing.assert_allclose(np.asarray(got_v), np.asarray(want_v[:Q]),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_pairwise_threshold_kernel_absent_falls_back_to_ref(monkeypatch):
+    monkeypatch.setattr(
+        pt_mod, "pairwise_threshold_pallas",
+        lambda *a, **k: (_ for _ in ()).throw(ImportError("no pallas")))
+    k, block, n_pairs, d = 3, 7, 4, 5
+    quorum = jnp.asarray(RNG.normal(size=(k, block, d)), jnp.float32)
+    lo = RNG.integers(0, k, n_pairs).astype(np.int32)
+    hi = RNG.integers(0, k, n_pairs).astype(np.int32)
+    meta = np.stack([np.ones(n_pairs), (lo == hi),
+                     RNG.integers(0, 4, n_pairs),
+                     RNG.integers(0, 4, n_pairs),
+                     np.full(n_pairs, block),
+                     np.full(n_pairs, block)], 1).astype(np.int32)
+    with pytest.warns(RuntimeWarning, match="pairwise_threshold"):
+        got = ops.pairwise_threshold(quorum, lo, hi, jnp.asarray(meta),
+                                     threshold=0.4, capacity=100,
+                                     block_rows=block)
+    # the wrapper pads rows to 8 sublanes and capacity to 128 lanes
+    qp = jnp.pad(quorum, ((0, 0), (0, 1), (0, 0)))
+    want = ref.pairwise_threshold(qp, lo, hi, meta, threshold=0.4,
+                                  capacity=128, block_rows=block)
+    for g, w in zip(got[:3], want[:3]):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w)[:100],
+                                   rtol=1e-5, atol=1e-5)
+    assert int(got[3]) == int(want[3])
+
+
+def test_real_kernel_bugs_still_propagate(monkeypatch):
+    """Only ImportError/NotImplementedError trigger the ref fallback;
+    anything else (shape bugs, assertion failures) must surface."""
+    def broken(*a, **k):
+        raise ValueError("genuine kernel bug")
+
+    monkeypatch.setattr(ops, "pairwise_batch_pallas", broken)
+    quorum, lo, hi, wi, wj = _forces_args(block=15)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")          # no fallback warning either
+        with pytest.raises(ValueError, match="genuine kernel bug"):
+            ops.pairwise_batch_forces(quorum, lo, hi, wi, wj)
