@@ -15,7 +15,20 @@ Prints ``name,us_per_call,derived`` CSV rows:
                          prefilter vs dense scoring at low selectivity
                          (writes BENCH_sparse.json; ``--fast-sparse``
                          runs only this one, for CI)
+  bench_knn            — all-pairs k-NN graph: per-mode wall time, fused
+                         kernel vs unfused batched (writes
+                         BENCH_knn.json; ``--fast-knn`` runs only this
+                         one, for CI)
   bench_attention_comm — comm-volume model: quorum vs ring vs all-gather
+
+``--compare`` snapshots the committed BENCH_*.json files before running,
+re-reads them afterwards, and prints a regression warning (a GitHub
+``::warning::`` annotation in CI) for every timing that slipped past the
+tolerance — seconds-valued leaves under ``timings_s`` warn when the
+fresh value exceeds ``tolerance x`` the committed one, ``qps`` leaves
+when it drops below ``committed / tolerance``.  Warn-only: noisy CI
+hosts make a hard gate a flake machine, but the diff is always visible
+in the job log.
 
 Roofline extraction from the dry-run lives in benchmarks/roofline.py (it
 needs the 512-device dry-run JSON, produced by repro.launch.dryrun --all).
@@ -23,26 +36,98 @@ needs the 512-device dry-run JSON, produced by repro.launch.dryrun --all).
 
 from __future__ import annotations
 
+import json
 import sys
 import traceback
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+BENCH_FILES = ("BENCH_engine.json", "BENCH_serve.json", "BENCH_sparse.json",
+               "BENCH_knn.json")
+COMPARE_TOLERANCE = 1.5
+
+
+def _numeric_leaves(obj, path=()):
+    """Yield (path, value) for every numeric leaf of a JSON tree."""
+    if isinstance(obj, dict):
+        for k, v in obj.items():
+            yield from _numeric_leaves(v, path + (str(k),))
+    elif isinstance(obj, list):
+        for i, v in enumerate(obj):
+            yield from _numeric_leaves(v, path + (str(i),))
+    elif isinstance(obj, (int, float)) and not isinstance(obj, bool):
+        yield path, float(obj)
+
+
+def snapshot_committed():
+    """The committed BENCH_*.json contents, read before the benches
+    overwrite them (for ``--compare``)."""
+    out = {}
+    for name in BENCH_FILES:
+        p = ROOT / name
+        if p.exists():
+            out[name] = json.loads(p.read_text())
+    return out
+
+
+def compare_results(committed, tolerance: float = COMPARE_TOLERANCE) -> int:
+    """Diff fresh BENCH_*.json against the committed snapshot; print a
+    warning per regressed timing (``timings_s`` leaves: slower than
+    tolerance x committed; ``qps`` leaves: below committed / tolerance).
+    Returns the number of regressions (informational — warn-only)."""
+    regressions = 0
+    for name, old in committed.items():
+        p = ROOT / name
+        if not p.exists():
+            continue
+        new = json.loads(p.read_text())
+        fresh = dict(_numeric_leaves(new))
+        for path, old_v in _numeric_leaves(old):
+            new_v = fresh.get(path)
+            if new_v is None or old_v <= 0:
+                continue
+            label = f"{name}:{'/'.join(path)}"
+            if "timings_s" in path:                  # seconds: lower is better
+                if new_v > tolerance * old_v:
+                    print(f"::warning::bench regression {label}: "
+                          f"{new_v:.6f}s vs committed {old_v:.6f}s "
+                          f"({new_v / old_v:.2f}x, tolerance {tolerance}x)")
+                    regressions += 1
+            elif "qps" in path:                      # rates: higher is better
+                if new_v < old_v / tolerance:
+                    print(f"::warning::bench regression {label}: "
+                          f"{new_v:.1f} qps vs committed {old_v:.1f} qps "
+                          f"({old_v / new_v:.2f}x, tolerance {tolerance}x)")
+                    regressions += 1
+    if regressions:
+        print(f"bench compare: {regressions} timing(s) beyond "
+              f"{tolerance}x of the committed BENCH_*.json (warn-only)")
+    else:
+        print("bench compare: no regressions beyond "
+              f"{tolerance}x of the committed BENCH_*.json")
+    return regressions
 
 
 def main() -> None:
+    """CLI driver (see module docstring for flags)."""
     from . import (bench_attention_comm, bench_attention_hlo, bench_engine,
-                   bench_memory, bench_pcit_speedup, bench_quorum,
+                   bench_knn, bench_memory, bench_pcit_speedup, bench_quorum,
                    bench_serve, bench_sparse)
     rows = [("name", "us_per_call", "derived")]
     modules = [bench_quorum, bench_memory, bench_attention_comm,
                bench_attention_hlo, bench_engine, bench_serve,
-               bench_sparse, bench_pcit_speedup]
+               bench_sparse, bench_knn, bench_pcit_speedup]
     if "--fast-engine" in sys.argv:
         modules = [bench_engine]
     elif "--fast-serve" in sys.argv:
         modules = [bench_serve]
     elif "--fast-sparse" in sys.argv:
         modules = [bench_sparse]
+    elif "--fast-knn" in sys.argv:
+        modules = [bench_knn]
     elif "--fast" in sys.argv:
         modules = modules[:3]
+    committed = snapshot_committed() if "--compare" in sys.argv else None
     for mod in modules:
         try:
             mod.run(rows)
@@ -51,6 +136,8 @@ def main() -> None:
             rows.append((mod.__name__, "ERROR", ""))
     for r in rows:
         print(",".join(str(x) for x in r))
+    if committed is not None:
+        compare_results(committed)
 
 
 if __name__ == "__main__":

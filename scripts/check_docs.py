@@ -37,6 +37,9 @@ MUST_CITE_DESIGN = [
     "core/allpairs.py",
     "core/placement.py",
     "core/sparse.py",
+    "core/sweep.py",
+    "core/knn.py",
+    "core/env.py",
     "serving/cover.py",
     "kernels/ops.py",
 ]

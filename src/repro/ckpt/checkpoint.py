@@ -95,8 +95,12 @@ def load_checkpoint(directory: str | Path, tree_like: Tree,
     data = np.load(directory / f"step_{step}" / "arrays.npz")
     names = _paths(tree_like)
     leaves, treedef = _flatten(tree_like)
-    shard_leaves = (jax.tree.flatten(shardings)[0] if shardings is not None
-                    else [None] * len(leaves))
+    # None entries mean "default placement" for that leaf; flatten must
+    # keep them (default flattening would drop None subtrees and desync
+    # the leaf zip below)
+    shard_leaves = (jax.tree.flatten(shardings,
+                                     is_leaf=lambda x: x is None)[0]
+                    if shardings is not None else [None] * len(leaves))
     out = []
     for name, like, shd in zip(names, leaves, shard_leaves):
         arr = data[name]

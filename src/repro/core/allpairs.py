@@ -1,42 +1,44 @@
 """The quorum all-pairs engine: shard_map + jax.lax collectives.
 
-TPU-native realization of the paper's distribution scheme (DESIGN.md section 2):
+TPU-native realization of the paper's distribution scheme (DESIGN.md
+section 2), as a thin adapter over the unified pair-sweep runtime
+(core/sweep.py, DESIGN.md section 12):
 
   1. ``quorum_gather``  — each device pulls its k quorum blocks with k-1
      ``lax.ppermute`` cyclic shifts (quorums are cyclic, so the pattern is
      shift-invariant and identical on every device).  Memory: k*N/P =
      O(N/sqrt(P)) — the paper's headline number.
-  2. pair compute       — one of three execution modes (DESIGN.md section 4):
-       * ``batched`` — one vmapped ``pair_fn`` call over all n_pairs
-         interactions + a ``segment_sum`` over slot ids, so the MXU sees a
-         single big batch instead of n_pairs tiny launches,
-       * ``overlap`` — double-buffered: each pair is computed as soon as its
-         later-arriving block lands, so XLA's latency-hiding scheduler can
-         run the remaining ppermutes concurrently with compute (and start the
-         inverse scatter shifts for slots whose pairs are already done),
-       * ``scan``    — the serial per-pair ``lax.scan`` (low-memory fallback
-         and correctness oracle),
-     selected by a size heuristic when ``mode="auto"``.
+  2. pair compute       — the runtime's batched/overlap/scan execution
+     modes (DESIGN.md section 4) driving :class:`DenseReduceEmitter`, the
+     dense monoid scatter-reduce emitter: every scheduled pair's
+     ``pair_fn`` output is accumulated into per-slot partials under the
+     ownership mask.
   3. ``quorum_scatter`` — per-block partial results routed back to block
      owners with the inverse shifts and reduced (sum or a user monoid).
 
 Plus a reference ``allgather_allpairs`` baseline (the "all data everywhere"
 scheme the paper improves on) used by tests and the memory benchmark.
+The mode-selection heuristic, env overrides, gather/scatter primitives,
+and mask table live in core/sweep.py and are re-exported here unchanged
+(the long-standing public API of this module).
 """
 
 from __future__ import annotations
 
 import functools
 import math
-import os
-from typing import Any, Callable, Sequence
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax import lax
 
+from . import sweep as sweep_mod
 from .scheduler import PairSchedule
+from .sweep import (ENGINE_MODES, SweepEmitter, _DEFAULT_BATCH_BYTES,
+                    auto_batch_bytes, env_mode_override, mark_varying,
+                    pair_mask_table, pair_ready_order, quorum_gather,
+                    quorum_scatter)
 
 __all__ = [
     "quorum_gather",
@@ -48,158 +50,9 @@ __all__ = [
     "auto_batch_bytes",
     "env_mode_override",
     "pair_ready_order",
+    "DenseReduceEmitter",
     "ENGINE_MODES",
 ]
-
-ENGINE_MODES = ("batched", "overlap", "scan")
-
-# auto-mode switches away from `batched` when its [2*n_pairs, block, ...]
-# working set would exceed this budget (bytes; overridable for small-VMEM or
-# huge-HBM parts)
-_DEFAULT_BATCH_BYTES = 1 << 28
-
-
-def auto_batch_bytes() -> int:
-    """The auto-mode byte budget (DESIGN.md section 4), read from
-    ``REPRO_BATCH_BYTES_LIMIT`` at *selection* time (every ``mode="auto"``
-    trace), not at import — setting the env var after ``import repro``
-    works.  Shared by the batch engine's heuristic, the serving query
-    engine's, and the sparse join's."""
-    env = os.environ.get("REPRO_BATCH_BYTES_LIMIT", "").strip()
-    return int(env) if env else _DEFAULT_BATCH_BYTES
-
-
-def _shift_perm(P: int, shift: int) -> list[tuple[int, int]]:
-    """ppermute permutation delivering block (i + shift) % P to device i."""
-    return [(j, (j - shift) % P) for j in range(P)]
-
-
-def quorum_gather(x: jax.Array, schedule: PairSchedule, axis_name: str,
-                  *, overlap_fn: Callable[[int, jax.Array], Any] | None = None):
-    """Gather this device's quorum blocks (DESIGN.md section 2, phase 1).
-
-    Args:
-      x: the local block, shape [block, ...] (inside shard_map).
-      schedule: PairSchedule for the quorum axis size P.
-      axis_name: mesh axis the blocks are sharded over.
-      overlap_fn: optional ``f(slot, block)`` called as each block lands —
-        lets callers overlap compute with the next in-flight permute (the
-        double-buffered mode; XLA's latency-hiding scheduler interleaves the
-        independent ppermutes and per-slot compute).
-
-    Returns:
-      stacked quorum blocks [k, block, ...]; slot s holds global block
-      (i + shifts[s]) % P.  If overlap_fn is given, returns the list of its
-      results instead.
-    """
-    P = schedule.P
-    shifts = [int(s) for s in schedule.shifts]
-    blocks = []
-    results = []
-    for slot, a in enumerate(shifts):
-        blk = x if a == 0 else lax.ppermute(x, axis_name, _shift_perm(P, a))
-        if overlap_fn is not None:
-            results.append(overlap_fn(slot, blk))
-        else:
-            blocks.append(blk)
-    if overlap_fn is not None:
-        return results
-    return jnp.stack(blocks, axis=0)
-
-
-def quorum_scatter(partials, schedule: PairSchedule, axis_name: str,
-                   *, reduce_fn: Callable[[jax.Array, jax.Array], jax.Array] = jnp.add):
-    """Route per-slot partial results back to block owners and reduce
-    (DESIGN.md section 2, phase 3).
-
-    partials: [k, block, ...] stacked, or a length-k sequence of [block, ...]
-    arrays; slot s is a partial result for global block (i + shifts[s]) % P.
-    Sends slot s with the inverse shift so the owner receives it, then folds
-    with ``reduce_fn`` (default sum).  The per-slot sequence form is what the
-    overlap engine mode produces: each slot's inverse shift depends only on
-    that slot's pair results, so the scheduler can start early slots' sends
-    while later pairs are still computing (the pipelined scatter).
-    Returns the reduced [block, ...] result for the local block.
-    """
-    P = schedule.P
-    shifts = [int(s) for s in schedule.shifts]
-    acc = None
-    for slot, a in enumerate(shifts):
-        part = partials[slot]
-        arrived = part if a == 0 else lax.ppermute(part, axis_name, _shift_perm(P, -a))
-        acc = arrived if acc is None else reduce_fn(acc, arrived)
-    return acc
-
-
-def pair_mask_table(schedule: PairSchedule) -> np.ndarray:
-    """[P, n_pairs] float mask deduplicating the d = P/2 orbit for even P
-    (DESIGN.md section 3.2).
-
-    Each unordered pair with difference P/2 is generated by exactly two
-    devices (i and i + P/2); the device with the smaller canonical lower
-    endpoint keeps it.  All other entries are 1.  The mask rides into
-    shard_map as a sharded operand, so control flow stays uniform.
-    """
-    P, n = schedule.P, schedule.n_pairs
-    mask = np.ones((P, n), dtype=np.float32)
-    if P % 2 == 0 and P > 1:
-        d_half = P // 2
-        idx = np.nonzero(schedule.pair_diff == d_half)[0]
-        if idx.size:
-            s = int(idx[0])
-            a_lo = int(schedule.shifts[schedule.pair_slots[s, 0]])
-            for i in range(P):
-                lo = (i + a_lo) % P
-                hi = (lo + d_half) % P
-                # keeper: the generating device whose lower endpoint is the
-                # canonical (smaller) block id of the orbit
-                mask[i, s] = 1.0 if lo == min(lo, hi) else 0.0
-    return mask
-
-
-def mark_varying(x: jax.Array, axis_name: str) -> jax.Array:
-    """Mark x as varying over the quorum axis (jax >= 0.7 VMA tracking;
-    the shard_map plumbing every engine-internal constant goes through —
-    DESIGN.md section 2)."""
-    try:
-        return lax.pcast(x, axis_name, to="varying")
-    except (AttributeError, TypeError):  # pragma: no cover - older jax
-        return x
-
-
-def env_mode_override() -> str | None:
-    """The validated ``REPRO_ALLPAIRS_MODE`` forced mode, or None if unset
-    (DESIGN.md section 4).
-
-    The benchmark / CI A/B hook, consulted by every ``mode="auto"``
-    selection (engine, PCIT tile phases, serving scoring, sparse join).  Read at trace time — set it
-    before the first jitted call; already-compiled auto-mode programs keep
-    their baked-in choice.  Unknown values raise rather than silently
-    falling through to the heuristic.
-    """
-    env = os.environ.get("REPRO_ALLPAIRS_MODE", "").strip().lower()
-    if not env:
-        return None
-    if env not in ENGINE_MODES:
-        raise ValueError(
-            f"REPRO_ALLPAIRS_MODE must be one of {ENGINE_MODES}, got {env!r}")
-    return env
-
-
-def pair_ready_order(schedule: PairSchedule) -> list[list[int]]:
-    """Pair indices grouped by *ready slot* for the overlap modes
-    (DESIGN.md section 4).
-
-    A pair (lo, hi) can compute once its later block lands in the gather
-    shift sequence, i.e. at slot max(lo, hi); ready[s] lists the pairs that
-    become computable when slot s arrives.
-    """
-    lo_np = schedule.pair_slots[:, 0]
-    hi_np = schedule.pair_slots[:, 1]
-    ready: list[list[int]] = [[] for _ in range(schedule.k)]
-    for idx in range(schedule.n_pairs):
-        ready[max(int(lo_np[idx]), int(hi_np[idx]))].append(idx)
-    return ready
 
 
 def _wmul(out: jax.Array, w: jax.Array) -> jax.Array:
@@ -211,119 +64,105 @@ def _wmul(out: jax.Array, w: jax.Array) -> jax.Array:
 
 def _select_mode(schedule: PairSchedule, x: jax.Array,
                  probe: jax.ShapeDtypeStruct, batch_fn) -> str:
-    """The ``mode="auto"`` heuristic (DESIGN.md section 4).
-
-    Environment override first (:func:`env_mode_override`; conflicts with a
-    fused ``batch_fn`` — which only exists for the batched step — raise
-    instead of silently dropping the kernel), then: a fused batch kernel
-    always means ``batched``; otherwise ``batched`` while its
-    [2*n_pairs, block, ...] operand+output working set fits the byte
-    budget, ``overlap`` when there are enough shifts to hide (k >= 3),
-    ``scan`` as the low-memory last resort.
-    """
-    env = env_mode_override()
-    if env is not None:
-        if batch_fn is not None and env != "batched":
-            raise ValueError(
-                f"REPRO_ALLPAIRS_MODE={env} conflicts with a fused batch_fn "
-                "(the kernel only replaces the batched inner step)")
-        return env
-    if batch_fn is not None:
-        return "batched"
+    """The dense engine's ``mode="auto"`` working set fed to the shared
+    heuristic (core/sweep.py select_mode, DESIGN.md section 4): the
+    [2*n_pairs, block, ...] operand+output bytes of the batched step."""
     out_bytes = math.prod(probe.shape) * jnp.dtype(probe.dtype).itemsize
     in_bytes = x.size * jnp.dtype(x.dtype).itemsize
-    if 2 * schedule.n_pairs * (in_bytes + out_bytes) <= auto_batch_bytes():
-        return "batched"
-    if schedule.k >= 3:
-        return "overlap"
-    return "scan"
+    ws = 2 * schedule.n_pairs * (in_bytes + out_bytes)
+    return sweep_mod.select_mode(schedule, ws, batch_fn)
 
 
-def _scan_accumulate(pair_fn, quorum, schedule: PairSchedule, mask, probe,
-                     axis_name: str) -> jax.Array:
-    """Serial per-pair scan with scatter-adds into the [k, block, ...] carry."""
-    k = schedule.k
-    lo_slots = jnp.asarray(schedule.pair_slots[:, 0])
-    hi_slots = jnp.asarray(schedule.pair_slots[:, 1])
-    is_self = jnp.asarray(schedule.pair_diff == 0)
+class DenseReduceEmitter(SweepEmitter):
+    """Dense monoid scatter-reduce over the scheduled pairs (DESIGN.md
+    section 12.2, the ``quorum_allpairs`` workload).
 
-    def body(acc, inputs):
-        lo, hi, selfp, w = inputs
+    Every pair's ``pair_fn(bi, bj) -> (out_i, out_j)`` contribution is
+    weighted by the ownership/dedup mask and accumulated into per-slot
+    [k, block, ...] partials; self-pairs keep only ``out_i`` (count
+    once).  ``quorum_scatter`` then folds the partials at the block
+    owners under ``jnp.add``.
+    """
+
+    def __init__(self, pair_fn, schedule: PairSchedule, mask: jax.Array,
+                 probe, axis_name: str, batch_fn=None):
+        self.pair_fn = pair_fn
+        self.schedule = schedule
+        self.mask = mask
+        self.probe = probe
+        self.axis_name = axis_name
+        self.batch_fn = batch_fn
+        self.lo_slots = jnp.asarray(schedule.pair_slots[:, 0])
+        self.hi_slots = jnp.asarray(schedule.pair_slots[:, 1])
+        self.is_self = jnp.asarray(schedule.pair_diff == 0)
+
+    def batch(self, quorum):
+        """All n_pairs interactions in one vmapped call + segment_sum over
+        slots; with ``batch_fn`` the whole step (slot gather + pair
+        interaction + segment reduction) runs as one fused kernel (e.g.
+        kernels.ops.pairwise_batch_forces)."""
+        k = self.schedule.k
+        wi = self.mask
+        # self-pair: count once
+        wj = jnp.where(self.is_self, jnp.zeros_like(self.mask), self.mask)
+        if self.batch_fn is not None:
+            return self.batch_fn(quorum, self.lo_slots, self.hi_slots, wi, wj)
+        lhs = jnp.take(quorum, self.lo_slots, axis=0)  # [n_pairs, block, ...]
+        rhs = jnp.take(quorum, self.hi_slots, axis=0)
+        out_i, out_j = jax.vmap(self.pair_fn)(lhs, rhs)
+        data = jnp.concatenate([_wmul(out_i, wi), _wmul(out_j, wj)], axis=0)
+        ids = jnp.concatenate([self.lo_slots, self.hi_slots])
+        acc = jax.ops.segment_sum(data, ids, num_segments=k)
+        return acc.astype(self.probe.dtype)
+
+    def scan_init(self):
+        """Zeroed [k, block, ...] slot accumulator (varying-marked)."""
+        k = self.schedule.k
+        return mark_varying(jnp.zeros((k,) + self.probe.shape,
+                                      self.probe.dtype), self.axis_name)
+
+    def scan_items(self):
+        """(lo_slot, hi_slot, is_self, mask_weight) per scheduled pair."""
+        return (self.lo_slots, self.hi_slots, self.is_self, self.mask)
+
+    def scan_emit(self, acc, quorum, item):
+        """Serial per-pair scatter-adds into the [k, block, ...] carry."""
+        lo, hi, selfp, w = item
         bi = jnp.take(quorum, lo, axis=0)
         bj = jnp.take(quorum, hi, axis=0)
-        out_i, out_j = pair_fn(bi, bj)
-        out_j = jnp.where(selfp, jnp.zeros_like(out_j), out_j)  # self-pair: count once
+        out_i, out_j = self.pair_fn(bi, bj)
+        out_j = jnp.where(selfp, jnp.zeros_like(out_j), out_j)  # count once
         acc = acc.at[lo].add(_wmul(out_i, w))
         acc = acc.at[hi].add(_wmul(out_j, w))
-        return acc, None
+        return acc
 
-    acc0 = mark_varying(jnp.zeros((k,) + probe.shape, probe.dtype), axis_name)
-    acc, _ = lax.scan(body, acc0, (lo_slots, hi_slots, is_self, mask))
-    return acc
+    def overlap_begin(self):
+        """Per-slot contribution lists the unrolled sweep appends into."""
+        return [[] for _ in range(self.schedule.k)]
 
+    def overlap_emit(self, contribs, idx, bi, bj):
+        """Run pair ``idx`` as soon as its later block lands; per-slot
+        contributions stay separate so the scatter's inverse shifts can
+        pipeline (DESIGN.md section 4)."""
+        lo = int(self.schedule.pair_slots[idx, 0])
+        hi = int(self.schedule.pair_slots[idx, 1])
+        w = self.mask[idx]
+        out_i, out_j = self.pair_fn(bi, bj)
+        contribs[lo].append(_wmul(out_i, w))
+        if lo != hi:  # self-pair (lo == hi, d = 0): count once
+            contribs[hi].append(_wmul(out_j, w))
 
-def _batched_accumulate(pair_fn, quorum, schedule: PairSchedule, mask, probe,
-                        batch_fn) -> jax.Array:
-    """All n_pairs interactions in one vmapped call + segment_sum over slots.
+    def overlap_finalize(self, contribs):
+        """Fold each slot's contributions; returns the per-slot partials
+        list quorum_scatter pipelines."""
+        def fold(parts):
+            if not parts:  # gathered slot with no scheduled pair
+                return mark_varying(jnp.zeros(self.probe.shape,
+                                              self.probe.dtype),
+                                    self.axis_name)
+            return functools.reduce(jnp.add, parts).astype(self.probe.dtype)
 
-    With ``batch_fn`` the whole step (slot gather + pair interaction +
-    segment reduction) runs as one fused kernel (e.g.
-    kernels.ops.pairwise_batch_forces).
-    """
-    k = schedule.k
-    lo_slots = jnp.asarray(schedule.pair_slots[:, 0])
-    hi_slots = jnp.asarray(schedule.pair_slots[:, 1])
-    is_self = jnp.asarray(schedule.pair_diff == 0)
-    wi = mask
-    wj = jnp.where(is_self, jnp.zeros_like(mask), mask)  # self-pair: count once
-    if batch_fn is not None:
-        return batch_fn(quorum, lo_slots, hi_slots, wi, wj)
-    lhs = jnp.take(quorum, lo_slots, axis=0)          # [n_pairs, block, ...]
-    rhs = jnp.take(quorum, hi_slots, axis=0)
-    out_i, out_j = jax.vmap(pair_fn)(lhs, rhs)        # [n_pairs, block, ...]
-    data = jnp.concatenate([_wmul(out_i, wi), _wmul(out_j, wj)], axis=0)
-    ids = jnp.concatenate([lo_slots, hi_slots])
-    acc = jax.ops.segment_sum(data, ids, num_segments=k)
-    return acc.astype(probe.dtype)
-
-
-def _overlap_accumulate(pair_fn, x, schedule: PairSchedule, mask, probe,
-                        axis_name: str) -> list[jax.Array]:
-    """Double-buffered gather/compute: each pair runs at its ready slot.
-
-    A pair (lo, hi) is ready once its later block lands, i.e. at slot
-    max(lo, hi) of the gather shift sequence — so the compute for slot s's
-    pairs is independent of ppermutes s+1..k-1 and XLA's latency-hiding
-    scheduler overlaps them.  Returns per-slot partials (list of length k)
-    so quorum_scatter can likewise start early slots' inverse shifts before
-    late pairs finish.
-    """
-    k = schedule.k
-    lo_np = schedule.pair_slots[:, 0]
-    hi_np = schedule.pair_slots[:, 1]
-    ready = pair_ready_order(schedule)
-
-    landed: list[jax.Array] = []
-    contribs: list[list[jax.Array]] = [[] for _ in range(k)]
-
-    def on_land(slot: int, blk: jax.Array) -> None:
-        landed.append(blk)
-        for idx in ready[slot]:
-            lo, hi = int(lo_np[idx]), int(hi_np[idx])
-            w = mask[idx]
-            out_i, out_j = pair_fn(landed[lo], landed[hi])
-            contribs[lo].append(_wmul(out_i, w))
-            if lo != hi:  # self-pair (lo == hi, d = 0): count once
-                contribs[hi].append(_wmul(out_j, w))
-
-    quorum_gather(x, schedule, axis_name, overlap_fn=on_land)
-
-    def fold(parts: list[jax.Array]) -> jax.Array:
-        if not parts:  # gathered slot with no scheduled pair
-            return mark_varying(jnp.zeros(probe.shape, probe.dtype), axis_name)
-        return functools.reduce(jnp.add, parts).astype(probe.dtype)
-
-    return [fold(c) for c in contribs]
+        return [fold(c) for c in contribs]
 
 
 def quorum_allpairs(
@@ -380,25 +219,9 @@ def quorum_allpairs(
 
     Returns the per-block reduced output, shape/type of ``pair_fn``'s out_i.
     """
-    if mode not in ENGINE_MODES + ("auto",):
-        raise ValueError(f"mode must be one of {ENGINE_MODES + ('auto',)}, "
-                         f"got {mode!r}")
-    if batch_fn is not None and mode not in ("batched", "auto"):
-        raise ValueError(
-            f"batch_fn only replaces the batched inner step (got "
-            f"mode={mode!r}); drop it or use mode='batched'")
-    if placement is not None:
-        if axis_size is not None and placement.P != axis_size:
-            raise ValueError(
-                f"placement is for P={placement.P} but axis_size={axis_size}")
-        if schedule is not None and schedule.P != placement.P:
-            raise ValueError(
-                f"placement is for P={placement.P} but schedule.P="
-                f"{schedule.P}")
-    if placement is None and schedule is None:
-        assert axis_size is not None, "need schedule, placement, or axis_size"
-        from .placement import placement_from_env
-        placement = placement_from_env(axis_size)
+    sweep_mod.validate_mode(mode, batch_fn)
+    schedule, placement = sweep_mod.resolve_sweep_placement(
+        schedule, axis_size, placement)
     if placement is not None and placement.full:
         if batch_fn is not None:
             raise ValueError(
@@ -427,17 +250,10 @@ def quorum_allpairs(
     if mode == "auto":
         mode = _select_mode(schedule, x, probe, batch_fn)
 
-    if mode == "overlap":
-        partials = _overlap_accumulate(pair_fn, x, schedule, mask, probe,
-                                       axis_name)
-    else:
-        quorum = quorum_gather(x, schedule, axis_name)  # [k, block, ...]
-        if mode == "batched":
-            partials = _batched_accumulate(pair_fn, quorum, schedule, mask,
-                                           probe, batch_fn)
-        else:
-            partials = _scan_accumulate(pair_fn, quorum, schedule, mask,
-                                        probe, axis_name)
+    emitter = DenseReduceEmitter(pair_fn, schedule, mask, probe, axis_name,
+                                 batch_fn=batch_fn)
+    partials = sweep_mod.pair_sweep(emitter, schedule=schedule,
+                                    axis_name=axis_name, mode=mode, x=x)
     return quorum_scatter(partials, schedule, axis_name)
 
 

@@ -1,0 +1,153 @@
+"""The single registry of ``REPRO_*`` environment knobs (DESIGN.md
+section 12.4).
+
+Every runtime override the repo honors is declared here — name, type,
+valid values, and the one-line description the README env-var table
+mirrors.  The readers that used to be scattered across the engines
+(``core.sweep.env_mode_override`` / ``auto_batch_bytes``,
+``core.placement.placement_from_env``, ``core.sparse.default_capacity``)
+all route through :func:`read_knob`, so validation, error wording, and
+typo detection live in exactly one place.
+
+Contract shared by every knob:
+
+  * read at **selection time** (each heuristic consult / placement
+    resolution), never at import — setting a variable after ``import
+    repro`` works; already-compiled programs keep their baked-in choice;
+  * an unset or empty variable means "no override" (``read_knob``
+    returns None and the caller's default applies);
+  * an invalid value **raises** ``ValueError`` — never a silent
+    fallthrough to the default;
+  * an environment variable starting with ``REPRO_`` that matches no
+    registered knob triggers a one-time ``RuntimeWarning`` naming the
+    closest registered knob (typo detection — ``REPRO_ALLPAIRS_MODES=``
+    silently doing nothing is the failure mode this kills).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import difflib
+import os
+import warnings
+from typing import Callable, Optional, Tuple, Union
+
+__all__ = [
+    "EnvKnob",
+    "ENV_KNOBS",
+    "read_knob",
+    "check_unknown_knobs",
+    "describe_knobs",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class EnvKnob:
+    """One registered ``REPRO_*`` environment variable (DESIGN.md
+    section 12.4).
+
+    ``kind`` is ``"choice"`` (valid values from the ``choices`` thunk,
+    lowercased before matching) or ``"int"`` (integer with an inclusive
+    ``minimum``).  ``description`` is the README-table one-liner.
+    """
+
+    name: str
+    kind: str                                   # "choice" | "int"
+    description: str
+    choices: Optional[Callable[[], Tuple[str, ...]]] = None
+    minimum: Optional[int] = None
+
+    def parse(self, raw: str) -> Union[str, int]:
+        """Validate and convert ``raw`` (non-empty, stripped); raises
+        ``ValueError`` with the knob's canonical message on bad values
+        (DESIGN.md section 12.4)."""
+        if self.kind == "choice":
+            val = raw.lower()
+            valid = self.choices()
+            if val not in valid:
+                raise ValueError(
+                    f"{self.name} must be one of {valid}, got {val!r}")
+            return val
+        try:
+            val = int(raw)
+        except ValueError:
+            raise ValueError(
+                f"{self.name} must be an integer, got {raw!r}") from None
+        if self.minimum is not None and val < self.minimum:
+            raise ValueError(
+                f"{self.name} must be >= {self.minimum}, got {val}")
+        return val
+
+
+def _mode_choices() -> Tuple[str, ...]:
+    from .sweep import ENGINE_MODES
+    return ENGINE_MODES
+
+
+def _placement_choices() -> Tuple[str, ...]:
+    from .placement import registered_placements
+    return ("auto", "plane") + tuple(sorted(registered_placements()))
+
+
+ENV_KNOBS = {
+    "REPRO_ALLPAIRS_MODE": EnvKnob(
+        name="REPRO_ALLPAIRS_MODE", kind="choice", choices=_mode_choices,
+        description="force the execution mode everywhere mode='auto' is "
+                    "consulted (batch engine, PCIT tiles, serving scoring, "
+                    "sparse join, k-NN)"),
+    "REPRO_PLACEMENT": EnvKnob(
+        name="REPRO_PLACEMENT", kind="choice", choices=_placement_choices,
+        description="select the block placement everywhere one is chosen "
+                    "implicitly"),
+    "REPRO_BATCH_BYTES_LIMIT": EnvKnob(
+        name="REPRO_BATCH_BYTES_LIMIT", kind="int", minimum=1,
+        description="auto-mode working-set byte budget shared by every "
+                    "engine heuristic (default 2^28)"),
+    "REPRO_SPARSE_CAPACITY": EnvKnob(
+        name="REPRO_SPARSE_CAPACITY", kind="int", minimum=1,
+        description="starting per-device buffer capacity of the sparse "
+                    "join / range query before overflow escalation"),
+}
+
+_warned_unknown: set = set()
+
+
+def check_unknown_knobs() -> None:
+    """Warn (once per variable per process) about ``REPRO_*`` variables
+    in the environment that match no registered knob, suggesting the
+    closest registered name — the typo detector (DESIGN.md section
+    12.4)."""
+    for key in os.environ:
+        if not key.startswith("REPRO_") or key in ENV_KNOBS:
+            continue
+        if key in _warned_unknown:
+            continue
+        _warned_unknown.add(key)
+        hint = difflib.get_close_matches(key, ENV_KNOBS, n=1)
+        suggest = f"; did you mean {hint[0]}?" if hint else ""
+        warnings.warn(
+            f"environment variable {key} matches no registered REPRO_* "
+            f"knob and is ignored{suggest} (known: "
+            f"{tuple(sorted(ENV_KNOBS))})", RuntimeWarning, stacklevel=3)
+
+
+def read_knob(name: str) -> Union[str, int, None]:
+    """Read and validate one registered knob (DESIGN.md section 12.4).
+
+    Returns None when the variable is unset or empty (caller default
+    applies); raises ``ValueError`` on invalid values; also runs the
+    unknown-variable typo check as a side effect.
+    """
+    knob = ENV_KNOBS[name]
+    check_unknown_knobs()
+    raw = os.environ.get(name, "").strip()
+    if not raw:
+        return None
+    return knob.parse(raw)
+
+
+def describe_knobs() -> str:
+    """The registry rendered one knob per line (debug / docs aid;
+    DESIGN.md section 12.4)."""
+    return "\n".join(f"{k.name}: {k.description}"
+                     for k in ENV_KNOBS.values())

@@ -69,7 +69,6 @@ from __future__ import annotations
 import abc
 import functools
 import math
-import os
 from typing import Dict, List, Optional, Tuple, Type
 
 from .quorum import (_prime_power_base, difference_set, is_difference_cover,
@@ -552,16 +551,12 @@ def placement_from_env(P: int) -> Placement:
     """The placement selected by ``REPRO_PLACEMENT`` (default ``auto``;
     DESIGN.md section 10 "Selection").
 
-    Mirrors ``core.allpairs.env_mode_override``: read at selection time
-    (setting the env var after import works; already-compiled programs
-    keep their baked-in placement), and unknown values raise instead of
-    silently falling back.  With the variable unset, ``auto`` resolves
-    to the cyclic construction at every P (the tie-break keeps default
-    behavior bit-exact).
+    Mirrors ``core.sweep.env_mode_override``: read at selection time
+    through the core/env.py registry (setting the env var after import
+    works; already-compiled programs keep their baked-in placement), and
+    unknown values raise instead of silently falling back.  With the
+    variable unset, ``auto`` resolves to the cyclic construction at
+    every P (the tie-break keeps default behavior bit-exact).
     """
-    env = os.environ.get("REPRO_PLACEMENT", "").strip().lower()
-    valid = ("auto", "plane") + tuple(sorted(_REGISTRY))
-    if env and env not in valid:
-        raise ValueError(
-            f"REPRO_PLACEMENT must be one of {valid}, got {env!r}")
-    return resolve_placement(env, P)
+    from . import env as env_mod
+    return resolve_placement(env_mod.read_knob("REPRO_PLACEMENT"), P)

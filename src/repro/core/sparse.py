@@ -5,9 +5,10 @@ O(N^2) pair results back to blocks.  The canonical all-pairs workload in
 practice is the *similarity join* — report only the pairs whose score
 passes a threshold (Özkural & Aykanat's all-pairs similarity problem;
 Ullman's "some pairs") — where most of the pairwise work is a cheap
-rejection.  This module reuses the quorum schedule and every registered
-placement but emits only the passing ``(i, j, score)`` triples
-(DESIGN.md section 11):
+rejection.  This module plugs :class:`ThresholdJoinEmitter` into the
+unified pair-sweep runtime (core/sweep.py, DESIGN.md section 12) so the
+join reuses the quorum schedule and every registered placement but emits
+only the passing ``(i, j, score)`` triples (DESIGN.md section 11):
 
   1. **prefilter** — per-slot norm extrema give an upper bound on every
      block-pair tile's best score (``|x·y| <= |x||y|`` for dot; the norm
@@ -35,12 +36,12 @@ exact escalation signal and the kept prefix is valid either way.
 :func:`similarity_join` implements the documented two-pass escalation:
 re-run with doubled capacity until the overflow flag clears.
 
-Execution modes mirror the dense engine's surface (DESIGN.md section 4)
-and honor the same ``REPRO_ALLPAIRS_MODE`` override: ``batched`` (all
-tiles in one einsum + one compaction), ``overlap`` (tiles compact
-incrementally as their later block lands, so XLA overlaps the remaining
-gather shifts), ``scan`` (serial per-pair carry; with the prefilter the
-``lax.cond`` genuinely skips pruned tiles' compute — the configuration
+Execution modes are the runtime's (DESIGN.md section 4) and honor the
+same ``REPRO_ALLPAIRS_MODE`` override: ``batched`` (all tiles in one
+einsum + one compaction), ``overlap`` (tiles compact incrementally as
+their later block lands, so XLA overlaps the remaining gather shifts),
+``scan`` (serial per-pair carry; with the prefilter the ``lax.cond``
+genuinely skips pruned tiles' compute — the configuration
 BENCH_sparse.json measures).
 """
 
@@ -48,7 +49,6 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-import os
 from typing import Callable, NamedTuple, Optional, Sequence, Tuple
 
 import jax
@@ -57,14 +57,16 @@ import numpy as np
 from jax import lax
 
 from ..kernels.ref import IDX_SENTINEL, NEG_INF
-from .allpairs import (ENGINE_MODES, auto_batch_bytes, env_mode_override,
-                       mark_varying, pair_mask_table, pair_ready_order,
-                       quorum_gather)
+from . import env as env_mod
+from . import sweep as sweep_mod
 from .scheduler import PairSchedule
+from .sweep import (ENGINE_MODES, SweepEmitter, mark_varying,
+                    pair_mask_table)
 
 __all__ = [
     "SparseHits",
     "JoinResult",
+    "ThresholdJoinEmitter",
     "default_capacity",
     "pair_score_bounds",
     "quorum_allpairs_threshold",
@@ -103,19 +105,16 @@ class SparseHits(NamedTuple):
 def default_capacity(n_candidates: int) -> int:
     """Starting per-device buffer capacity (DESIGN.md section 11.2).
 
-    ``REPRO_SPARSE_CAPACITY`` (documented in the README env-var table)
-    overrides; otherwise 1/8 of the device's candidate count, rounded up
-    to a lane-friendly multiple of 128 with a floor of 128.  Read at
-    selection time like the other ``REPRO_*`` knobs, and only a *start*:
+    ``REPRO_SPARSE_CAPACITY`` (documented in the README env-var table;
+    validated through the core/env.py registry) overrides; otherwise 1/8
+    of the device's candidate count, rounded up to a lane-friendly
+    multiple of 128 with a floor of 128.  Read at selection time like
+    the other ``REPRO_*`` knobs, and only a *start*:
     :func:`similarity_join` doubles it until the overflow flag clears.
     """
-    env = os.environ.get("REPRO_SPARSE_CAPACITY", "").strip()
-    if env:
-        cap = int(env)
-        if cap < 1:
-            raise ValueError(
-                f"REPRO_SPARSE_CAPACITY must be >= 1, got {cap}")
-        return cap
+    cap = env_mod.read_knob("REPRO_SPARSE_CAPACITY")
+    if cap is not None:
+        return int(cap)
     cap = max(128, -(-n_candidates // 8))
     return -(-cap // 128) * 128
 
@@ -232,27 +231,11 @@ def _finalize(bufs, count, capacity: int) -> SparseHits:
 
 def _select_mode(schedule: PairSchedule, block: int,
                  batch_fn: Optional[Callable]) -> str:
-    """``mode="auto"`` for the sparse engine, mirroring the dense
-    heuristic (DESIGN.md section 4): env override first (a conflict with
-    a fused ``batch_fn`` raises), fused kernel -> batched, batched while
-    the [n_pairs, block, block] score/id working set fits the shared
-    ``REPRO_BATCH_BYTES_LIMIT`` budget, overlap when there are shifts to
-    hide (k >= 3), scan as the low-memory last resort."""
-    env = env_mode_override()
-    if env is not None:
-        if batch_fn is not None and env != "batched":
-            raise ValueError(
-                f"REPRO_ALLPAIRS_MODE={env} conflicts with a fused batch_fn "
-                "(the kernel only replaces the batched inner step)")
-        return env
-    if batch_fn is not None:
-        return "batched"
-    # scores f32 + two i32 id planes per tile entry
-    if schedule.n_pairs * block * block * 12 <= auto_batch_bytes():
-        return "batched"
-    if schedule.k >= 3:
-        return "overlap"
-    return "scan"
+    """The sparse engine's ``mode="auto"`` working set fed to the shared
+    heuristic (core/sweep.py select_mode, DESIGN.md section 4): scores
+    f32 + two i32 id planes per [n_pairs, block, block] tile entry."""
+    return sweep_mod.select_mode(
+        schedule, schedule.n_pairs * block * block * 12, batch_fn)
 
 
 def _pair_meta(schedule: PairSchedule, axis_name: str, block: int,
@@ -274,6 +257,162 @@ def _pair_meta(schedule: PairSchedule, axis_name: str, block: int,
         nv = jnp.clip(n_valid - gblocks * block, 0, block).astype(jnp.int32)
     is_self = jnp.asarray(schedule.pair_diff == 0)
     return lo, hi, ga, gb, nv[lo], nv[hi], is_self, gblocks, nv
+
+
+def _tile_keep(scores, thr, nv_lo, nv_hi, is_self):
+    """Threshold + row-validity + self-pair strict-triangle mask."""
+    r = lax.broadcasted_iota(jnp.int32, scores.shape, 0)
+    s = lax.broadcasted_iota(jnp.int32, scores.shape, 1)
+    keep = (scores >= thr) & (r < nv_lo) & (s < nv_hi)
+    return keep & jnp.where(is_self, r < s, True)
+
+
+class ThresholdJoinEmitter(SweepEmitter):
+    """Fixed-capacity threshold compaction over the scheduled pairs
+    (DESIGN.md sections 11, 12.2 — the similarity-join workload).
+
+    Each active tile is scored, thresholded under the ownership rules
+    (row validity, self-pair strict triangle, the engine dedup mask) and
+    cumsum-compacted into per-device (vals, i, j) buffers under the
+    overflow contract of DESIGN.md 11.2.  The norm-bound prefilter
+    (DESIGN.md 11.1) deactivates whole tiles: up-front over the gathered
+    stack in batched/scan modes (:meth:`prepare`), incrementally from
+    per-slot extrema as blocks land in overlap mode
+    (:meth:`overlap_slot`).
+    """
+
+    def __init__(self, schedule: PairSchedule, mask, thr, capacity: int,
+                 metric: str, block: int, prefilter: bool, axis_name: str,
+                 meta, nv, batch_fn=None):
+        self.schedule = schedule
+        self.mask = mask
+        self.thr = thr
+        self.capacity = capacity
+        self.metric = metric
+        self.block = block
+        self.prefilter = prefilter
+        self.axis_name = axis_name
+        self.lo, self.hi, self.ga, self.gb, self.nv_lo, self.nv_hi, \
+            self.is_self = meta
+        self.nv = nv
+        self.batch_fn = batch_fn
+        self.active = self.mask > 0           # refined by prepare()
+
+    def prepare(self, quorum):
+        """Norm-bound prefilter over the full gathered stack
+        (batched/scan modes; DESIGN.md 11.1)."""
+        if not self.prefilter:
+            return
+        valid = (lax.broadcasted_iota(
+            jnp.int32, (self.schedule.k, self.block), 1) < self.nv[:, None])
+        bounds = pair_score_bounds(quorum, valid, self.lo, self.hi,
+                                   self.metric)
+        self.active = self.active & (bounds >= self.thr)
+
+    def batch(self, quorum):
+        """One compaction over every tile.  The batched jnp step IS the
+        ref oracle — one home for the threshold-membership
+        compute/compaction (DESIGN.md 11.3), with a fused Pallas kernel
+        swapping in through the same hook."""
+        batch_fn = self.batch_fn
+        if batch_fn is None:
+            from ..kernels import ref as kref
+            batch_fn = functools.partial(
+                kref.pairwise_threshold, threshold=self.thr,
+                capacity=self.capacity, block_rows=self.block,
+                metric=self.metric)
+        meta = jnp.stack([self.active.astype(jnp.int32),
+                          self.is_self.astype(jnp.int32),
+                          self.ga, self.gb, self.nv_lo, self.nv_hi],
+                         axis=1)                           # [n_pairs, 6]
+        vals, ei, ej, count = batch_fn(quorum, self.lo, self.hi, meta)
+        return SparseHits(vals=vals, i=ei, j=ej,
+                          count=count.reshape(()).astype(jnp.int32))
+
+    def scan_init(self):
+        """Empty compaction buffers + zero true count (varying-marked)."""
+        return (_empty_bufs(self.capacity, self.axis_name),
+                mark_varying(jnp.int32(0), self.axis_name))
+
+    def scan_items(self):
+        """Per-pair (slots, active, self flag, block ids, valid counts)."""
+        return (self.lo, self.hi, self.active, self.is_self, self.ga,
+                self.gb, self.nv_lo, self.nv_hi)
+
+    def scan_emit(self, carry, quorum, item):
+        """Serial per-pair compaction; pruned/masked tiles skip their
+        compute via ``lax.cond`` — with the prefilter this is a real
+        FLOP saving, not just a masked multiply (the BENCH_sparse.json
+        configuration)."""
+        bufs, count = carry
+        lo_p, hi_p, act_p, self_p, ga_p, gb_p, nvl_p, nvh_p = item
+
+        def compute(c):
+            bufs_c, cnt = c
+            bi = jnp.take(quorum, lo_p, axis=0)
+            bj = jnp.take(quorum, hi_p, axis=0)
+            scores = _tile_scores(bi, bj, self.metric)
+            keep = _tile_keep(scores, self.thr, nvl_p, nvh_p, self_p)
+            ei, ej = _tile_emit(scores, keep, ga_p, gb_p, self.block)
+            return _scatter_hits(bufs_c, cnt, keep.reshape(-1),
+                                 scores.reshape(-1).astype(jnp.float32),
+                                 ei.reshape(-1), ej.reshape(-1),
+                                 self.capacity)
+
+        return lax.cond(act_p, compute, lambda c: c, (bufs, count))
+
+    def scan_finalize(self, carry):
+        """Sentinel-fill the unused buffer tail (the shared layout)."""
+        bufs, count = carry
+        return _finalize(bufs, count, self.capacity)
+
+    def overlap_begin(self):
+        """Boxed (bufs, count) carry + the per-slot extrema list the
+        incremental prefilter appends into."""
+        return {"extrema": [],
+                "carry": (_empty_bufs(self.capacity, self.axis_name),
+                          mark_varying(jnp.int32(0), self.axis_name))}
+
+    def overlap_slot(self, state, slot, blk):
+        """Per-slot norm extrema, computed once at land time, feed the
+        shared bound helper (DESIGN.md 11.1)."""
+        if self.prefilter:
+            vrow = (lax.broadcasted_iota(jnp.int32, (self.block,), 0)
+                    < self.nv[slot])
+            state["extrema"].append(_norm_extrema(blk, vrow))
+
+    def overlap_emit(self, state, idx, bi, bj):
+        """Score/compact one tile as soon as its later block lands, so
+        XLA's latency-hiding scheduler overlaps the remaining ppermutes
+        with tile compute (the sparse analog of the dense overlap mode,
+        DESIGN.md section 4)."""
+        l_s = int(self.schedule.pair_slots[idx, 0])
+        h_s = int(self.schedule.pair_slots[idx, 1])
+        act = self.mask[idx] > 0
+        if self.prefilter:
+            (mx_i, mn_i) = state["extrema"][l_s]
+            (mx_j, mn_j) = state["extrema"][h_s]
+            act = act & (_interval_bound(mx_i, mn_i, mx_j, mn_j,
+                                         self.metric) >= self.thr)
+
+        def compute(c, bi=bi, bj=bj, idx=idx):
+            bufs_c, cnt = c
+            scores = _tile_scores(bi, bj, self.metric)
+            keep = _tile_keep(scores, self.thr, self.nv_lo[idx],
+                              self.nv_hi[idx], self.is_self[idx])
+            ei, ej = _tile_emit(scores, keep, self.ga[idx], self.gb[idx],
+                                self.block)
+            return _scatter_hits(bufs_c, cnt, keep.reshape(-1),
+                                 scores.reshape(-1).astype(jnp.float32),
+                                 ei.reshape(-1), ej.reshape(-1),
+                                 self.capacity)
+
+        state["carry"] = lax.cond(act, compute, lambda c: c, state["carry"])
+
+    def overlap_finalize(self, state):
+        """Sentinel-fill the unused buffer tail (the shared layout)."""
+        bufs, count = state["carry"]
+        return _finalize(bufs, count, self.capacity)
 
 
 def quorum_allpairs_threshold(
@@ -307,9 +446,9 @@ def quorum_allpairs_threshold(
     ``REPRO_PLACEMENT`` consulted when both are None); a full-replication
     placement runs the same generic pipeline over its A = {0..P-1}
     shifts — no allgather special case, the join output is already
-    sparse.  ``mode`` is the batched/overlap/scan surface of DESIGN.md
-    section 4 (``REPRO_ALLPAIRS_MODE`` honored); ``prefilter`` toggles
-    the norm-bound tile skip (:func:`pair_score_bounds`);
+    sparse.  ``mode`` is the runtime's batched/overlap/scan surface of
+    DESIGN.md section 4 (``REPRO_ALLPAIRS_MODE`` honored); ``prefilter``
+    toggles the norm-bound tile skip (:func:`pair_score_bounds`);
     ``n_valid`` (static int) invalidates global rows >= n_valid (corpus
     padding); ``batch_fn(quorum, lo, hi, meta) -> (vals, i, j, count)``
     is the fused-kernel hook (kernels.ops.pairwise_threshold), batched
@@ -318,27 +457,11 @@ def quorum_allpairs_threshold(
     if metric not in JOIN_METRICS:
         raise ValueError(f"metric must be one of {JOIN_METRICS}, "
                          f"got {metric!r}")
-    if mode not in ENGINE_MODES + ("auto",):
-        raise ValueError(f"mode must be one of {ENGINE_MODES + ('auto',)}, "
-                         f"got {mode!r}")
-    if batch_fn is not None and mode not in ("batched", "auto"):
-        raise ValueError(
-            f"batch_fn only replaces the batched inner step (got "
-            f"mode={mode!r}); drop it or use mode='batched'")
+    sweep_mod.validate_mode(mode, batch_fn)
     if capacity < 1:
         raise ValueError(f"capacity must be >= 1, got {capacity}")
-    if placement is not None:
-        if axis_size is not None and placement.P != axis_size:
-            raise ValueError(
-                f"placement is for P={placement.P} but axis_size={axis_size}")
-        if schedule is not None and schedule.P != placement.P:
-            raise ValueError(
-                f"placement is for P={placement.P} but schedule.P="
-                f"{schedule.P}")
-    if placement is None and schedule is None:
-        assert axis_size is not None, "need schedule, placement, or axis_size"
-        from .placement import placement_from_env
-        placement = placement_from_env(axis_size)
+    schedule, placement = sweep_mod.resolve_sweep_placement(
+        schedule, axis_size, placement)
     if schedule is None:
         schedule = placement.schedule()
 
@@ -355,128 +478,11 @@ def quorum_allpairs_threshold(
         schedule, axis_name, block, n_valid)
     thr = jnp.float32(threshold)
 
-    if mode == "overlap":
-        return _overlap_join(x, schedule, mask, thr, capacity, metric,
-                             prefilter, axis_name,
-                             (lo, hi, ga, gb, nv_lo, nv_hi, is_self), nv)
-
-    quorum = quorum_gather(x, schedule, axis_name)       # [k, block, d]
-    valid = (lax.broadcasted_iota(jnp.int32, (schedule.k, block), 1)
-             < nv[:, None])
-    active = mask > 0
-    if prefilter:
-        bounds = pair_score_bounds(quorum, valid, lo, hi, metric)
-        active = active & (bounds >= thr)
-
-    if mode == "batched":
-        # the batched jnp step IS the ref oracle — one home for the
-        # threshold-membership compute/compaction (DESIGN.md 11.3), with
-        # a fused Pallas kernel swapping in through the same hook
-        if batch_fn is None:
-            from ..kernels import ref as kref
-            batch_fn = functools.partial(
-                kref.pairwise_threshold, threshold=thr, capacity=capacity,
-                block_rows=block, metric=metric)
-        meta = jnp.stack([active.astype(jnp.int32),
-                          is_self.astype(jnp.int32),
-                          ga, gb, nv_lo, nv_hi], axis=1)  # [n_pairs, 6]
-        vals, ei, ej, count = batch_fn(quorum, lo, hi, meta)
-        return SparseHits(vals=vals, i=ei, j=ej,
-                          count=count.reshape(()).astype(jnp.int32))
-
-    return _scan_join(quorum, schedule, active, thr, capacity, metric, block,
-                      (lo, hi, ga, gb, nv_lo, nv_hi, is_self), axis_name)
-
-
-def _tile_keep(scores, thr, nv_lo, nv_hi, is_self):
-    """Threshold + row-validity + self-pair strict-triangle mask."""
-    r = lax.broadcasted_iota(jnp.int32, scores.shape, 0)
-    s = lax.broadcasted_iota(jnp.int32, scores.shape, 1)
-    keep = (scores >= thr) & (r < nv_lo) & (s < nv_hi)
-    return keep & jnp.where(is_self, r < s, True)
-
-
-def _scan_join(quorum, schedule, active, thr, capacity, metric, block,
-               meta, axis_name) -> SparseHits:
-    """Serial per-pair scan; pruned/masked tiles skip their compute via
-    ``lax.cond`` — with the prefilter this is a real FLOP saving, not
-    just a masked multiply (the BENCH_sparse.json configuration)."""
-    lo, hi, ga, gb, nv_lo, nv_hi, is_self = meta
-
-    def body(carry, inp):
-        bufs, count = carry
-        lo_p, hi_p, act_p, self_p, ga_p, gb_p, nvl_p, nvh_p = inp
-
-        def compute(c):
-            bufs_c, cnt = c
-            bi = jnp.take(quorum, lo_p, axis=0)
-            bj = jnp.take(quorum, hi_p, axis=0)
-            scores = _tile_scores(bi, bj, metric)
-            keep = _tile_keep(scores, thr, nvl_p, nvh_p, self_p)
-            ei, ej = _tile_emit(scores, keep, ga_p, gb_p, block)
-            return _scatter_hits(bufs_c, cnt, keep.reshape(-1),
-                                 scores.reshape(-1).astype(jnp.float32),
-                                 ei.reshape(-1), ej.reshape(-1), capacity)
-
-        return lax.cond(act_p, compute, lambda c: c, (bufs, count)), None
-
-    init = (_empty_bufs(capacity, axis_name),
-            mark_varying(jnp.int32(0), axis_name))
-    (bufs, count), _ = lax.scan(
-        body, init, (lo, hi, active, is_self, ga, gb, nv_lo, nv_hi))
-    return _finalize(bufs, count, capacity)
-
-
-def _overlap_join(x, schedule, mask, thr, capacity, metric, prefilter,
-                  axis_name, meta, nv) -> SparseHits:
-    """Double-buffered gather/compact: each tile is scored and compacted
-    as soon as its later block lands, so XLA's latency-hiding scheduler
-    overlaps the remaining ppermutes with tile compute (the sparse analog
-    of the dense overlap mode, DESIGN.md section 4).  Memory stays
-    O(block^2) per in-flight tile group plus the output buffers.
-    ``nv`` is the per-slot valid-row count: each slot's norm extrema are
-    computed once at land time and feed the shared bound helper."""
-    lo, hi, ga, gb, nv_lo, nv_hi, is_self = meta
-    ready = pair_ready_order(schedule)
-    lo_np = schedule.pair_slots[:, 0]
-    hi_np = schedule.pair_slots[:, 1]
-    block = x.shape[0]
-
-    landed: list = []
-    extrema: list = []
-    state = [(_empty_bufs(capacity, axis_name),
-              mark_varying(jnp.int32(0), axis_name))]
-
-    def on_land(slot: int, blk: jax.Array) -> None:
-        landed.append(blk)
-        if prefilter:
-            vrow = lax.broadcasted_iota(jnp.int32, (block,), 0) < nv[slot]
-            extrema.append(_norm_extrema(blk, vrow))
-        for idx in ready[slot]:
-            l_s, h_s = int(lo_np[idx]), int(hi_np[idx])
-            bi, bj = landed[l_s], landed[h_s]
-            act = mask[idx] > 0
-            if prefilter:
-                (mx_i, mn_i), (mx_j, mn_j) = extrema[l_s], extrema[h_s]
-                act = act & (_interval_bound(mx_i, mn_i, mx_j, mn_j,
-                                             metric) >= thr)
-
-            def compute(c, bi=bi, bj=bj, idx=idx):
-                bufs_c, cnt = c
-                scores = _tile_scores(bi, bj, metric)
-                keep = _tile_keep(scores, thr, nv_lo[idx], nv_hi[idx],
-                                  is_self[idx])
-                ei, ej = _tile_emit(scores, keep, ga[idx], gb[idx],
-                                    x.shape[0])
-                return _scatter_hits(bufs_c, cnt, keep.reshape(-1),
-                                     scores.reshape(-1).astype(jnp.float32),
-                                     ei.reshape(-1), ej.reshape(-1), capacity)
-
-            state[0] = lax.cond(act, compute, lambda c: c, state[0])
-
-    quorum_gather(x, schedule, axis_name, overlap_fn=on_land)
-    bufs, count = state[0]
-    return _finalize(bufs, count, capacity)
+    emitter = ThresholdJoinEmitter(
+        schedule, mask, thr, capacity, metric, block, prefilter, axis_name,
+        (lo, hi, ga, gb, nv_lo, nv_hi, is_self), nv, batch_fn=batch_fn)
+    return sweep_mod.pair_sweep(emitter, schedule=schedule,
+                                axis_name=axis_name, mode=mode, x=x)
 
 
 def ring_allgather_hits(hits: SparseHits, *, axis_name: str,

@@ -204,6 +204,36 @@ def pairwise_threshold(quorum, lo, hi, meta, *, threshold, capacity,
             count.reshape(()))
 
 
+@functools.partial(jax.jit, static_argnames=("topk", "block_rows", "metric"))
+def pairwise_topk(quorum, lo, hi, meta, *, topk, block_rows, metric="dot"):
+    """Fused pair-scoring top-k step for the k-NN graph engine's
+    ``batch_fn`` hook (core/knn.py; DESIGN.md section 12.3).
+
+    quorum: [k, block, d]; lo/hi: [n_pairs] slot ids; meta: [n_pairs, 6]
+    int32 ``(active, is_self, ga, gb, nv_lo, nv_hi)``.  ``topk`` is the
+    per-row neighbor-list length, ``block_rows`` the global block stride
+    for row-id math.  Returns the per-slot running top-k
+    ``(vals f32 [k, block, topk], idx i32 [k, block, topk])`` under the
+    engine's (-score, index) order — bit-parity with ref.pairwise_topk.
+
+    Pads block rows up to the 8-sublane multiple with zero rows — exact,
+    the valid-row bounds in ``meta`` already reject them as candidates
+    and the padded rows' own lists are sliced back off.  Falls back to
+    ref.pairwise_topk when the Pallas lowering is absent (see module
+    docstring).
+    """
+    from .pairwise_topk import pairwise_topk_pallas
+    q, block = _pad_to(quorum, 8, 1)
+    vals, idx = _call_with_fallback(
+        lambda: pairwise_topk_pallas(q, lo, hi, meta, topk=topk,
+                                     block_rows=block_rows, metric=metric,
+                                     interpret=_interpret()),
+        lambda: ref.pairwise_topk(q, lo, hi, meta, topk=topk,
+                                  block_rows=block_rows, metric=metric),
+        "pairwise_topk")
+    return vals[:, :block], idx[:, :block]
+
+
 @functools.partial(jax.jit, static_argnames=("causal", "bq", "bk"))
 def flash_attention(q, k, v, *, causal=True, bq=128, bk=128):
     """4-d entry point: q [B, Tq, H, hd], k/v [B, Tk, KV, hd] (GQA; the

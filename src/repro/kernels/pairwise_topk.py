@@ -1,0 +1,168 @@
+"""Pallas TPU kernel: fused pair scoring + per-row running top-k.
+
+The k-NN graph engine's batched inner step (core/knn.py, DESIGN.md
+section 12.3) materializes an [n_pairs, block, block] score tensor and
+sorts every block row's candidate list.  This kernel fuses the whole
+step, one grid step per scheduled slot pair:
+
+  * slot gather — the scalar-prefetched pair slot ids index the quorum
+    operand directly in the BlockSpec index maps (the pairwise_batch /
+    pairwise_threshold pattern), so each grid step DMAs only its two
+    [block, d] corpus blocks,
+  * tile scoring — the [block, block] dot (or L2) tile lives only in
+    VMEM; the two tile orientations use the orientation-consistent
+    subtraction order of ref.pairwise_topk so both sides of a pair see
+    bit-identical scores to the jnp oracle,
+  * running top-k — a [k*block, topk] (value, index) accumulator pair in
+    VMEM holds every slot row's running neighbor list; the tile's two
+    candidate planes are merged into the ``lo`` and ``hi`` slot row
+    ranges (dynamic-sliced by the prefetched slot ids) with ``topk``
+    rounds of extract-the-maximum under the (-score, index) total order
+    — bit-identical to the two-key-sort selection of the oracle.
+
+Masked tiles (the ownership dedup mask rides in ``meta[:, 0]``) skip
+their whole body with ``pl.when``; self tiles contribute one side with
+the diagonal excluded; candidate columns beyond a block's valid-row
+count become (NEG_INF, IDX_SENTINEL) sentinels.
+
+Layout notes (v5e): ``block`` should be a multiple of 8 sublanes (the
+ops.py wrapper zero-pads rows; padded rows are rejected by the valid-row
+bounds so padding is exact) and ``topk`` ideally of the 128-lane tile;
+the extract-max merge is O(block * topk * (topk + block)) VPU work per
+side, far below the tile's O(block^2 * d) MXU work for topk << block.
+Interpret mode on CPU mirrors kernels/ops.py conventions and is swept in
+tests/test_kernels.py against ref.pairwise_topk.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .ref import IDX_SENTINEL as _IDX_SENTINEL
+from .ref import NEG_INF, QUERY_METRICS
+
+IDX_SENTINEL = int(_IDX_SENTINEL)
+
+
+def _merge_rows(vacc_ref, iacc_ref, row0, block: int, topk: int,
+                cand_v, cand_i):
+    """Merge [block, c] candidates into acc rows [row0 : row0+block] with
+    topk rounds of extract-max under the (-score, index) order."""
+    cv = jnp.concatenate([vacc_ref[pl.ds(row0, block), :], cand_v], axis=1)
+    ci = jnp.concatenate([iacc_ref[pl.ds(row0, block), :], cand_i], axis=1)
+    out_v, out_i = [], []
+    for _ in range(topk):
+        m = jnp.max(cv, axis=1)                              # [block]
+        tie = cv == m[:, None]
+        sel = jnp.min(jnp.where(tie, ci, IDX_SENTINEL), axis=1)
+        out_v.append(m)
+        out_i.append(sel)
+        hit = tie & (ci == sel[:, None])
+        cv = jnp.where(hit, NEG_INF, cv)
+        ci = jnp.where(hit, IDX_SENTINEL, ci)
+    vacc_ref[pl.ds(row0, block), :] = jnp.stack(out_v, axis=1)
+    iacc_ref[pl.ds(row0, block), :] = jnp.stack(out_i, axis=1)
+
+
+def _pairwise_topk_kernel(lo_ref, hi_ref, meta_ref, x_lo_ref, x_hi_ref,
+                          ov_ref, oi_ref, vacc_ref, iacc_ref, *,
+                          n_pairs: int, block_rows: int, topk: int,
+                          metric: str):
+    p = pl.program_id(0)
+
+    @pl.when(p == 0)
+    def _init():
+        vacc_ref[...] = jnp.full_like(vacc_ref, NEG_INF)
+        iacc_ref[...] = jnp.full_like(iacc_ref, IDX_SENTINEL)
+
+    @pl.when(meta_ref[p, 0] == 1)
+    def _tile():
+        bi = x_lo_ref[0]                                  # [block, d]
+        bj = x_hi_ref[0]
+        blk = bi.shape[0]
+        dots = jnp.dot(bi, bj.T, preferred_element_type=jnp.float32)
+        if metric == "l2":  # orientation-consistent order: oracle parity
+            bin2 = jnp.sum(bi * bi, axis=-1)
+            bjn2 = jnp.sum(bj * bj, axis=-1)
+            t_lo = (2.0 * dots - bjn2[None, :]) - bin2[:, None]
+            t_hi = (2.0 * dots - bin2[:, None]) - bjn2[None, :]
+        else:
+            t_lo = t_hi = dots
+        is_self = meta_ref[p, 1]
+        r = jax.lax.broadcasted_iota(jnp.int32, (blk, blk), 0)
+        s = jax.lax.broadcasted_iota(jnp.int32, (blk, blk), 1)
+        # lo side: rows of bi receive bj's valid rows as candidates
+        keep = (s < meta_ref[p, 5]) & jnp.where(is_self == 1, r != s, True)
+        cand_v = jnp.where(keep, t_lo, NEG_INF)
+        cand_i = jnp.where(keep, meta_ref[p, 3] * block_rows + s,
+                           IDX_SENTINEL)
+        _merge_rows(vacc_ref, iacc_ref, lo_ref[p] * blk, blk, topk,
+                    cand_v, cand_i)
+
+        # hi side (transposed orientation; self tiles contribute once)
+        @pl.when(is_self == 0)
+        def _hi_side():
+            keep_t = (r < meta_ref[p, 4]).T
+            cv_t = jnp.where(keep_t, t_hi.T, NEG_INF)
+            ci_t = jnp.where(keep_t,
+                             (meta_ref[p, 2] * block_rows + r).T,
+                             IDX_SENTINEL)
+            _merge_rows(vacc_ref, iacc_ref, hi_ref[p] * blk, blk, topk,
+                        cv_t, ci_t)
+
+    @pl.when(p == n_pairs - 1)
+    def _done():
+        ov_ref[...] = vacc_ref[...]
+        oi_ref[...] = iacc_ref[...]
+
+
+def pairwise_topk_pallas(quorum: jax.Array, lo: jax.Array, hi: jax.Array,
+                         meta: jax.Array, *, topk: int, block_rows: int,
+                         metric: str = "dot", interpret: bool = False):
+    """quorum: [k, block, d] corpus blocks; lo/hi: [n_pairs] int32 slot
+    ids; meta: [n_pairs, 6] int32 ``(active, is_self, ga, gb, nv_lo,
+    nv_hi)`` (see ref.pairwise_topk, the bit-parity oracle).
+    ``block_rows`` is the unpadded global block stride for row-id math
+    (``block`` may be sublane-padded above it).  Returns the per-slot
+    running top-k after all tiles: ``(vals f32 [k, block, topk],
+    idx i32 [k, block, topk])``.
+    """
+    if metric not in QUERY_METRICS:
+        raise ValueError(f"metric must be one of {QUERY_METRICS}, "
+                         f"got {metric!r}")
+    k, block, d = quorum.shape
+    n_pairs = lo.shape[0]
+    assert hi.shape == (n_pairs,) and meta.shape == (n_pairs, 6), \
+        (hi.shape, meta.shape)
+    assert block >= block_rows, (block, block_rows)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,              # lo, hi, meta drive the tiles
+        grid=(n_pairs,),
+        in_specs=[
+            pl.BlockSpec((1, block, d), lambda p, lo, hi, meta: (lo[p], 0, 0)),
+            pl.BlockSpec((1, block, d), lambda p, lo, hi, meta: (hi[p], 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((k * block, topk), lambda p, lo, hi, meta: (0, 0)),
+            pl.BlockSpec((k * block, topk), lambda p, lo, hi, meta: (0, 0)),
+        ],
+        scratch_shapes=[pltpu.VMEM((k * block, topk), jnp.float32),
+                        pltpu.VMEM((k * block, topk), jnp.int32)],
+    )
+    vals, idx = pl.pallas_call(
+        functools.partial(_pairwise_topk_kernel, n_pairs=n_pairs,
+                          block_rows=block_rows, topk=topk, metric=metric),
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((k * block, topk), jnp.float32),
+                   jax.ShapeDtypeStruct((k * block, topk), jnp.int32)],
+        interpret=interpret,
+    )(jnp.asarray(lo, jnp.int32), jnp.asarray(hi, jnp.int32),
+      jnp.asarray(meta, jnp.int32), quorum.astype(jnp.float32),
+      quorum.astype(jnp.float32))
+    return vals.reshape(k, block, topk), idx.reshape(k, block, topk)

@@ -164,6 +164,84 @@ def pairwise_threshold(quorum, lo, hi, meta, *, threshold: float,
             count)
 
 
+def pairwise_topk(quorum, lo, hi, meta, *, topk: int, block_rows: int,
+                  metric: str = "dot"):
+    """Per-slot batch top-k accumulation oracle (kernels/pairwise_topk.py;
+    DESIGN.md section 12.3 — the k-NN graph workload's batched step).
+
+    quorum: [k, block, d]; lo/hi: [n_pairs] slot ids; meta: [n_pairs, 6]
+    int32 rows ``(active, is_self, ga, gb, nv_lo, nv_hi)`` — the item
+    mask (ownership dedup), self-pair flag, the two global block ids,
+    and the two valid-row counts.  For each scheduled tile the rows of
+    the ``lo`` block receive the ``hi`` block's valid rows as neighbor
+    candidates (and vice versa for non-self tiles; self tiles exclude
+    the diagonal and contribute one side only), folded into per-slot
+    running [k, block, topk] (value, index) lists under the (-score,
+    index) total order.  The two orientations of an L2 tile use the
+    orientation-consistent subtraction order ``(2 d - |cand|^2) -
+    |row|^2`` so both match the host oracle's matrix bitwise.  Masked
+    candidates are (NEG_INF, IDX_SENTINEL) sentinels.  Returns
+    ``(vals f32 [k, block, topk], idx i32 [k, block, topk])``; rows
+    beyond a block's valid count carry unspecified (sentinel-merged)
+    lists — callers slice them off.
+    """
+    if metric not in QUERY_METRICS:
+        raise ValueError(f"metric must be one of {QUERY_METRICS}, "
+                         f"got {metric!r}")
+    quorum = quorum.astype(jnp.float32)
+    k, block, d = quorum.shape
+    lo = jnp.asarray(lo, jnp.int32)
+    hi = jnp.asarray(hi, jnp.int32)
+    meta = jnp.asarray(meta, jnp.int32)
+    sent = jnp.int32(IDX_SENTINEL)
+
+    def merge(cv, ci, sv, si):
+        v = jnp.concatenate([cv, sv], axis=-1)
+        i = jnp.concatenate([ci, si], axis=-1)
+        nv, ni = jax.lax.sort((-v, i), num_keys=2)
+        return -nv[..., :topk], ni[..., :topk]
+
+    def body(carry, inp):
+        vals, idx = carry
+        lo_p, hi_p, m = inp
+        active, is_self, ga, gb, nv_lo, nv_hi = (m[c] for c in range(6))
+        bi = jnp.take(quorum, lo_p, axis=0)
+        bj = jnp.take(quorum, hi_p, axis=0)
+        dots = bi @ bj.T                                  # [block, block]
+        if metric == "l2":
+            bin2 = jnp.sum(bi * bi, axis=-1)
+            bjn2 = jnp.sum(bj * bj, axis=-1)
+            t_lo = (2.0 * dots - bjn2[None, :]) - bin2[:, None]
+            t_hi = (2.0 * dots - bin2[:, None]) - bjn2[None, :]
+        else:
+            t_lo = t_hi = dots
+        r = jax.lax.broadcasted_iota(jnp.int32, (block, block), 0)
+        s = jax.lax.broadcasted_iota(jnp.int32, (block, block), 1)
+        # lo side: rows of bi receive bj's valid rows as candidates
+        keep = ((active == 1) & (s < nv_hi)
+                & jnp.where(is_self == 1, r != s, True))
+        cv = jnp.where(keep, t_lo, NEG_INF)
+        ci = jnp.where(keep, gb * block_rows + s, sent)
+        mv, mi = merge(jnp.take(vals, lo_p, axis=0),
+                       jnp.take(idx, lo_p, axis=0), cv, ci)
+        vals = vals.at[lo_p].set(mv)
+        idx = idx.at[lo_p].set(mi)
+        # hi side (transposed orientation; self tiles contribute once)
+        keep_t = ((active == 1) & (is_self == 0) & (r < nv_lo)).T
+        cv_t = jnp.where(keep_t, t_hi.T, NEG_INF)
+        ci_t = jnp.where(keep_t, (ga * block_rows + r).T, sent)
+        mv2, mi2 = merge(jnp.take(vals, hi_p, axis=0),
+                         jnp.take(idx, hi_p, axis=0), cv_t, ci_t)
+        vals = vals.at[hi_p].set(mv2)
+        idx = idx.at[hi_p].set(mi2)
+        return (vals, idx), None
+
+    init = (jnp.full((k, block, topk), NEG_INF, jnp.float32),
+            jnp.full((k, block, topk), sent, jnp.int32))
+    (vals, idx), _ = jax.lax.scan(body, init, (lo, hi, meta))
+    return vals, idx
+
+
 def flash_attention(q, k, v, *, causal: bool) -> jax.Array:
     """Plain attention oracle: q [B, Tq, H, hd], k/v [B, Tk, KV, hd]."""
     B, Tq, H, hd = q.shape

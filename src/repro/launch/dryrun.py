@@ -1,10 +1,14 @@
 """Multi-pod dry-run: lower + compile every (arch x shape) cell on the
 production meshes and extract memory / cost / collective-schedule data.
 
-The XLA_FLAGS assignment below MUST stay ahead of every jax import: jax
+The XLA_FLAGS default below MUST stay ahead of every jax import: jax
 locks the device count at first initialization, and the 512 placeholder
-host devices exist only inside this process (tests and benches see 1
-device).
+host devices exist only inside this process.  It applies ONLY when this
+module is the entrypoint (``python -m repro.launch.dryrun``) and only if
+XLA_FLAGS is not already set — importing dryrun as a library leaves the
+environment untouched (tests and benches see the single real CPU
+device), and a user-set XLA_FLAGS always wins (run with 512 devices
+unset if you want the full production meshes).
 
 Per cell this produces:
   * full compile  — the real scanned model; proves sharding coherence and
@@ -22,7 +26,23 @@ Usage:
 """
 
 import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+
+def _apply_default_xla_flags(is_entrypoint: bool) -> bool:
+    """Install the 512-placeholder-device XLA_FLAGS, but only when this
+    module IS the entrypoint (``python -m repro.launch.dryrun``) and the
+    user has not set XLA_FLAGS themselves — importing dryrun as a
+    library must never mutate the environment (tests and benches need
+    the single real CPU device), and a user-chosen device count must
+    never be clobbered.  Returns whether the default was applied.
+    """
+    if is_entrypoint and "XLA_FLAGS" not in os.environ:
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+        return True
+    return False
+
+
+_apply_default_xla_flags(__name__ == "__main__")
 
 import argparse
 import dataclasses

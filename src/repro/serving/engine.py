@@ -14,8 +14,11 @@ two-key ``lax.sort``, so results are deterministic and bit-identical
 across execution modes, the fused kernel, and the brute-force oracle —
 ties break toward the smaller corpus index.
 
-Local scoring reuses the batch engine's mode surface (core.allpairs,
-DESIGN.md section 4):
+Local scoring is a *slot sweep* on the unified pair-sweep runtime
+(core/sweep.py, DESIGN.md section 12): the work items are the k resident
+slots (``sweep.slot_items``) instead of the schedule's slot pairs, the
+stack is already resident (no gather), and the runtime's shared mode
+surface applies (DESIGN.md section 4):
 
   * ``batched`` — one einsum over the whole stack + a single top-k over
     k*block candidates (fastest; O(Q * k * block) score memory).  An
@@ -28,10 +31,10 @@ DESIGN.md section 4):
     mode's k-long serial carry chain.
   * ``scan``    — lax.scan over slots with a running [Q, topk] carry
     (lowest memory; the correctness oracle).
-  * ``auto``    — ``REPRO_ALLPAIRS_MODE`` override first (reusing
-    :func:`core.allpairs.env_mode_override`), then batched while the
-    score working set fits the ``REPRO_BATCH_BYTES_LIMIT`` budget, else
-    overlap when k >= 3, else scan.
+  * ``auto``    — the shared heuristic (``REPRO_ALLPAIRS_MODE`` override
+    first, then batched while the score working set fits the
+    ``REPRO_BATCH_BYTES_LIMIT`` budget, else overlap when k >= 3, else
+    scan).
 """
 
 from __future__ import annotations
@@ -45,12 +48,13 @@ import numpy as np
 from jax import lax
 from jax.sharding import PartitionSpec as PS
 
-from ..core.allpairs import (ENGINE_MODES, auto_batch_bytes,
-                             env_mode_override, mark_varying)
+from ..core import sweep as sweep_mod
+from ..core.allpairs import mark_varying
 from ..core.placement import (Placement, get_placement, placement_from_env,
                               resolve_placement)
 from ..core.scheduler import PairSchedule
 from ..core.sparse import default_capacity
+from ..core.sweep import SweepEmitter, merge_topk, slot_items, topk_by_score
 from ..kernels.ref import IDX_SENTINEL, NEG_INF, QUERY_METRICS as METRICS
 from .cover import build_cover
 from .stream import ServingState, build_state, replace_block
@@ -62,6 +66,8 @@ __all__ = [
     "tree_merge_topk",
     "quorum_query_topk",
     "quorum_query_threshold",
+    "QueryTopKEmitter",
+    "QueryThresholdEmitter",
     "ServingCorpus",
 ]
 
@@ -83,47 +89,11 @@ def _scores(queries: jax.Array, blk: jax.Array, metric: str) -> jax.Array:
     raise ValueError(f"metric must be one of {METRICS}, got {metric!r}")
 
 
-def topk_by_score(vals: jax.Array, idx: jax.Array, topk: int
-                  ) -> Tuple[jax.Array, jax.Array]:
-    """Top-k along the last axis by the (-score, index) total order.
-
-    Pads with (NEG_INF, IDX_SENTINEL) when fewer than ``topk`` candidates.
-    """
-    n = vals.shape[-1]
-    if n < topk:
-        pad = [(0, 0)] * (vals.ndim - 1) + [(0, topk - n)]
-        vals = jnp.pad(vals, pad, constant_values=NEG_INF)
-        idx = jnp.pad(idx, pad, constant_values=IDX_SENTINEL)
-    sv, si = lax.sort((-vals, idx.astype(jnp.int32)), num_keys=2)
-    return -sv[..., :topk], si[..., :topk]
-
-
-def merge_topk(va, ia, vb, ib, topk: int) -> Tuple[jax.Array, jax.Array]:
-    """Merge two candidate lists, deduplicating repeated corpus indices.
-
-    Duplicates only arise from the tree merge's wraparound windows (the
-    dedup mask guarantees each index is *scored* once), so copies carry
-    identical scores and land adjacent under the two-key sort — the
-    second copy is demoted to a sentinel and a re-sort restores order.
-    """
-    vals = jnp.concatenate([va, vb], axis=-1)
-    idx = jnp.concatenate([ia, ib], axis=-1).astype(jnp.int32)
-    sv, si = lax.sort((-vals, idx), num_keys=2)
-    dup = jnp.concatenate(
-        [jnp.zeros_like(si[..., :1], bool),
-         (si[..., 1:] == si[..., :-1]) & (sv[..., 1:] == sv[..., :-1])],
-        axis=-1)
-    sv = jnp.where(dup, -NEG_INF, sv)          # sv holds negated scores
-    si = jnp.where(dup, IDX_SENTINEL, si)
-    sv, si = lax.sort((sv, si), num_keys=2)
-    return -sv[..., :topk], si[..., :topk]
-
-
 def tree_merge_topk(vals, idx, *, axis_name: str, P: int, topk: int):
     """Recursive-doubling merge: after ceil(log2 P) ppermute rounds every
     device holds the global top-k.  Round r pulls the running list from
     device i + 2^r; windows overlap when P is not a power of two, which
-    the index dedup in :func:`merge_topk` absorbs exactly."""
+    the index dedup in :func:`core.sweep.merge_topk` absorbs exactly."""
     shift = 1
     while shift < P:
         perm = [(j, (j - shift) % P) for j in range(P)]
@@ -135,26 +105,121 @@ def tree_merge_topk(vals, idx, *, axis_name: str, P: int, topk: int):
 
 
 def _select_mode(schedule: PairSchedule, queries, block: int, batch_fn) -> str:
-    """``mode="auto"`` for the query engine, mirroring the batch engine's
-    heuristic: env override (conflicts with a fused batch_fn raise), fused
-    kernel -> batched, batched while the [Q, k*block] score working set
-    (x2 for the sort copy) fits the byte budget, overlap when k >= 3."""
-    env = env_mode_override()
-    if env is not None:
-        if batch_fn is not None and env != "batched":
-            raise ValueError(
-                f"REPRO_ALLPAIRS_MODE={env} conflicts with a fused batch_fn "
-                "(the kernel only replaces the batched local scoring step)")
-        return env
-    if batch_fn is not None:
-        return "batched"
+    """The query engine's ``mode="auto"`` working set fed to the shared
+    heuristic (core/sweep.py select_mode): the [Q, k*block] score tensor
+    (x2 for the sort copy)."""
     Q = queries.shape[0]
     itemsize = jnp.dtype(queries.dtype).itemsize
-    if 2 * Q * schedule.k * block * itemsize <= auto_batch_bytes():
-        return "batched"
-    if schedule.k >= 3:
-        return "overlap"
-    return "scan"
+    return sweep_mod.select_mode(
+        schedule, 2 * Q * schedule.k * block * itemsize, batch_fn)
+
+
+def _query_geometry(schedule: PairSchedule, axis_name: str, block: int,
+                    mask_row, stack_valid):
+    """Shared per-device geometry of both query paths: global row ids
+    [k, block] and the cover-dedup x validity mask [k, block]."""
+    P = schedule.P
+    i = lax.axis_index(axis_name)
+    gblocks = (i + jnp.asarray(schedule.shifts, jnp.int32)) % P      # [k]
+    gidx = gblocks[:, None] * block + jnp.arange(block, dtype=jnp.int32)
+    mask = (mask_row[:, None] > 0) & stack_valid                     # [k, block]
+    return gidx, mask
+
+
+class QueryTopKEmitter(SweepEmitter):
+    """Per-row top-k selection over the resident slot sweep (DESIGN.md
+    sections 9.2, 12.2 — the serving top-k workload).
+
+    Each slot's [Q, block] score tile is masked (cover dedup x row
+    validity) and folded into a running [Q, topk] (value, index) list
+    under the (-score, index) total order; the three modes fold
+    differently (single sort / serial merge / tournament merge) but
+    select identically.
+    """
+
+    def __init__(self, schedule: PairSchedule, queries, mask, gidx,
+                 topk: int, metric: str, batch_fn=None):
+        self.schedule = schedule
+        self.queries = queries
+        self.mask = mask
+        self.gidx = gidx
+        self.topk = topk
+        self.metric = metric
+        self.batch_fn = batch_fn
+
+    def items(self):
+        """Slot sweep: one work item per resident slot."""
+        return slot_items(self.schedule.k)
+
+    def batch(self, quorum):
+        """One einsum over the whole stack + a single top-k over all
+        k*block candidates (or the fused kernel via ``batch_fn``)."""
+        k, block = quorum.shape[0], quorum.shape[1]
+        if self.batch_fn is not None:
+            return self.batch_fn(quorum, self.queries,
+                                 self.mask.astype(jnp.float32), self.gidx)
+        s = jnp.einsum("qd,sbd->qsb", self.queries, quorum)
+        if self.metric == "l2":
+            s = (2.0 * s - jnp.sum(quorum * quorum, axis=-1)[None]
+                 - jnp.sum(self.queries * self.queries, axis=-1)[:, None, None])
+        elif self.metric != "dot":
+            raise ValueError(
+                f"metric must be one of {METRICS}, got {self.metric!r}")
+        s = jnp.where(self.mask[None], s, NEG_INF)
+        Q = self.queries.shape[0]
+        midx = jnp.where(self.mask, self.gidx, IDX_SENTINEL)
+        flat_idx = jnp.broadcast_to(midx[None], (Q, k, block))
+        return topk_by_score(s.reshape(Q, k * block),
+                             flat_idx.reshape(Q, k * block), self.topk)
+
+    def scan_init(self):
+        """Sentinel-filled [Q, topk] running lists."""
+        Q = self.queries.shape[0]
+        return (jnp.full((Q, self.topk), NEG_INF, self.queries.dtype),
+                jnp.full((Q, self.topk), IDX_SENTINEL, jnp.int32))
+
+    def scan_items(self):
+        """(slot, mask row, global-id row) per resident slot."""
+        k = self.schedule.k
+        return (jnp.arange(k, dtype=jnp.int32), self.mask, self.gidx)
+
+    def scan_emit(self, carry, quorum, item):
+        """Merge one slot's masked scores into the running list."""
+        cv, ci = carry
+        slot, vrow, grow = item
+        blk = jnp.take(quorum, slot, axis=0)
+        Q, block = self.queries.shape[0], blk.shape[0]
+        s = jnp.where(vrow[None], _scores(self.queries, blk, self.metric),
+                      NEG_INF)
+        g = jnp.broadcast_to(jnp.where(vrow, grow, IDX_SENTINEL)[None],
+                             (Q, block))
+        return merge_topk(cv, ci, s, g, self.topk)
+
+    def overlap_begin(self):
+        """The per-slot candidate lists the tournament merge folds."""
+        return []
+
+    def overlap_emit(self, lists, idx, bi, bj):
+        """Select each slot's local top-k as its scores materialize."""
+        Q, block = self.queries.shape[0], bi.shape[0]
+        s = jnp.where(self.mask[idx][None],
+                      _scores(self.queries, bi, self.metric), NEG_INF)
+        g = jnp.broadcast_to(
+            jnp.where(self.mask[idx], self.gidx[idx], IDX_SENTINEL)[None],
+            (Q, block))
+        lists.append(topk_by_score(s, g, self.topk))
+
+    def overlap_finalize(self, lists):
+        """Pairwise tournament merge: log2(k) depth instead of the scan
+        mode's serial carry chain."""
+        while len(lists) > 1:
+            nxt = []
+            for j in range(0, len(lists) - 1, 2):
+                nxt.append(merge_topk(*lists[j], *lists[j + 1], self.topk))
+            if len(lists) % 2:
+                nxt.append(lists[-1])
+            lists = nxt
+        return lists[0]
 
 
 def quorum_query_topk(
@@ -187,74 +252,21 @@ def quorum_query_topk(
     break toward smaller indices, missing candidates are (NEG_INF,
     IDX_SENTINEL).  Identical on every device after the tree merge.
     """
-    if mode not in ENGINE_MODES + ("auto",):
-        raise ValueError(f"mode must be one of {ENGINE_MODES + ('auto',)}, "
-                         f"got {mode!r}")
-    if batch_fn is not None and mode not in ("batched", "auto"):
-        raise ValueError(
-            f"batch_fn only replaces the batched local scoring step (got "
-            f"mode={mode!r}); drop it or use mode='batched'")
+    sweep_mod.validate_mode(mode, batch_fn)
     k, block, d = stack.shape
     mask_row = mask_row.reshape(-1)  # accept [1, k] shard_map leftovers
     if mode == "auto":
         mode = _select_mode(schedule, queries, block, batch_fn)
 
-    P = schedule.P
-    i = lax.axis_index(axis_name)
-    gblocks = (i + jnp.asarray(schedule.shifts, jnp.int32)) % P      # [k]
-    gidx = gblocks[:, None] * block + jnp.arange(block, dtype=jnp.int32)
-    mask = (mask_row[:, None] > 0) & stack_valid                     # [k, block]
-
-    if batch_fn is not None:
-        vals, idx = batch_fn(stack, queries,
-                             mask.astype(jnp.float32), gidx)
-    elif mode == "batched":
-        s = jnp.einsum("qd,sbd->qsb", queries, stack)
-        if metric == "l2":
-            s = (2.0 * s - jnp.sum(stack * stack, axis=-1)[None]
-                 - jnp.sum(queries * queries, axis=-1)[:, None, None])
-        elif metric != "dot":
-            raise ValueError(f"metric must be one of {METRICS}, got {metric!r}")
-        s = jnp.where(mask[None], s, NEG_INF)
-        Q = queries.shape[0]
-        midx = jnp.where(mask, gidx, IDX_SENTINEL)   # masked rows: sentinels
-        flat_idx = jnp.broadcast_to(midx[None], (Q, k, block))
-        vals, idx = topk_by_score(s.reshape(Q, k * block),
-                                  flat_idx.reshape(Q, k * block), topk)
-    elif mode == "scan":
-        Q = queries.shape[0]
-
-        def body(carry, inp):
-            cv, ci = carry
-            blk, vrow, grow = inp
-            s = jnp.where(vrow[None], _scores(queries, blk, metric), NEG_INF)
-            g = jnp.broadcast_to(jnp.where(vrow, grow, IDX_SENTINEL)[None],
-                                 (Q, block))
-            return merge_topk(cv, ci, s, g, topk), None
-
-        init = (jnp.full((Q, topk), NEG_INF, queries.dtype),
-                jnp.full((Q, topk), IDX_SENTINEL, jnp.int32))
-        (vals, idx), _ = lax.scan(body, init, (stack, mask, gidx))
-    else:  # overlap: unrolled per-slot scoring + tournament merge
-        Q = queries.shape[0]
-        lists = []
-        for s_i in range(k):
-            s = jnp.where(mask[s_i][None],
-                          _scores(queries, stack[s_i], metric), NEG_INF)
-            g = jnp.broadcast_to(
-                jnp.where(mask[s_i], gidx[s_i], IDX_SENTINEL)[None],
-                (Q, block))
-            lists.append(topk_by_score(s, g, topk))
-        while len(lists) > 1:
-            nxt = []
-            for j in range(0, len(lists) - 1, 2):
-                nxt.append(merge_topk(*lists[j], *lists[j + 1], topk))
-            if len(lists) % 2:
-                nxt.append(lists[-1])
-            lists = nxt
-        vals, idx = lists[0]
-
-    return tree_merge_topk(vals, idx, axis_name=axis_name, P=P, topk=topk)
+    gidx, mask = _query_geometry(schedule, axis_name, block, mask_row,
+                                 stack_valid)
+    emitter = QueryTopKEmitter(schedule, queries, mask, gidx, topk, metric,
+                               batch_fn=batch_fn)
+    vals, idx = sweep_mod.pair_sweep(emitter, schedule=schedule,
+                                     axis_name=axis_name, mode=mode,
+                                     stack=stack)
+    return tree_merge_topk(vals, idx, axis_name=axis_name, P=schedule.P,
+                           topk=topk)
 
 
 def _compact_rows(vbuf, ibuf, cnt, keep, vals, idx, capacity: int):
@@ -276,22 +288,107 @@ def _compact_rows(vbuf, ibuf, cnt, keep, vals, idx, capacity: int):
 
 def _select_threshold_mode(schedule: PairSchedule, queries,
                            block: int) -> str:
-    """``mode="auto"`` for the thresholded query path: the shared
-    ``REPRO_ALLPAIRS_MODE`` override first, then batched while the
-    [Q, k*block] score working set (x2 for the compaction copy) fits the
-    ``REPRO_BATCH_BYTES_LIMIT`` budget, overlap when k >= 3, else scan —
-    the same shape as the top-k heuristic minus the (inapplicable) fused
-    kernel arm."""
-    env = env_mode_override()
-    if env is not None:
-        return env
-    Q = queries.shape[0]
-    itemsize = jnp.dtype(queries.dtype).itemsize
-    if 2 * Q * schedule.k * block * itemsize <= auto_batch_bytes():
-        return "batched"
-    if schedule.k >= 3:
-        return "overlap"
-    return "scan"
+    """``mode="auto"`` for the thresholded query path — the same shared
+    heuristic and working set as the top-k path, minus the
+    (inapplicable) fused kernel arm."""
+    return _select_mode(schedule, queries, block, None)
+
+
+class QueryThresholdEmitter(SweepEmitter):
+    """Per-query fixed-capacity threshold compaction over the resident
+    slot sweep (DESIGN.md sections 11.4, 12.2 — the range-query
+    workload).
+
+    Each slot's passing (score, index) entries are cumsum-compacted into
+    [Q, capacity] buffers under the overflow contract of DESIGN.md 11.2;
+    the adapter appends the other devices' prefixes with a ppermute ring
+    gather afterwards.
+    """
+
+    def __init__(self, schedule: PairSchedule, queries, mask, gidx,
+                 thr, capacity: int, metric: str, axis_name: str):
+        self.schedule = schedule
+        self.queries = queries
+        self.mask = mask
+        self.gidx = gidx
+        self.thr = thr
+        self.capacity = capacity
+        self.metric = metric
+        self.axis_name = axis_name
+
+    def items(self):
+        """Slot sweep: one work item per resident slot."""
+        return slot_items(self.schedule.k)
+
+    def _init_bufs(self):
+        """Sentinel-filled [Q, capacity] buffers + zero counts
+        (varying-marked)."""
+        Q = self.queries.shape[0]
+        vbuf = mark_varying(jnp.full((Q, self.capacity), NEG_INF,
+                                     jnp.float32), self.axis_name)
+        ibuf = mark_varying(jnp.full((Q, self.capacity), IDX_SENTINEL,
+                                     jnp.int32), self.axis_name)
+        cnt = mark_varying(jnp.zeros((Q,), jnp.int32), self.axis_name)
+        return vbuf, ibuf, cnt
+
+    def batch(self, quorum):
+        """One einsum over the whole stack + a single compaction."""
+        k, block = quorum.shape[0], quorum.shape[1]
+        Q = self.queries.shape[0]
+        vbuf, ibuf, cnt = self._init_bufs()
+        s = jnp.einsum("qd,sbd->qsb", self.queries, quorum)
+        if self.metric == "l2":
+            s = (2.0 * s - jnp.sum(quorum * quorum, axis=-1)[None]
+                 - jnp.sum(self.queries * self.queries, axis=-1)[:, None, None])
+        keep = (s >= self.thr) & self.mask[None]
+        return _compact_rows(
+            vbuf, ibuf, cnt, keep.reshape(Q, k * block),
+            s.reshape(Q, k * block),
+            jnp.broadcast_to(self.gidx[None], (Q, k, block)
+                             ).reshape(Q, k * block),
+            self.capacity)
+
+    def scan_init(self):
+        """Empty per-query compaction buffers."""
+        return self._init_bufs()
+
+    def scan_items(self):
+        """(slot, mask row, global-id row) per resident slot."""
+        k = self.schedule.k
+        return (jnp.arange(k, dtype=jnp.int32), self.mask, self.gidx)
+
+    def scan_emit(self, carry, quorum, item):
+        """Compact one slot's passing entries into the running buffers."""
+        vb, ib, c = carry
+        slot, mrow, grow = item
+        blk = jnp.take(quorum, slot, axis=0)
+        Q, block = self.queries.shape[0], blk.shape[0]
+        s = _scores(self.queries, blk, self.metric)
+        keep = (s >= self.thr) & mrow[None]
+        g = jnp.broadcast_to(grow[None], (Q, block))
+        return _compact_rows(vb, ib, c, keep, s, g, self.capacity)
+
+    def overlap_begin(self):
+        """Per-slot (scores, keep, ids) lists for the single deferred
+        compaction."""
+        return {"s": [], "keep": [], "g": []}
+
+    def overlap_emit(self, state, idx, bi, bj):
+        """Score one slot as it lands; compaction is deferred so the
+        slot scores stay independent for the scheduler."""
+        Q, block = self.queries.shape[0], bi.shape[0]
+        s = _scores(self.queries, bi, self.metric)
+        state["s"].append(s)
+        state["keep"].append((s >= self.thr) & self.mask[idx][None])
+        state["g"].append(jnp.broadcast_to(self.gidx[idx][None], (Q, block)))
+
+    def overlap_finalize(self, state):
+        """One compaction over every slot's concatenated candidates."""
+        vbuf, ibuf, cnt = self._init_bufs()
+        return _compact_rows(
+            vbuf, ibuf, cnt, jnp.concatenate(state["keep"], axis=1),
+            jnp.concatenate(state["s"], axis=1),
+            jnp.concatenate(state["g"], axis=1), self.capacity)
 
 
 def quorum_query_threshold(
@@ -326,9 +423,7 @@ def quorum_query_threshold(
     valid but device-order-dependent subset), and slots past
     ``min(count, capacity)`` hold (NEG_INF, IDX_SENTINEL) sentinels.
     """
-    if mode not in ENGINE_MODES + ("auto",):
-        raise ValueError(f"mode must be one of {ENGINE_MODES + ('auto',)}, "
-                         f"got {mode!r}")
+    sweep_mod.validate_mode(mode, None)
     if metric not in METRICS:
         raise ValueError(f"metric must be one of {METRICS}, got {metric!r}")
     k, block, d = stack.shape
@@ -338,51 +433,14 @@ def quorum_query_threshold(
         mode = _select_threshold_mode(schedule, queries, block)
 
     P = schedule.P
-    i = lax.axis_index(axis_name)
-    gblocks = (i + jnp.asarray(schedule.shifts, jnp.int32)) % P      # [k]
-    gidx = gblocks[:, None] * block + jnp.arange(block, dtype=jnp.int32)
-    mask = (mask_row[:, None] > 0) & stack_valid                     # [k, block]
+    gidx, mask = _query_geometry(schedule, axis_name, block, mask_row,
+                                 stack_valid)
     thr = jnp.asarray(threshold, jnp.float32)
-
-    vbuf = mark_varying(jnp.full((Q, capacity), NEG_INF, jnp.float32),
-                        axis_name)
-    ibuf = mark_varying(jnp.full((Q, capacity), IDX_SENTINEL, jnp.int32),
-                        axis_name)
-    cnt = mark_varying(jnp.zeros((Q,), jnp.int32), axis_name)
-
-    if mode == "batched":
-        s = jnp.einsum("qd,sbd->qsb", queries, stack)
-        if metric == "l2":
-            s = (2.0 * s - jnp.sum(stack * stack, axis=-1)[None]
-                 - jnp.sum(queries * queries, axis=-1)[:, None, None])
-        keep = (s >= thr) & mask[None]
-        vbuf, ibuf, cnt = _compact_rows(
-            vbuf, ibuf, cnt, keep.reshape(Q, k * block),
-            s.reshape(Q, k * block),
-            jnp.broadcast_to(gidx[None], (Q, k, block)).reshape(Q, k * block),
-            capacity)
-    elif mode == "scan":
-        def body(carry, inp):
-            vb, ib, c = carry
-            blk, mrow, grow = inp
-            s = _scores(queries, blk, metric)
-            keep = (s >= thr) & mrow[None]
-            g = jnp.broadcast_to(grow[None], (Q, block))
-            return _compact_rows(vb, ib, c, keep, s, g, capacity), None
-
-        (vbuf, ibuf, cnt), _ = lax.scan(body, (vbuf, ibuf, cnt),
-                                        (stack, mask, gidx))
-    else:  # overlap: unrolled per-slot scoring, then one compaction
-        slot_s, slot_keep, slot_g = [], [], []
-        for s_i in range(k):
-            s = _scores(queries, stack[s_i], metric)
-            slot_s.append(s)
-            slot_keep.append((s >= thr) & mask[s_i][None])
-            slot_g.append(jnp.broadcast_to(gidx[s_i][None], (Q, block)))
-        vbuf, ibuf, cnt = _compact_rows(
-            vbuf, ibuf, cnt, jnp.concatenate(slot_keep, axis=1),
-            jnp.concatenate(slot_s, axis=1),
-            jnp.concatenate(slot_g, axis=1), capacity)
+    emitter = QueryThresholdEmitter(schedule, queries, mask, gidx, thr,
+                                    capacity, metric, axis_name)
+    vbuf, ibuf, cnt = sweep_mod.pair_sweep(emitter, schedule=schedule,
+                                           axis_name=axis_name, mode=mode,
+                                           stack=stack)
 
     # ppermute ring gather: append every other device's passing prefix
     perm = [(j, (j + 1) % P) for j in range(P)]

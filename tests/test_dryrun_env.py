@@ -1,0 +1,65 @@
+"""Regression tests for launch/dryrun.py's XLA_FLAGS guard.
+
+The seed unconditionally overwrote ``XLA_FLAGS`` at import time, so
+*importing* dryrun as a library (e.g. for ``collective_bytes``) silently
+reconfigured jax for every later consumer in the process and clobbered
+any user-chosen device count.  The guard now applies the 512-device
+default only when dryrun is the entrypoint AND the variable is unset.
+"""
+
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+SRC = Path(__file__).resolve().parents[1] / "src"
+
+
+def test_guard_logic(monkeypatch):
+    from repro.launch.dryrun import _apply_default_xla_flags
+
+    # library import: never touches the environment
+    monkeypatch.delenv("XLA_FLAGS", raising=False)
+    assert _apply_default_xla_flags(False) is False
+    assert "XLA_FLAGS" not in os.environ
+
+    # entrypoint with the variable unset: the 512-device default applies
+    assert _apply_default_xla_flags(True) is True
+    assert os.environ["XLA_FLAGS"].endswith("device_count=512")
+
+    # entrypoint with a user-set value: never clobbered
+    monkeypatch.setenv("XLA_FLAGS", "--xla_force_host_platform_device_count=3")
+    assert _apply_default_xla_flags(True) is False
+    assert os.environ["XLA_FLAGS"].endswith("device_count=3")
+
+
+def test_library_import_preserves_user_flags():
+    """Importing dryrun (the collective_bytes consumer path) leaves a
+    user-set XLA_FLAGS untouched and jax on the user's device count."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+    env["PYTHONPATH"] = str(SRC)
+    code = (
+        "import os, jax\n"
+        "import repro.launch.dryrun as d\n"
+        "assert os.environ['XLA_FLAGS'].endswith('=2'), os.environ['XLA_FLAGS']\n"
+        "assert jax.device_count() == 2, jax.device_count()\n"
+        "print('DRYRUN-IMPORT-OK')\n")
+    r = subprocess.run([sys.executable, "-c", code], env=env,
+                       capture_output=True, text=True, timeout=300)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    assert "DRYRUN-IMPORT-OK" in r.stdout
+
+
+def test_library_import_sets_nothing_when_unset():
+    env = {k: v for k, v in os.environ.items() if k != "XLA_FLAGS"}
+    env["PYTHONPATH"] = str(SRC)
+    code = (
+        "import os\n"
+        "import repro.launch.dryrun as d\n"
+        "assert 'XLA_FLAGS' not in os.environ, os.environ.get('XLA_FLAGS')\n"
+        "print('DRYRUN-NOFLAGS-OK')\n")
+    r = subprocess.run([sys.executable, "-c", code], env=env,
+                       capture_output=True, text=True, timeout=300)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    assert "DRYRUN-NOFLAGS-OK" in r.stdout

@@ -1,0 +1,97 @@
+"""Direct tests for the central REPRO_* knob registry (core/env.py).
+
+Every knob's validation (bad values raise with the canonical message),
+the unknown-variable typo detection, and the README env-var table's
+agreement with the registry.
+"""
+
+from pathlib import Path
+
+import pytest
+
+from repro.core import env as env_mod
+
+ROOT = Path(__file__).resolve().parents[1]
+
+
+def test_unset_and_empty_mean_no_override(monkeypatch):
+    for name in env_mod.ENV_KNOBS:
+        monkeypatch.delenv(name, raising=False)
+        assert env_mod.read_knob(name) is None
+        monkeypatch.setenv(name, "   ")
+        assert env_mod.read_knob(name) is None
+
+
+def test_mode_knob_validation(monkeypatch):
+    monkeypatch.setenv("REPRO_ALLPAIRS_MODE", "OVERLAP")   # case-folded
+    assert env_mod.read_knob("REPRO_ALLPAIRS_MODE") == "overlap"
+    monkeypatch.setenv("REPRO_ALLPAIRS_MODE", "fastest")
+    with pytest.raises(ValueError, match="REPRO_ALLPAIRS_MODE must be one"):
+        env_mod.read_knob("REPRO_ALLPAIRS_MODE")
+    # the reader everyone actually calls surfaces the same error
+    from repro.core.sweep import env_mode_override
+    with pytest.raises(ValueError, match="REPRO_ALLPAIRS_MODE"):
+        env_mode_override()
+
+
+def test_placement_knob_validation(monkeypatch):
+    monkeypatch.setenv("REPRO_PLACEMENT", "plane")
+    assert env_mod.read_knob("REPRO_PLACEMENT") == "plane"
+    monkeypatch.setenv("REPRO_PLACEMENT", "hexagonal")
+    with pytest.raises(ValueError, match="REPRO_PLACEMENT must be one"):
+        env_mod.read_knob("REPRO_PLACEMENT")
+
+
+def test_int_knob_validation(monkeypatch):
+    monkeypatch.setenv("REPRO_BATCH_BYTES_LIMIT", "4096")
+    assert env_mod.read_knob("REPRO_BATCH_BYTES_LIMIT") == 4096
+    monkeypatch.setenv("REPRO_BATCH_BYTES_LIMIT", "lots")
+    with pytest.raises(ValueError, match="must be an integer"):
+        env_mod.read_knob("REPRO_BATCH_BYTES_LIMIT")
+    monkeypatch.setenv("REPRO_BATCH_BYTES_LIMIT", "0")
+    with pytest.raises(ValueError, match="must be >= 1"):
+        env_mod.read_knob("REPRO_BATCH_BYTES_LIMIT")
+    # the shared budget reader raises too (no silent fallthrough)
+    from repro.core.sweep import auto_batch_bytes
+    with pytest.raises(ValueError, match="REPRO_BATCH_BYTES_LIMIT"):
+        auto_batch_bytes()
+    monkeypatch.setenv("REPRO_SPARSE_CAPACITY", "-3")
+    with pytest.raises(ValueError, match="REPRO_SPARSE_CAPACITY must be >="):
+        env_mod.read_knob("REPRO_SPARSE_CAPACITY")
+
+
+def test_unknown_knob_typo_detection(monkeypatch):
+    """A REPRO_* variable matching no registered knob warns once, naming
+    the closest registered knob."""
+    monkeypatch.delenv("REPRO_ALLPAIRS_MODE", raising=False)
+    monkeypatch.setenv("REPRO_ALLPAIRS_MODES", "scan")     # trailing S
+    monkeypatch.setattr(env_mod, "_warned_unknown", set())
+    with pytest.warns(RuntimeWarning,
+                      match="did you mean REPRO_ALLPAIRS_MODE"):
+        env_mod.read_knob("REPRO_ALLPAIRS_MODE")
+    # warned once per process, not on every read
+    import warnings as _w
+    with _w.catch_warnings():
+        _w.simplefilter("error")
+        env_mod.read_knob("REPRO_ALLPAIRS_MODE")
+
+
+def test_registry_is_documented():
+    """Every knob carries a description, describe_knobs() renders all of
+    them, and the README env-var table names each registered knob."""
+    text = env_mod.describe_knobs()
+    readme = (ROOT / "README.md").read_text()
+    for name, knob in env_mod.ENV_KNOBS.items():
+        assert knob.description.strip(), name
+        assert name in text
+        assert name in readme, f"{name} missing from the README env table"
+
+
+def test_choice_lists_are_live():
+    """Choice knobs resolve their valid values lazily, so placements
+    registered after import join validation automatically."""
+    modes = env_mod.ENV_KNOBS["REPRO_ALLPAIRS_MODE"].choices()
+    assert modes == ("batched", "overlap", "scan")
+    placements = env_mod.ENV_KNOBS["REPRO_PLACEMENT"].choices()
+    assert "auto" in placements and "plane" in placements
+    assert "cyclic" in placements and "full" in placements

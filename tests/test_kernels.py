@@ -188,3 +188,44 @@ def test_pairwise_batch_forces(k, block, n_pairs):
     assert got.shape == (k, block, 3)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("k,block,d,n_pairs,topk,metric",
+                         [(3, 8, 16, 4, 4, "dot"),
+                          (4, 16, 8, 7, 8, "l2"),
+                          (3, 7, 5, 4, 3, "dot"),     # non-multiple-of-8 rows
+                          (5, 8, 16, 8, 2, "l2"),
+                          (2, 8, 4, 2, 16, "dot")])   # topk > candidates
+def test_pairwise_topk_kernel(k, block, d, n_pairs, topk, metric):
+    """Fused pair-scoring running-top-k kernel vs the jnp scan oracle:
+    identical neighbor indices and scores per slot row, including a self
+    pair with the diagonal excluded, an inactive (masked) tile, partial
+    row validity, sentinel padding when topk exceeds the candidate
+    count, and non-multiple-of-8 handling through the ops wrapper."""
+    rng = np.random.default_rng(k * 777 + block)     # order-independent
+    quorum = jnp.asarray(rng.normal(size=(k, block, d)), jnp.float32)
+    lo = rng.integers(0, k, size=n_pairs).astype(np.int32)
+    hi = rng.integers(0, k, size=n_pairs).astype(np.int32)
+    lo[0] = hi[0] = 0                                # self pair
+    meta = np.stack([
+        np.ones(n_pairs),                            # active
+        (lo == hi),                                  # is_self
+        rng.permutation(2 * n_pairs)[:n_pairs],      # ga (distinct ids)
+        rng.permutation(2 * n_pairs)[:n_pairs],      # gb
+        np.minimum(block, rng.integers(1, block + 1, n_pairs)),  # nv_lo
+        np.minimum(block, rng.integers(1, block + 1, n_pairs)),  # nv_hi
+    ], axis=1).astype(np.int32)
+    if n_pairs > 1:
+        meta[1, 0] = 0                               # a masked-out tile
+    got_v, got_i = ops.pairwise_topk(quorum, lo, hi, jnp.asarray(meta),
+                                     topk=topk, block_rows=block,
+                                     metric=metric)
+    pad = (-block) % 8                               # ref sees padded rows
+    qp = jnp.pad(quorum, ((0, 0), (0, pad), (0, 0)))
+    want_v, want_i = ref.pairwise_topk(qp, lo, hi, meta, topk=topk,
+                                       block_rows=block, metric=metric)
+    np.testing.assert_array_equal(np.asarray(got_i),
+                                  np.asarray(want_i)[:, :block])
+    np.testing.assert_allclose(np.asarray(got_v),
+                               np.asarray(want_v)[:, :block],
+                               rtol=1e-5, atol=1e-5)

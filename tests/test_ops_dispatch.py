@@ -146,3 +146,31 @@ def test_real_kernel_bugs_still_propagate(monkeypatch):
         warnings.simplefilter("error")          # no fallback warning either
         with pytest.raises(ValueError, match="genuine kernel bug"):
             ops.pairwise_batch_forces(quorum, lo, hi, wi, wj)
+
+
+def test_pairwise_topk_kernel_absent_falls_back_to_ref(monkeypatch):
+    from repro.kernels import pairwise_topk as ptk_mod
+    monkeypatch.setattr(
+        ptk_mod, "pairwise_topk_pallas",
+        lambda *a, **k: (_ for _ in ()).throw(ImportError("no pallas")))
+    k, block, n_pairs, d, topk = 3, 6, 4, 5, 3
+    quorum = jnp.asarray(RNG.normal(size=(k, block, d)), jnp.float32)
+    lo = RNG.integers(0, k, n_pairs).astype(np.int32)
+    hi = RNG.integers(0, k, n_pairs).astype(np.int32)
+    meta = np.stack([np.ones(n_pairs), (lo == hi),
+                     np.arange(n_pairs),
+                     n_pairs + np.arange(n_pairs),
+                     np.full(n_pairs, block),
+                     np.full(n_pairs, block)], 1).astype(np.int32)
+    with pytest.warns(RuntimeWarning, match="pairwise_topk"):
+        got_v, got_i = ops.pairwise_topk(quorum, lo, hi, jnp.asarray(meta),
+                                         topk=topk, block_rows=block)
+    # the wrapper pads rows to 8 sublanes; the ref path sees the padding
+    qp = jnp.pad(quorum, ((0, 0), (0, 2), (0, 0)))
+    want_v, want_i = ref.pairwise_topk(qp, lo, hi, meta, topk=topk,
+                                       block_rows=block)
+    np.testing.assert_array_equal(np.asarray(got_i),
+                                  np.asarray(want_i)[:, :block])
+    np.testing.assert_allclose(np.asarray(got_v),
+                               np.asarray(want_v)[:, :block],
+                               rtol=1e-5, atol=1e-5)

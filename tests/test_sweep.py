@@ -1,0 +1,120 @@
+"""Unit tests for the unified pair-sweep runtime (core/sweep.py,
+DESIGN.md section 12).
+
+The engine selfchecks prove end-to-end equality per workload; this file
+pins the runtime's own contracts: the single mode heuristic and its env
+override / fused-kernel conflicts, the argument validation every adapter
+shares, the work-item ready order, and the emitter protocol conformance
+of all five shipped emitters.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import sweep
+from repro.core.scheduler import build_schedule
+
+
+def test_validate_mode_contract():
+    sweep.validate_mode("auto", None)
+    sweep.validate_mode("batched", object())
+    with pytest.raises(ValueError, match="mode must be one of"):
+        sweep.validate_mode("fastest", None)
+    with pytest.raises(ValueError, match="batch_fn only replaces"):
+        sweep.validate_mode("scan", object())
+    with pytest.raises(ValueError, match="batch_fn only replaces"):
+        sweep.validate_mode("overlap", object())
+
+
+def test_select_mode_policy(monkeypatch):
+    """The single auto heuristic: env override first (kernel conflicts
+    raise), fused kernel -> batched, byte budget -> batched, k >= 3 ->
+    overlap, else scan."""
+    monkeypatch.delenv("REPRO_ALLPAIRS_MODE", raising=False)
+    monkeypatch.delenv("REPRO_BATCH_BYTES_LIMIT", raising=False)
+    sched = build_schedule(8)           # k = 4
+    assert sweep.select_mode(sched, 64, None) == "batched"
+    assert sweep.select_mode(sched, 10 ** 12, None) == "overlap"
+    assert sweep.select_mode(sched, 10 ** 12, object()) == "batched"
+    sched2 = build_schedule(2)          # k = 2: nothing to hide behind
+    assert sweep.select_mode(sched2, 10 ** 12, None) == "scan"
+
+    monkeypatch.setenv("REPRO_ALLPAIRS_MODE", "overlap")
+    assert sweep.select_mode(sched, 64, None) == "overlap"
+    with pytest.raises(ValueError, match="conflicts with a fused batch_fn"):
+        sweep.select_mode(sched, 64, object())
+    monkeypatch.setenv("REPRO_ALLPAIRS_MODE", "batched")
+    assert sweep.select_mode(sched, 10 ** 12, object()) == "batched"
+
+    # the budget is read at selection time (not import time)
+    monkeypatch.delenv("REPRO_ALLPAIRS_MODE", raising=False)
+    monkeypatch.setenv("REPRO_BATCH_BYTES_LIMIT", "65")
+    assert sweep.select_mode(sched, 65, None) == "batched"
+    assert sweep.select_mode(sched, 66, None) == "overlap"
+
+
+def test_engine_working_sets_share_the_policy(monkeypatch):
+    """Each engine's _select_mode shim feeds its own working-set formula
+    into the one shared policy — shrinking the budget steers all of
+    them at once."""
+    import jax.numpy as jnp
+
+    from repro.core import allpairs as ap
+    from repro.core import knn as knn_mod
+    from repro.core import sparse as sp
+    from repro.serving import engine as se
+
+    monkeypatch.delenv("REPRO_ALLPAIRS_MODE", raising=False)
+    sched = build_schedule(8)
+    x = jnp.zeros((16, 8), jnp.float32)
+    probe = jnp.zeros((16, 8), jnp.float32)
+    monkeypatch.setenv("REPRO_BATCH_BYTES_LIMIT", str(1 << 30))
+    assert ap._select_mode(sched, x, probe, None) == "batched"
+    assert sp._select_mode(sched, 16, None) == "batched"
+    assert se._select_mode(sched, x, 16, None) == "batched"
+    assert knn_mod._select_mode(sched, 16, None) == "batched"
+    monkeypatch.setenv("REPRO_BATCH_BYTES_LIMIT", "1")
+    assert ap._select_mode(sched, x, probe, None) == "overlap"
+    assert sp._select_mode(sched, 16, None) == "overlap"
+    assert se._select_mode(sched, x, 16, None) == "overlap"
+    assert knn_mod._select_mode(sched, 16, None) == "overlap"
+
+
+def test_ready_order_pairs_and_slots():
+    sched = build_schedule(8)
+    ready = sweep.pair_ready_order(sched)
+    assert len(ready) == sched.k
+    # every pair appears exactly once, at the slot of its later block
+    seen = sorted(i for slot in ready for i in slot)
+    assert seen == list(range(sched.n_pairs))
+    for s, idxs in enumerate(ready):
+        for i in idxs:
+            assert max(sched.pair_slots[i]) == s
+    # slot sweeps are their own ready order: item s at slot s
+    lo, hi = sweep.slot_items(5)
+    assert sweep.ready_order(lo, hi, 5) == [[0], [1], [2], [3], [4]]
+
+
+def test_all_emitters_conform():
+    """Every shipped workload emitter subclasses SweepEmitter with all
+    abstract methods implemented (instantiable protocol conformance)."""
+    from repro.core.allpairs import DenseReduceEmitter
+    from repro.core.knn import KnnEmitter
+    from repro.core.sparse import ThresholdJoinEmitter
+    from repro.serving.engine import QueryThresholdEmitter, QueryTopKEmitter
+
+    for cls in (DenseReduceEmitter, ThresholdJoinEmitter, QueryTopKEmitter,
+                QueryThresholdEmitter, KnnEmitter):
+        assert issubclass(cls, sweep.SweepEmitter), cls
+        assert not getattr(cls, "__abstractmethods__", None), cls
+
+
+def test_pair_sweep_requires_one_source():
+    from repro.core.allpairs import DenseReduceEmitter
+
+    sched = build_schedule(4)
+    emitter = DenseReduceEmitter(lambda a, b: (a, b), sched,
+                                 np.ones(sched.n_pairs), None, "q")
+    with pytest.raises(AssertionError, match="exactly one"):
+        sweep.pair_sweep(emitter, schedule=sched, axis_name="q",
+                         mode="scan")
