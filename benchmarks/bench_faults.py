@@ -1,0 +1,83 @@
+"""Fault-tolerance microbenchmark: recovery cost of the fault-tolerant
+sweep driver (DESIGN.md section 13) — the fifth member of the benchmark
+JSON family.
+
+For each workload (dense reduce, sparse join, k-NN graph) the bench
+times the host-side driver fault-free and under a chaos plan (a kill
+every other round, drops and slowdowns mixed in, checkpointing every
+round), then reports recovery latency (faulted minus fault-free wall
+time), the blocks re-replicated to restore the k-residency invariant,
+and the slowdown factor.  Bit-exactness of the faulted output against
+the fault-free run is asserted before any number is recorded — a wrong
+fast recovery is not a result.  Writes BENCH_faults.json at the repo
+root (CI uploads it next to the other BENCH_*.json artifacts and diffs
+it with ``benchmarks.run --compare``).
+"""
+
+from __future__ import annotations
+
+import json
+import statistics
+import tempfile
+import time
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+JSON_PATH = ROOT / "BENCH_faults.json"
+
+
+def run(csv_rows, P: int = 13, n_items: int = 192, reps: int = 3,
+        seed: int = 0):
+    from repro.core.faults import (FaultPlan, WORKLOADS,
+                                   run_fault_tolerant_sweep)
+    from repro.core.placement import get_placement
+    from repro.core.sweep import sweep_rounds
+
+    plc = get_placement("cyclic", P)
+    n_rounds = len(sweep_rounds(plc.schedule(), "scan"))
+    results: dict = {"P": P, "n_items": n_items, "mode": "scan",
+                     "timings_s": {}, "recovery": {}}
+    for wl_cls in WORKLOADS:
+        wl = wl_cls(P, n_items=n_items, seed=seed)
+        plan = FaultPlan.random_kills(P, n_rounds, every=2, seed=seed)
+
+        def timed(fn):
+            fn()  # warm caches (owner tables, schedules)
+            ts = []
+            for _ in range(reps):
+                t0 = time.perf_counter()
+                out = fn()
+                ts.append(time.perf_counter() - t0)
+            return statistics.median(ts), out
+
+        t_free, (base, _) = timed(
+            lambda: run_fault_tolerant_sweep(wl, plc, "scan"))
+
+        def faulted():
+            with tempfile.TemporaryDirectory() as d:
+                return run_fault_tolerant_sweep(
+                    wl, plc, "scan", plan, ckpt_dir=str(Path(d) / "ckpt"),
+                    ckpt_every=1)
+
+        t_fault, (out, stats) = timed(faulted)
+        assert wl.equal(out, base), f"{wl.name}: faulted output diverged"
+        slowdown = t_fault / t_free if t_free > 0 else float("inf")
+        results["timings_s"][wl.name] = {
+            "fault_free": t_free, "faulted": t_fault}
+        results["recovery"][wl.name] = {
+            "recovery_latency_s": max(0.0, t_fault - t_free),
+            "n_kills": stats.n_kills,
+            "n_reassigned": stats.n_reassigned,
+            "n_rereplicated": stats.n_rereplicated,
+            "n_restores": stats.n_restores,
+            "n_checkpoints": stats.n_checkpoints,
+            "slowdown": slowdown}
+        csv_rows.append((
+            f"faults_{wl.name}_P{P}",
+            f"{t_fault * 1e6:.0f}",
+            f"fault_free_us={t_free * 1e6:.0f}"
+            f";kills={stats.n_kills}"
+            f";rereplicated={stats.n_rereplicated}"
+            f";slowdown={slowdown:.2f}"))
+    JSON_PATH.write_text(json.dumps(results, indent=2) + "\n")
+    return results

@@ -19,6 +19,10 @@ Prints ``name,us_per_call,derived`` CSV rows:
                          kernel vs unfused batched (writes
                          BENCH_knn.json; ``--fast-knn`` runs only this
                          one, for CI)
+  bench_faults         — fault-tolerant sweep driver: fault-free vs
+                         chaos-plan wall time, recovery latency, blocks
+                         re-replicated (writes BENCH_faults.json;
+                         ``--fast-faults`` runs only this one, for CI)
   bench_attention_comm — comm-volume model: quorum vs ring vs all-gather
 
 ``--compare`` snapshots the committed BENCH_*.json files before running,
@@ -43,7 +47,7 @@ from pathlib import Path
 
 ROOT = Path(__file__).resolve().parents[1]
 BENCH_FILES = ("BENCH_engine.json", "BENCH_serve.json", "BENCH_sparse.json",
-               "BENCH_knn.json")
+               "BENCH_knn.json", "BENCH_faults.json")
 COMPARE_TOLERANCE = 1.5
 
 
@@ -111,12 +115,12 @@ def compare_results(committed, tolerance: float = COMPARE_TOLERANCE) -> int:
 def main() -> None:
     """CLI driver (see module docstring for flags)."""
     from . import (bench_attention_comm, bench_attention_hlo, bench_engine,
-                   bench_knn, bench_memory, bench_pcit_speedup, bench_quorum,
-                   bench_serve, bench_sparse)
+                   bench_faults, bench_knn, bench_memory, bench_pcit_speedup,
+                   bench_quorum, bench_serve, bench_sparse)
     rows = [("name", "us_per_call", "derived")]
     modules = [bench_quorum, bench_memory, bench_attention_comm,
                bench_attention_hlo, bench_engine, bench_serve,
-               bench_sparse, bench_knn, bench_pcit_speedup]
+               bench_sparse, bench_knn, bench_faults, bench_pcit_speedup]
     if "--fast-engine" in sys.argv:
         modules = [bench_engine]
     elif "--fast-serve" in sys.argv:
@@ -125,6 +129,8 @@ def main() -> None:
         modules = [bench_sparse]
     elif "--fast-knn" in sys.argv:
         modules = [bench_knn]
+    elif "--fast-faults" in sys.argv:
+        modules = [bench_faults]
     elif "--fast" in sys.argv:
         modules = modules[:3]
     committed = snapshot_committed() if "--compare" in sys.argv else None

@@ -40,6 +40,8 @@ MUST_CITE_DESIGN = [
     "core/sweep.py",
     "core/knn.py",
     "core/env.py",
+    "core/faults.py",
+    "launch/elastic.py",
     "serving/cover.py",
     "kernels/ops.py",
 ]

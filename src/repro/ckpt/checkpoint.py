@@ -112,6 +112,44 @@ def load_checkpoint(directory: str | Path, tree_like: Tree,
     return jax.tree.unflatten(treedef, out), step
 
 
+def load_named_tree(directory: str | Path,
+                    step: Optional[int] = None) -> tuple[Dict, int]:
+    """Reconstruct a checkpoint as a nested dict keyed by the manifest's
+    "/"-joined leaf names, without a ``tree_like`` template.
+
+    The mid-sweep partial store (DESIGN.md section 13) needs this:
+    which pairs have durable partials varies between checkpoints, so the
+    restoring driver cannot know the tree structure up front — the
+    manifest names carry it.  Arrays come back as host numpy (recovery
+    is host-side; no device placement implied).
+    """
+    directory = Path(directory)
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no valid checkpoint under {directory}")
+    data = np.load(directory / f"step_{step}" / "arrays.npz")
+    tree: Dict = {}
+    for name in data.files:
+        node = tree
+        parts = name.split("/")
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = data[name]
+    return tree, step
+
+
+def restore_or_none(directory: str | Path
+                    ) -> Optional[tuple[Dict, int]]:
+    """``load_named_tree`` of the latest complete step, or None when the
+    directory holds no valid checkpoint yet — the mid-sweep recovery
+    convenience (DESIGN.md section 13): a fault-tolerant driver probes
+    for durable partials without special-casing the cold start."""
+    if latest_step(directory) is None:
+        return None
+    return load_named_tree(directory)
+
+
 class CheckpointManager:
     """Async checkpointing with bounded retention and resume."""
 

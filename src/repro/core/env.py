@@ -107,6 +107,19 @@ ENV_KNOBS = {
         name="REPRO_SPARSE_CAPACITY", kind="int", minimum=1,
         description="starting per-device buffer capacity of the sparse "
                     "join / range query before overflow escalation"),
+    "REPRO_CKPT_EVERY": EnvKnob(
+        name="REPRO_CKPT_EVERY", kind="int", minimum=1,
+        description="rounds between mid-sweep partial checkpoints in the "
+                    "fault-tolerant driver (default 1: every round is "
+                    "durable)"),
+    "REPRO_FAULT_KILL_EVERY": EnvKnob(
+        name="REPRO_FAULT_KILL_EVERY", kind="int", minimum=1,
+        description="chaos selfcheck: kill a random live device every N "
+                    "sweep rounds (default 2)"),
+    "REPRO_FAULT_SEED": EnvKnob(
+        name="REPRO_FAULT_SEED", kind="int", minimum=0,
+        description="chaos selfcheck: seed of the deterministic fault "
+                    "plan RNG (default 0)"),
 }
 
 _warned_unknown: set = set()

@@ -1,0 +1,809 @@
+"""Fault injection and fault-tolerant sweep execution (DESIGN.md
+section 13).
+
+The paper's redundancy claim — every block replicated in exactly k
+quorums (Eq. 13) — is what makes an all-pairs sweep *survivable*, and
+this module is where the repo finally executes a recovery instead of
+just planning one.  The engines themselves are jit-traced SPMD programs
+(a traced program cannot observe a device death mid-collective), so the
+failure-detection boundary is the **round**: the synchronization points
+:func:`core.sweep.sweep_rounds` derives from each engine mode (batched:
+one fused round; overlap: one round per gather shift; scan: one round
+per pair).  Between rounds a host-side driver — the same simulated-
+cluster style as ``launch/dryrun.py`` — consults a deterministic,
+seeded :class:`FaultPlan` and reacts to what it injects:
+
+  * **kill d** — device d's store and non-durable partials are gone.
+    The driver pauses, calls ``core.scheduler.reassign`` with the dead
+    device's *remaining* pair tiles (tier 1: live co-resident peer;
+    tier 2: live holder of one block fetches the other), executes the
+    tier-2 fetches, then **re-replicates** the under-replicated blocks
+    from surviving holders (``launch.elastic.plan_replication_repair``)
+    so the k-residency invariant is restored — after repair, another
+    ``k - 1`` failures are survivable again.  Partials the dead device
+    computed since the last checkpoint are recomputed by the new
+    owners; durable partials (saved by the ``REPRO_CKPT_EVERY``
+    round-boundary checkpoints through ``ckpt/checkpoint.py``) are not.
+  * **slow d by f** — recorded (the bench's heterogeneity signal); a
+    real deployment feeds such measurements back as the capacity
+    weights of ``core.placement.weighted_owner_table``.
+  * **drop** — one block-transfer message this round is lost and
+    retransmitted (the ppermute-message drop of the fault model).
+
+When *all* holders of a block die, ``reassign`` refuses ("block lost")
+and the driver restores from the latest complete checkpoint — blocks
+re-seeded onto live devices, durable partials kept, only the
+non-durable tail recomputed — and resumes.  No full restart, and the
+final output is **bit-exact**: partials are pure functions of block
+contents, and the final fold always runs in canonical pair order, so
+neither the fault history nor the engine mode can change a single bit.
+
+The headline check is the chaos selfcheck (``python -m
+repro.core.faults``): kill a random live device every N rounds across
+every registered placement x engine mode x P in {5, 7, 8, 12, 13} and
+all three workloads (dense reduce, sparse similarity join, k-NN graph),
+asserting the faulted output is bit-identical to the fault-free run,
+the fault-free run matches an independent brute-force oracle, and the
+residency invariant holds after every repair.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import tempfile
+from pathlib import Path
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..ckpt.checkpoint import restore_or_none, save_checkpoint
+from ..launch.elastic import plan_replication_repair
+from . import env as env_mod
+from .placement import (Placement, get_placement, registered_placements,
+                        weighted_owner_table)
+from .scheduler import PairSchedule, reassign
+from .sparse import threshold_with_gap
+from .sweep import ENGINE_MODES, sweep_rounds
+
+__all__ = [
+    "FaultEvent",
+    "FaultPlan",
+    "RecoveryStats",
+    "PairWorkload",
+    "DenseReduceWorkload",
+    "SparseJoinWorkload",
+    "KnnGraphWorkload",
+    "WORKLOADS",
+    "run_fault_tolerant_sweep",
+    "residency_invariant_ok",
+    "chaos_selfcheck",
+    "CHAOS_P",
+]
+
+# the chaos matrix: covers odd/even P, the projective planes 7 and 13,
+# and the affine plane 12 (ISSUE acceptance set)
+CHAOS_P = (5, 7, 8, 12, 13)
+
+_KINDS = ("kill", "slow", "drop")
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultEvent:
+    """One injected fault (DESIGN.md section 13): ``kind`` is ``kill``
+    (device dies at the start of ``round``), ``slow`` (device runs
+    ``factor`` x slower from this round on), or ``drop`` (one block
+    transfer this round is lost and retransmitted)."""
+    kind: str
+    round: int
+    device: int = -1          # -1 for drop (the link, not a device)
+    factor: float = 1.0       # slow only
+
+    def __post_init__(self):
+        if self.kind not in _KINDS:
+            raise ValueError(f"kind must be one of {_KINDS}, "
+                             f"got {self.kind!r}")
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """A deterministic, seeded fault schedule the driver consults at
+    every round boundary (DESIGN.md section 13).  Pure data: the same
+    plan replayed against the same workload yields the same recovery
+    actions, which is what makes chaos failures debuggable."""
+    events: Tuple[FaultEvent, ...] = ()
+
+    def events_at(self, rnd: int) -> List[FaultEvent]:
+        """Events firing at the start of round ``rnd`` (kills first, so
+        a killed device never services this round's transfers)."""
+        order = {"kill": 0, "drop": 1, "slow": 2}
+        return sorted((e for e in self.events if e.round == rnd),
+                      key=lambda e: (order[e.kind], e.device))
+
+    @property
+    def n_kills(self) -> int:
+        """Total device kills in the plan."""
+        return sum(1 for e in self.events if e.kind == "kill")
+
+    @classmethod
+    def random_kills(cls, P: int, n_rounds: int, every: int = 2,
+                     seed: int = 0, chaos: bool = True) -> "FaultPlan":
+        """Kill a random live device every ``every`` rounds (never the
+        last survivor), deterministically from ``seed``; with ``chaos``
+        also inject a message drop at each kill round and a slowdown on
+        a random live device between kills (DESIGN.md section 13)."""
+        if every < 1:
+            raise ValueError(f"every must be >= 1, got {every}")
+        rng = np.random.RandomState(seed)
+        alive = list(range(P))
+        events: List[FaultEvent] = []
+        for rnd in range(n_rounds):
+            # short sweeps (batched: one round) still get their one kill
+            kill_here = ((rnd + 1) % every == 0
+                         or (n_rounds < every and rnd == 0))
+            if kill_here and len(alive) > 1:
+                victim = alive[int(rng.randint(len(alive)))]
+                alive.remove(victim)
+                events.append(FaultEvent("kill", rnd, victim))
+                if chaos:
+                    events.append(FaultEvent("drop", rnd))
+            elif chaos and rnd % every == 0 and alive:
+                dev = alive[int(rng.randint(len(alive)))]
+                events.append(FaultEvent(
+                    "slow", rnd, dev, factor=float(1.25 + rng.rand())))
+        return cls(events=tuple(events))
+
+
+@dataclasses.dataclass
+class RecoveryStats:
+    """Counters the driver accumulates while recovering (DESIGN.md
+    section 13) — the quantities ``benchmarks/bench_faults.py``
+    reports."""
+    rounds: int = 0
+    n_kills: int = 0
+    n_slow: int = 0
+    n_drops: int = 0
+    n_drop_retries: int = 0
+    n_reassigned: int = 0          # pairs moved to new owners
+    n_fetches: int = 0             # tier-2 / weighted-owner block pulls
+    n_rereplicated: int = 0        # block copies restoring k-residency
+    n_restores: int = 0            # checkpoint restores (block loss)
+    n_recomputed: int = 0          # non-durable partials recomputed
+    n_checkpoints: int = 0
+
+    def as_dict(self) -> Dict[str, int]:
+        """The counters as a plain dict (for JSON benchmark output)."""
+        return dataclasses.asdict(self)
+
+
+# ---------------------------------------------------------------------------
+# Workloads: pure per-pair partials + a canonical fold
+# ---------------------------------------------------------------------------
+#
+# Bit-exactness across fault histories and engine modes rests on two
+# properties every workload here maintains: (1) a pair's partial is a
+# pure function of the two block contents (numpy f32 host math — the
+# same bits no matter which device computes or recomputes it), and
+# (2) the final fold consumes partials in canonical (x, y), x <= y
+# order, never in completion order.
+
+class PairWorkload:
+    """Base class: a corpus split into P blocks plus the three hooks the
+    fault-tolerant driver needs — ``pair_partial`` (pure), ``fold``
+    (canonical-order combine), and ``check_oracle`` (an independent
+    brute-force cross-check); DESIGN.md section 13."""
+
+    name = "abstract"
+
+    def __init__(self, P: int, n_items: Optional[int] = None, dim: int = 8,
+                 seed: int = 0):
+        self.P = P
+        self.n = int(n_items) if n_items is not None else 3 * P + 2
+        rng = np.random.RandomState(seed + 101 * P)
+        self.corpus = rng.randn(self.n, dim).astype(np.float32)
+        self.blocks: List[np.ndarray] = [
+            np.ascontiguousarray(b) for b in np.array_split(self.corpus, P)]
+        starts = np.cumsum([0] + [len(b) for b in self.blocks])
+        self.offsets = [int(s) for s in starts[:-1]]
+
+    # -- the driver-facing hooks ------------------------------------------
+    def pair_partial(self, x: int, y: int, bx: np.ndarray,
+                     by: np.ndarray) -> Any:
+        """Pure partial result for block pair (x, y) — same bits on any
+        device, any number of recomputations."""
+        raise NotImplementedError
+
+    def fold(self, partials: Dict[Tuple[int, int], Any]) -> Any:
+        """Combine all partials in canonical (x, y), x <= y order."""
+        raise NotImplementedError
+
+    def check_oracle(self, result: Any) -> None:
+        """Assert ``result`` matches an independent brute-force oracle."""
+        raise NotImplementedError
+
+    def equal(self, a: Any, b: Any) -> bool:
+        """Bitwise result equality (ints exact, floats by bit pattern)."""
+        raise NotImplementedError
+
+    # -- checkpoint encoding (npz-able dicts) -----------------------------
+    def encode_partial(self, partial: Any) -> Dict[str, np.ndarray]:
+        """A partial as an npz-able array dict (for checkpointing)."""
+        raise NotImplementedError
+
+    def decode_partial(self, enc: Dict[str, np.ndarray]) -> Any:
+        """Inverse of :meth:`encode_partial`."""
+        raise NotImplementedError
+
+    def canonical_pairs(self) -> List[Tuple[int, int]]:
+        """All unordered block pairs in the canonical fold order."""
+        return [(x, y) for x in range(self.P) for y in range(x, self.P)]
+
+
+class DenseReduceWorkload(PairWorkload):
+    """Global all-pairs reduction: the sum of every pairwise dot product
+    block pair by block pair, folded in canonical order (DESIGN.md
+    section 13).  The faulted run must reproduce the fault-free float64
+    sum bit-for-bit; the brute-force full-Gram oracle is matched to
+    float tolerance (a different summation order)."""
+
+    name = "dense"
+
+    def pair_partial(self, x, y, bx, by):
+        """Float64 sum of the pair's dot products (triu within-block)."""
+        s = bx.astype(np.float32) @ by.astype(np.float32).T
+        if x == y:  # within-block: each unordered item pair once
+            s = np.triu(s)
+        return np.float64(np.sum(s, dtype=np.float64))
+
+    def fold(self, partials):
+        """Accumulate partial sums in canonical pair order."""
+        acc = np.float64(0.0)
+        for p in self.canonical_pairs():
+            acc = acc + partials[p]
+        return acc
+
+    def check_oracle(self, result):
+        """Compare against the full-Gram upper-triangle sum."""
+        g = self.corpus @ self.corpus.T  # [N, N] f32
+        iu, ju = np.triu_indices(self.n)
+        want = np.sum(g[iu, ju], dtype=np.float64)
+        np.testing.assert_allclose(float(result), float(want), rtol=1e-5)
+
+    def equal(self, a, b):
+        """Bit-pattern equality of the float64 totals."""
+        return np.float64(a).tobytes() == np.float64(b).tobytes()
+
+    def encode_partial(self, partial):
+        """Scalar partial as a one-entry array dict."""
+        return {"v": np.float64(partial)}
+
+    def decode_partial(self, enc):
+        """Inverse of :meth:`encode_partial`."""
+        return np.float64(enc["v"])
+
+
+class SparseJoinWorkload(PairWorkload):
+    """Thresholded similarity join: all global item pairs (i, j), i < j,
+    with dot score >= a gap-protected threshold (DESIGN.md section 13).
+    Output is the sorted (i, j) index array — discrete, so bit-exact
+    equality is set equality, and the threshold gap
+    (``core.sparse.threshold_with_gap``) keeps borderline rounding from
+    flipping membership."""
+
+    name = "sparse"
+
+    def __init__(self, P, n_items=None, dim=8, seed=0):
+        super().__init__(P, n_items, dim, seed)
+        g = self.corpus @ self.corpus.T
+        iu, ju = np.triu_indices(self.n, k=1)
+        self.threshold = threshold_with_gap(g[iu, ju], selectivity=0.15)
+
+    def pair_partial(self, x, y, bx, by):
+        """Sorted global (i, j) rows of the pair's above-threshold hits."""
+        s = bx.astype(np.float32) @ by.astype(np.float32).T
+        ox, oy = self.offsets[x], self.offsets[y]
+        if x == y:
+            ii, jj = np.nonzero(np.triu(s >= self.threshold, k=1))
+        else:
+            ii, jj = np.nonzero(s >= self.threshold)
+        gi, gj = ii.astype(np.int64) + ox, jj.astype(np.int64) + oy
+        lo, hi = np.minimum(gi, gj), np.maximum(gi, gj)
+        order = np.lexsort((hi, lo))
+        return np.stack([lo[order], hi[order]], axis=1)
+
+    def fold(self, partials):
+        """Concatenate and lexsort all index rows into one join result."""
+        rows = [partials[p] for p in self.canonical_pairs()]
+        allr = (np.concatenate(rows, axis=0) if rows
+                else np.zeros((0, 2), np.int64))
+        order = np.lexsort((allr[:, 1], allr[:, 0]))
+        return allr[order]
+
+    def check_oracle(self, result):
+        """Compare against ``core.sparse.brute_force_join`` exactly."""
+        from .sparse import brute_force_join
+        iu, ju, _ = brute_force_join(self.corpus, self.threshold, "dot")
+        want = np.stack([iu.astype(np.int64), ju.astype(np.int64)], axis=1)
+        np.testing.assert_array_equal(result, want)
+
+    def equal(self, a, b):
+        """Exact equality of the sorted index arrays."""
+        return a.shape == b.shape and bool(np.array_equal(a, b))
+
+    def encode_partial(self, partial):
+        """Index rows as a one-entry array dict."""
+        return {"ij": np.asarray(partial, np.int64)}
+
+    def decode_partial(self, enc):
+        """Inverse of :meth:`encode_partial`."""
+        return np.asarray(enc["ij"], np.int64).reshape(-1, 2)
+
+
+class KnnGraphWorkload(PairWorkload):
+    """All-pairs k-nearest-neighbor graph: per item, the top-k other
+    items by dot score under the total order (-score, index), merged
+    from per-pair candidate lists in canonical order (DESIGN.md
+    section 13).  Output is the [N, topk] neighbor index matrix —
+    integer, so bitwise equality; the oracle recomputes it blockwise
+    with the identical float ops, so even near-ties cannot diverge."""
+
+    name = "knn"
+    topk = 3
+
+    def _candidates(self, x, y, bx, by):
+        """Per-row (scores, global idx) of block x's items vs block y."""
+        s = bx.astype(np.float32) @ by.astype(np.float32).T
+        if x == y:
+            np.fill_diagonal(s, -np.inf)
+        idx = np.arange(by.shape[0], dtype=np.int64) + self.offsets[y]
+        return s, np.broadcast_to(idx, s.shape)
+
+    def _row_topk(self, scores, idx):
+        """[n, topk] best-by-(-score, idx) selection, sentinel-padded."""
+        n, topk = scores.shape[0], self.topk
+        out_s = np.full((n, topk), -np.inf, np.float32)
+        out_i = np.full((n, topk), np.iinfo(np.int64).max, np.int64)
+        for r in range(n):
+            order = np.lexsort((idx[r], -scores[r].astype(np.float64)))
+            take = [o for o in order if np.isfinite(scores[r, o])][:topk]
+            out_s[r, :len(take)] = scores[r, take]
+            out_i[r, :len(take)] = idx[r, take]
+        return out_s, out_i
+
+    def pair_partial(self, x, y, bx, by):
+        """Per-row top-k candidates of each side of the block pair."""
+        sx, ix = self._candidates(x, y, bx, by)
+        xs, xi = self._row_topk(sx, ix)
+        if x == y:
+            return {"xs": xs, "xi": xi}
+        sy, iy = self._candidates(y, x, by, bx)
+        ys, yi = self._row_topk(sy, iy)
+        return {"xs": xs, "xi": xi, "ys": ys, "yi": yi}
+
+    def _merge(self, s_a, i_a, s_b, i_b):
+        s = np.concatenate([s_a, s_b], axis=1)
+        i = np.concatenate([i_a, i_b], axis=1)
+        return self._row_topk(s, i)
+
+    def fold(self, partials):
+        """Merge per-pair candidates into the [N, topk] index matrix."""
+        topk = self.topk
+        best_s = np.full((self.n, topk), -np.inf, np.float32)
+        best_i = np.full((self.n, topk), np.iinfo(np.int64).max, np.int64)
+        for (x, y) in self.canonical_pairs():
+            part = partials[(x, y)]
+            ox = self.offsets[x]
+            nx = self.blocks[x].shape[0]
+            best_s[ox:ox + nx], best_i[ox:ox + nx] = self._merge(
+                best_s[ox:ox + nx], best_i[ox:ox + nx],
+                part["xs"], part["xi"])
+            if x != y:
+                oy = self.offsets[y]
+                ny = self.blocks[y].shape[0]
+                best_s[oy:oy + ny], best_i[oy:oy + ny] = self._merge(
+                    best_s[oy:oy + ny], best_i[oy:oy + ny],
+                    part["ys"], part["yi"])
+        return best_i
+
+    def check_oracle(self, result):
+        """Blockwise recompute plus ``core.knn.brute_force_knn`` check."""
+        # blockwise-identical float ops -> bitwise-identical scores ->
+        # the same (-score, idx) ranking, even at near-ties
+        want_s = np.full((self.n, self.topk), -np.inf, np.float32)
+        want_i = np.full((self.n, self.topk), np.iinfo(np.int64).max,
+                         np.int64)
+        for (x, y) in self.canonical_pairs():
+            part = self.pair_partial(x, y, self.blocks[x], self.blocks[y])
+            ox, nx = self.offsets[x], self.blocks[x].shape[0]
+            want_s[ox:ox + nx], want_i[ox:ox + nx] = self._merge(
+                want_s[ox:ox + nx], want_i[ox:ox + nx],
+                part["xs"], part["xi"])
+            if x != y:
+                oy, ny = self.offsets[y], self.blocks[y].shape[0]
+                want_s[oy:oy + ny], want_i[oy:oy + ny] = self._merge(
+                    want_s[oy:oy + ny], want_i[oy:oy + ny],
+                    part["ys"], part["yi"])
+        np.testing.assert_array_equal(result, want_i)
+        # and the ranking itself is right: cross-check vs the repo's
+        # dense brute-force k-NN (scores from one full Gram matrix)
+        from .knn import brute_force_knn
+        ref = brute_force_knn(self.corpus, self.topk, metric="dot")
+        np.testing.assert_array_equal(result, ref.indices.astype(np.int64))
+
+    def equal(self, a, b):
+        """Exact equality of the neighbor index matrices."""
+        return bool(np.array_equal(a, b))
+
+    def encode_partial(self, partial):
+        """Candidate arrays as an npz-able dict (keys pass through)."""
+        return {k: np.asarray(v) for k, v in partial.items()}
+
+    def decode_partial(self, enc):
+        """Inverse of :meth:`encode_partial`."""
+        return {k: np.asarray(v) for k, v in enc.items()}
+
+
+WORKLOADS = (DenseReduceWorkload, SparseJoinWorkload, KnnGraphWorkload)
+
+
+# ---------------------------------------------------------------------------
+# The fault-tolerant driver
+# ---------------------------------------------------------------------------
+
+class _ResidencyView:
+    """A minimal placement stand-in carrying the cluster's *current*
+    residency sets (they drift after repairs), for reassign()."""
+
+    def __init__(self, P: int, sets: Sequence[set]):
+        self.P = P
+        self.residency_sets = tuple(frozenset(s) for s in sets)
+
+
+def residency_invariant_ok(placement: Placement,
+                           residency: Sequence[set],
+                           alive: Sequence[bool]) -> bool:
+    """True iff every block has ``min(placement copy count, live
+    devices)`` live replicas — the invariant re-replication restores
+    after each failure (DESIGN.md section 13)."""
+    P = placement.P
+    orig = [0] * P
+    for S in placement.residency_sets:
+        for b in S:
+            orig[b] += 1
+    n_live = sum(1 for a in alive if a)
+    for b in range(P):
+        have = sum(1 for i in range(P) if alive[i] and b in residency[i])
+        if have < min(orig[b], n_live):
+            return False
+    return True
+
+
+def _ckpt_every_default() -> int:
+    val = env_mod.read_knob("REPRO_CKPT_EVERY")
+    return 1 if val is None else int(val)
+
+
+def run_fault_tolerant_sweep(workload: PairWorkload, placement: Placement,
+                             mode: str, plan: Optional[FaultPlan] = None,
+                             *, ckpt_dir: Optional[str] = None,
+                             ckpt_every: Optional[int] = None,
+                             weights: Optional[Sequence[float]] = None
+                             ) -> Tuple[Any, RecoveryStats]:
+    """Execute ``workload`` over ``placement`` in engine ``mode``'s round
+    structure, surviving the faults ``plan`` injects (DESIGN.md
+    section 13).
+
+    A host-side simulated cluster (the ``launch/dryrun.py`` idiom):
+    device stores hold numpy blocks per the placement's residency, pair
+    partials are computed by their owner — ``weights`` switches
+    ownership to :func:`core.placement.weighted_owner_table` — and at
+    every round boundary the driver consults ``plan``, reassigns a dead
+    device's remaining tiles, executes tier-2 fetches, re-replicates
+    lost blocks back to the k-residency invariant (asserted), and
+    checkpoints partials every ``ckpt_every`` rounds (default: the
+    ``REPRO_CKPT_EVERY`` knob, else 1) when ``ckpt_dir`` is given.
+    Block loss (all holders dead) restores from the latest checkpoint —
+    durable partials are kept, only the non-durable tail is recomputed —
+    and without any checkpoint directory falls back to re-seeding from
+    the pristine input blocks.  Returns ``(result, RecoveryStats)``;
+    the result is bit-identical to the fault-free run of the same
+    workload in any mode.
+    """
+    if mode not in ENGINE_MODES:
+        raise ValueError(f"mode must be one of {ENGINE_MODES}, got {mode!r}")
+    plc = placement
+    P = plc.P
+    if workload.P != P:
+        raise ValueError(f"workload P={workload.P} != placement P={P}")
+    schedule: PairSchedule = plc.schedule()
+    rounds = sweep_rounds(schedule, mode)
+    every = _ckpt_every_default() if ckpt_every is None else int(ckpt_every)
+    if every < 1:
+        raise ValueError(f"ckpt_every must be >= 1, got {every}")
+    stats = RecoveryStats()
+
+    # canonical pair -> round, via the pair's difference class slot
+    sidx_of_diff = {int(d): s for s, d in enumerate(schedule.pair_diff)}
+    round_of_sidx = {s: r for r, grp in enumerate(rounds) for s in grp}
+    all_pairs = workload.canonical_pairs()
+
+    def pair_round(p: Tuple[int, int]) -> int:
+        d = (p[1] - p[0]) % P
+        dd = min(d, P - d) if P > 1 else 0
+        return round_of_sidx[sidx_of_diff[dd]]
+
+    # ownership: the placement partition, or the weighted one
+    if weights is not None:
+        table = weighted_owner_table(plc, weights)
+        owner_map = {p: int(table[p[0], p[1]]) for p in all_pairs}
+    else:
+        owner_map = {p: int(plc.owner_of(p[0], p[1])) for p in all_pairs}
+
+    orig_count = [0] * P
+    for S in plc.residency_sets:
+        for b in S:
+            orig_count[b] += 1
+
+    alive = [True] * P
+    res_sets: List[set] = [set(plc.residency(i)) for i in range(P)]
+    stores: List[Dict[int, np.ndarray]] = [
+        {b: workload.blocks[b] for b in res_sets[i]} for i in range(P)]
+    partials: Dict[Tuple[int, int], Any] = {}
+    computed_by: Dict[Tuple[int, int], int] = {}
+    durable: set = set()
+    drops_pending = 0
+
+    def transfer(src: int) -> None:
+        """Account one block message; consume a pending drop as a
+        retransmit."""
+        nonlocal drops_pending
+        if drops_pending > 0:
+            drops_pending -= 1
+            stats.n_drop_retries += 1
+
+    def get_block(dev: int, b: int) -> np.ndarray:
+        if b in stores[dev]:
+            return stores[dev][b]
+        holders = sorted(i for i in range(P) if alive[i] and b in stores[i])
+        if not holders:
+            raise RuntimeError(f"block {b} lost: no live holder")
+        src = holders[0]
+        transfer(src)
+        stats.n_fetches += 1
+        return stores[src][b]
+
+    def apply_reassign(rplan) -> None:
+        # tier 1 moves the pair; tier 2 moves it to a one-block holder
+        # whose missing block get_block() pulls at compute time
+        for tgt, prs in sorted(rplan.extra_pairs.items()):
+            for p in prs:
+                owner_map[p] = tgt
+                stats.n_reassigned += 1
+        for tgt, entries in sorted(rplan.fetch_pairs.items()):
+            for (p, _missing, _src) in entries:
+                owner_map[p] = tgt
+                stats.n_reassigned += 1
+
+    def rereplicate(dead: List[int]) -> None:
+        rplan = plan_replication_repair(plc, dead, residency=res_sets)
+        for (b, src, tgt) in rplan.actions:
+            transfer(src)
+            stores[tgt][b] = stores[src][b]
+            res_sets[tgt].add(b)
+        stats.n_rereplicated += rplan.n_copies
+        assert residency_invariant_ok(plc, res_sets, alive)
+
+    def restore_from_checkpoint(dead: List[int]) -> None:
+        """Block loss: rebuild from the latest durable state (DESIGN.md
+        section 13) — the no-full-restart path."""
+        nonlocal partials, computed_by, durable
+        stats.n_restores += 1
+        ck = restore_or_none(ckpt_dir) if ckpt_dir is not None else None
+        if ck is not None:
+            tree, _step = ck
+            block_data = {int(b): np.asarray(a)
+                          for b, a in tree.get("blocks", {}).items()}
+            partials = {
+                (int(k.split("_")[0]), int(k.split("_")[1])):
+                    workload.decode_partial(v)
+                for k, v in tree.get("partials", {}).items()}
+        else:
+            # no durable state yet: re-seed from the pristine input
+            # blocks (stable storage), recompute everything
+            block_data = {b: workload.blocks[b] for b in range(P)}
+            partials = {}
+        durable = set(partials)
+        computed_by = {}
+        n_live = sum(1 for a in alive if a)
+        live = [i for i in range(P) if alive[i]]
+        for i in range(P):
+            res_sets[i] = set(plc.residency(i)) if alive[i] else set()
+            stores[i] = ({b: block_data[b] for b in res_sets[i]}
+                         if alive[i] else {})
+        # blocks whose placement holders all died: seed them onto the
+        # least-loaded live devices up to the invariant count
+        for b in range(P):
+            holders = [i for i in live if b in res_sets[i]]
+            want = min(orig_count[b], n_live)
+            while len(holders) < want:
+                tgt = min((i for i in live if b not in res_sets[i]),
+                          key=lambda i: (len(res_sets[i]), i))
+                res_sets[tgt].add(b)
+                stores[tgt][b] = block_data[b]
+                holders.append(tgt)
+                stats.n_rereplicated += 1
+        assert residency_invariant_ok(plc, res_sets, alive)
+        # every pending pair owned by a dead device gets a live owner
+        todo = {f: [p for p in all_pairs
+                    if p not in partials and owner_map[p] == f]
+                for f in dead}
+        rplan = reassign(schedule, dead, placement=_ResidencyView(
+            P, res_sets), weights=weights, pairs=todo)
+        apply_reassign(rplan)
+
+    def on_kills(victims: List[int], dead: List[int]) -> None:
+        """One recovery for all devices that died at this boundary — a
+        correlated (rack-loss-style) failure is a single batch, which is
+        exactly what can defeat k-replication and force the checkpoint
+        path."""
+        todo: Dict[int, List[Tuple[int, int]]] = {}
+        for victim in victims:
+            pending = [p for p in all_pairs
+                       if p not in partials and owner_map[p] == victim]
+            lost_done = sorted(p for p in partials
+                               if computed_by.get(p) == victim
+                               and p not in durable)
+            for p in lost_done:
+                del partials[p]
+                del computed_by[p]
+            stats.n_recomputed += len(lost_done)
+            todo[victim] = pending + lost_done
+        try:
+            rplan = reassign(schedule, dead, placement=_ResidencyView(
+                P, res_sets), weights=weights, pairs=todo)
+            apply_reassign(rplan)
+            rereplicate(dead)
+        except RuntimeError:
+            restore_from_checkpoint(dead)
+
+    for rnd in range(len(rounds)):
+        drops_pending = 0
+        victims: List[int] = []
+        for ev in (plan.events_at(rnd) if plan is not None else []):
+            if ev.kind == "slow":
+                if alive[ev.device]:
+                    stats.n_slow += 1
+            elif ev.kind == "drop":
+                drops_pending += 1
+                stats.n_drops += 1
+            elif ev.kind == "kill" and alive[ev.device]:
+                alive[ev.device] = False
+                stores[ev.device] = {}
+                res_sets[ev.device] = set()
+                stats.n_kills += 1
+                victims.append(ev.device)
+        if victims:
+            if not any(alive):
+                raise RuntimeError("all devices dead: unrecoverable")
+            on_kills(victims, [i for i in range(P) if not alive[i]])
+        # compute everything due by this round (incl. recovery recompute)
+        for p in all_pairs:
+            if p in partials or pair_round(p) > rnd:
+                continue
+            o = owner_map[p]
+            assert alive[o], (p, o)
+            bx = get_block(o, p[0])
+            by = get_block(o, p[1])
+            partials[p] = workload.pair_partial(p[0], p[1], bx, by)
+            computed_by[p] = o
+        stats.rounds += 1
+        if ckpt_dir is not None and (rnd + 1) % every == 0:
+            tree: Dict[str, Any] = {
+                "round": np.int64(rnd + 1),
+                "blocks": {str(b): workload.blocks[b] for b in range(P)},
+            }
+            if partials:
+                tree["partials"] = {
+                    f"{p[0]}_{p[1]}": workload.encode_partial(v)
+                    for p, v in partials.items()}
+            save_checkpoint(ckpt_dir, rnd + 1, tree)
+            durable = set(partials)
+            stats.n_checkpoints += 1
+
+    assert len(partials) == len(all_pairs)
+    return workload.fold(partials), stats
+
+
+# ---------------------------------------------------------------------------
+# Chaos selfcheck
+# ---------------------------------------------------------------------------
+
+def _chaos_placements(P: int) -> List[Placement]:
+    return [get_placement(name, P)
+            for name, cls in sorted(registered_placements().items())
+            if cls.supports(P)]
+
+
+def chaos_selfcheck(Ps: Sequence[int] = CHAOS_P,
+                    modes: Sequence[str] = ENGINE_MODES,
+                    placements: Optional[Sequence[str]] = None,
+                    kill_every: Optional[int] = None,
+                    seed: Optional[int] = None,
+                    verbose: bool = True) -> int:
+    """The headline chaos check (DESIGN.md section 13): for every
+    registered placement x engine mode x P in ``Ps`` and all three
+    workloads, kill a random live device every ``kill_every`` rounds
+    (default: ``REPRO_FAULT_KILL_EVERY``, else 2; seed from
+    ``REPRO_FAULT_SEED``, else 0) with message drops and slowdowns mixed
+    in, and assert: the faulted output is bit-identical to the
+    fault-free run, the fault-free run matches the brute-force oracle,
+    and at least the planned kills actually fired.  Returns the number
+    of faulted cases checked."""
+    if kill_every is None:
+        val = env_mod.read_knob("REPRO_FAULT_KILL_EVERY")
+        kill_every = 2 if val is None else int(val)
+    if seed is None:
+        val = env_mod.read_knob("REPRO_FAULT_SEED")
+        seed = 0 if val is None else int(val)
+    n_cases = 0
+    for P in Ps:
+        for plc in _chaos_placements(P):
+            if placements is not None and plc.name not in placements:
+                continue
+            for wl_cls in WORKLOADS:
+                wl = wl_cls(P, seed=seed)
+                baseline, base_stats = run_fault_tolerant_sweep(
+                    wl, plc, "batched", plan=None)
+                assert base_stats.n_kills == 0
+                wl.check_oracle(baseline)
+                for mode in modes:
+                    n_rounds = len(sweep_rounds(plc.schedule(), mode))
+                    fplan = FaultPlan.random_kills(
+                        P, n_rounds, every=kill_every,
+                        seed=seed + 7 * P + len(mode))
+                    with tempfile.TemporaryDirectory() as d:
+                        out, stats = run_fault_tolerant_sweep(
+                            wl, plc, mode, fplan,
+                            ckpt_dir=str(Path(d) / "ckpt"))
+                    assert stats.n_kills == fplan.n_kills, (
+                        plc.name, P, mode, wl.name)
+                    assert wl.equal(out, baseline), (
+                        plc.name, P, mode, wl.name)
+                    n_cases += 1
+                    if verbose:
+                        print(f"  chaos {wl.name:6s} {plc.name:10s} "
+                              f"P={P:<3d} {mode:7s}: kills="
+                              f"{stats.n_kills} reassigned="
+                              f"{stats.n_reassigned} rerepl="
+                              f"{stats.n_rereplicated} restores="
+                              f"{stats.n_restores} bit-exact OK")
+    if verbose:
+        print(f"chaos selfcheck OK ({n_cases} faulted cases, "
+              f"P in {tuple(Ps)})")
+    return n_cases
+
+
+def _main(argv: Optional[Sequence[str]] = None) -> int:
+    """CLI: ``python -m repro.core.faults [--P 5 8] [--modes scan]
+    [--placements cyclic] [--kill-every 2] [--seed 0] [--quiet]``
+    (DESIGN.md section 13)."""
+    import argparse
+    ap = argparse.ArgumentParser(
+        description="chaos selfcheck: fault-injected sweeps must be "
+                    "bit-exact vs fault-free runs")
+    ap.add_argument("--P", type=int, nargs="*", default=list(CHAOS_P))
+    ap.add_argument("--modes", nargs="*", default=list(ENGINE_MODES),
+                    choices=list(ENGINE_MODES))
+    ap.add_argument("--placements", nargs="*", default=None)
+    ap.add_argument("--kill-every", type=int, default=None)
+    ap.add_argument("--seed", type=int, default=None)
+    ap.add_argument("--quiet", action="store_true")
+    args = ap.parse_args(argv)
+    chaos_selfcheck(Ps=args.P, modes=args.modes,
+                    placements=args.placements,
+                    kill_every=args.kill_every, seed=args.seed,
+                    verbose=not args.quiet)
+    return 0
+
+
+if __name__ == "__main__":  # pragma: no cover
+    raise SystemExit(_main())

@@ -69,7 +69,9 @@ from __future__ import annotations
 import abc
 import functools
 import math
-from typing import Dict, List, Optional, Tuple, Type
+from typing import Dict, List, Optional, Sequence, Tuple, Type
+
+import numpy as np
 
 from .quorum import (_prime_power_base, difference_set, is_difference_cover,
                      singer_difference_set)
@@ -85,6 +87,7 @@ __all__ = [
     "FullReplicationPlacement",
     "register_placement",
     "registered_placements",
+    "weighted_owner_table",
     "get_placement",
     "supported_placements",
     "auto_placement",
@@ -208,12 +211,21 @@ class Placement(abc.ABC):
     # -- ownership --------------------------------------------------------
 
     @abc.abstractmethod
-    def owner_of(self, x: int, y: int) -> int:
+    def owner_of(self, x: int, y: int, *,
+                 weights: Optional[Sequence[float]] = None) -> int:
         """Canonical owner device of unordered block pair {x, y}.
 
         Must be symmetric (``owner_of(x, y) == owner_of(y, x)``), the
         owner must hold both blocks, and per-device owned-pair counts
         must balance to within one pair (the conformance contract).
+
+        ``weights`` is an optional length-P capacity-weight vector
+        (measured device throughput, Rocket's heterogeneity model —
+        DESIGN.md section 13): ownership then partitions the pairs
+        *proportionally to capacity* via :func:`weighted_owner_table`,
+        still assigning every pair to a device holding both blocks.
+        None or a uniform vector is bit-identical to the unweighted
+        partition.
         """
 
     # -- identity ---------------------------------------------------------
@@ -263,7 +275,8 @@ class ShiftPlacement(Placement):
     def _canonical(self) -> Dict[int, Tuple[int, int]]:
         return _canonical_pairs(self.P, list(self.shifts))
 
-    def owner_of(self, x: int, y: int) -> int:
+    def owner_of(self, x: int, y: int, *,
+                 weights: Optional[Sequence[float]] = None) -> int:
         """The engine-consistent canonical owner: the device whose quorum
         places the pair's canonical lower endpoint at slot ``a_lo`` of
         the per-difference rule (scheduler docstring), with the even-P
@@ -271,9 +284,18 @@ class ShiftPlacement(Placement):
         ``core.allpairs.pair_mask_table`` (the generating device whose
         lower endpoint is the smaller block id keeps it) — so ownership
         here is exactly the pair the engine actually computes post-mask.
+
+        With a non-uniform ``weights`` capacity vector the partition is
+        :func:`weighted_owner_table`'s proportional assignment instead
+        (DESIGN.md section 13); uniform weights (or None) keep the
+        bit-exact historical partition.
         """
         P = self.P
         x, y = x % P, y % P
+        if weights is not None:
+            w = _validate_weights(weights, P)
+            if len(set(w)) > 1:
+                return int(weighted_owner_table(self, w)[x, y])
         d = (y - x) % P
         dd = min(d, (P - d) % P)
         a_lo, _ = self._canonical[dd]
@@ -284,6 +306,111 @@ class ShiftPlacement(Placement):
         else:
             j = x if d == dd else y       # lower endpoint, canonical direction
         return (j - a_lo) % P
+
+
+# ---------------------------------------------------------------------------
+# Weighted ownership (DESIGN.md section 13)
+# ---------------------------------------------------------------------------
+
+def _validate_weights(weights: Sequence[float], P: int) -> Tuple[float, ...]:
+    """Validated capacity-weight tuple: length P, all positive."""
+    w = tuple(float(v) for v in weights)
+    if len(w) != P:
+        raise ValueError(f"weights must have length P={P}, got {len(w)}")
+    if any(v <= 0 for v in w):
+        raise ValueError(f"weights must be positive, got {w}")
+    return w
+
+
+@functools.lru_cache(maxsize=128)
+def _weighted_owner_table(plc: "Placement",
+                          weights: Tuple[float, ...]) -> np.ndarray:
+    """The memoized table behind :func:`weighted_owner_table` (placements
+    are hashable value objects, so (placement, weights) is a cache key)."""
+    P = plc.P
+    sets = plc.residency_sets
+    total = P * (P + 1) // 2
+    wsum = sum(weights)
+    target = [total * v / wsum for v in weights]
+    ceil_t = [math.ceil(t) for t in target]
+    load = [0.0] * P
+    table = np.full((P, P), -1, dtype=np.int32)
+    cand_of: Dict[Tuple[int, int], List[int]] = {}
+    for x in range(P):
+        for y in range(x, P):
+            # a weighted owner must hold >= 1 of the two blocks (the other
+            # is a tier-2 fetch, DESIGN.md section 13); co-resident holders
+            # win deficit ties so fetches only happen when capacity demands
+            cands = sorted(i for i in range(P)
+                           if x in sets[i] or y in sets[i])
+            cand_of[(x, y)] = cands
+            owner = max(cands, key=lambda c: (
+                target[c] - load[c],
+                1 if (x in sets[c] and y in sets[c]) else 0,
+                -c))
+            load[owner] += 1.0
+            table[x, y] = table[y, x] = owner
+    # repair pass: the greedy can overshoot a ceil target by one pair near
+    # the end of the visit order; move pairs from over-ceil devices onto
+    # under-ceil candidates until every load fits its ceil target
+    for _ in range(2 * P):
+        over = [c for c in range(P) if load[c] > ceil_t[c]]
+        if not over:
+            break
+        moved = False
+        for c in over:
+            for (x, y), cands in sorted(cand_of.items()):
+                if table[x, y] != c:
+                    continue
+                under = [d for d in cands if load[d] + 1 <= ceil_t[d]]
+                if under:
+                    d = max(under, key=lambda u: (target[u] - load[u], -u))
+                    table[x, y] = table[y, x] = d
+                    load[c] -= 1.0
+                    load[d] += 1.0
+                    moved = True
+                    if load[c] <= ceil_t[c]:
+                        break
+        if not moved:  # pragma: no cover - no feasible move left
+            break
+    return table
+
+
+def weighted_owner_table(placement: "Placement",
+                         weights: Sequence[float]) -> np.ndarray:
+    """[P, P] owner table partitioning all unordered block pairs
+    proportionally to per-device capacity weights (DESIGN.md section 13
+    — Rocket's heterogeneous-throughput direction).
+
+    Deterministic deficit-greedy with a repair pass: pairs are visited
+    in canonical ``(x, y)``, ``x <= y`` order and each is assigned to
+    the candidate with the largest remaining capacity deficit
+    ``target_c - load_c`` (``target_c = total * w_c / sum(w)``); ties
+    prefer a co-resident holder, then the smallest device id.  A
+    *candidate* is any device holding at least one of the two blocks:
+    most pairs are co-resident on exactly one device (λ = 1 on the
+    planes), so proportionality is unreachable over both-block holders
+    alone — the missing block of a single-block owner rides the same
+    tier-2 fetch path the failure recovery uses, which is exactly
+    Rocket's "fast devices pull extra data" trade.  A final repair pass
+    moves boundary pairs off over-target devices, so per-device loads
+    satisfy ``load_c <= ceil(target_c)`` for every registered placement
+    (the weighted conformance suite pins it at every P <= 64).  Uniform
+    weights reproduce the unweighted ``owner_of`` partition
+    bit-identically (the callers short-circuit before reaching here).
+    The table is memoized on (placement, weights) — placements are
+    hashable value objects.
+    """
+    w = _validate_weights(weights, placement.P)
+    if len(set(w)) <= 1:
+        # uniform: the historical partition, bit-exact by construction
+        P = placement.P
+        table = np.full((P, P), -1, dtype=np.int32)
+        for x in range(P):
+            for y in range(x, P):
+                table[x, y] = table[y, x] = placement.owner_of(x, y)
+        return table
+    return _weighted_owner_table(placement, w)
 
 
 # ---------------------------------------------------------------------------

@@ -22,7 +22,7 @@ Consequences (all verified in tests):
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -33,7 +33,14 @@ __all__ = [
     "build_schedule",
     "build_causal_schedule",
     "reassign",
+    "ReassignPlan",
+    "FETCH_LOAD_WEIGHT",
 ]
+
+# load-model weight of a tier-2 recovery pair: the reassigned compute plus
+# the one extra block transfer it costs (DESIGN.md section 13) — exposed so
+# ReassignPlan.weighted_load and the greedy assignment agree by construction
+FETCH_LOAD_WEIGHT = 1.5
 
 
 @dataclasses.dataclass(frozen=True)
@@ -249,6 +256,13 @@ class ReassignPlan:
     fetch_pairs[i]   — (pair, missing_block, source_device) entries where
                        device i holds one block and pulls the other from a
                        live holder (one extra block transfer each).
+
+    Two cost views (DESIGN.md section 13): :attr:`n_recovered` counts
+    *pairs* (every tier-1 and tier-2 entry is one recovered pair —
+    coverage accounting), :attr:`weighted_load` totals the greedy *load
+    model* (tier-2 entries cost ``FETCH_LOAD_WEIGHT`` because they also
+    move a block).  The two used to be conflated; they answer different
+    questions and are both exposed.
     """
 
     extra_pairs: Dict[int, List[Tuple[int, int]]]
@@ -256,16 +270,48 @@ class ReassignPlan:
 
     @property
     def n_recovered(self) -> int:
-        """Pairs this plan reassigns across both tiers."""
+        """Pairs this plan reassigns across both tiers (each counted
+        once — the coverage view)."""
         return (sum(len(v) for v in self.extra_pairs.values())
                 + sum(len(v) for v in self.fetch_pairs.values()))
 
+    @property
+    def weighted_load(self) -> float:
+        """Total extra load under the greedy cost model: 1.0 per tier-1
+        pair, ``FETCH_LOAD_WEIGHT`` per tier-2 pair (compute + one block
+        transfer) — the quantity the min-load assignment balances."""
+        return (sum(len(v) for v in self.extra_pairs.values())
+                + FETCH_LOAD_WEIGHT
+                * sum(len(v) for v in self.fetch_pairs.values()))
+
+    @property
+    def fetched_blocks(self) -> List[Tuple[int, int, int]]:
+        """The (block, source, target) transfers tier 2 executes, in
+        deterministic plan order."""
+        return [(missing, src, tgt)
+                for tgt in sorted(self.fetch_pairs)
+                for (_pair, missing, src) in self.fetch_pairs[tgt]]
+
+
+def _capacity(weights: Optional[Sequence[float]], P: int) -> List[float]:
+    """Validated per-device capacity weights (default: uniform 1.0)."""
+    if weights is None:
+        return [1.0] * P
+    w = [float(v) for v in weights]
+    if len(w) != P:
+        raise ValueError(f"weights must have length P={P}, got {len(w)}")
+    if any(v <= 0 for v in w):
+        raise ValueError(f"weights must be positive, got {w}")
+    return w
+
 
 def reassign(schedule: PairSchedule, failed: Sequence[int],
-             placement=None) -> ReassignPlan:
+             placement=None, *, weights: Optional[Sequence[float]] = None,
+             pairs: Optional[Dict[int, List[Tuple[int, int]]]] = None
+             ) -> ReassignPlan:
     """Reassign failed devices' pair lists to quorum peers.
 
-    Two tiers (DESIGN.md section 8):
+    Two tiers (DESIGN.md sections 8 and 13):
       1. the pair is co-resident in a live quorum -> free reassignment.  The
          all-pairs property guarantees >= 1 co-resident quorum; it may be
          exactly the failed one, hence tier 2.
@@ -273,11 +319,23 @@ def reassign(schedule: PairSchedule, failed: Sequence[int],
          live holder (each block lives in exactly k quorums, paper Eq. 13, so
          a block is lost only if all k of its holders fail simultaneously —
          then restart-from-checkpoint is the only correct response).
-    Greedy min-load assignment in both tiers.
+
+    Greedy min-load assignment in both tiers, fully deterministic: ties
+    on load break by smallest device id (candidate lists are sorted), so
+    a given (schedule, failed, placement, weights) always produces the
+    same plan — the mid-sweep recovery of core/faults.py depends on plan
+    stability.  ``weights`` are per-device capacity weights (Rocket's
+    heterogeneity model): the greedy minimizes load *normalized by
+    capacity*, so a 2x-capacity device absorbs ~2x the recovered pairs;
+    None means uniform.
 
     ``placement`` supplies the residency sets (any core.placement.Placement,
     not just cyclic — reassignment itself only needs *sets*); the schedule
     must derive from the same placement or coverage claims break.
+    ``pairs`` optionally overrides the per-failed-device pair lists
+    (default: ``schedule.global_pairs_of``) — the fault-tolerant driver
+    passes the *remaining* mid-sweep tiles, and a weighted-ownership
+    assignment passes its own partition.
     """
     failed_set = set(failed)
     P = schedule.P
@@ -287,6 +345,7 @@ def reassign(schedule: PairSchedule, failed: Sequence[int],
         if getattr(placement, "P", P) != P:
             raise ValueError(f"placement {placement!r} does not match P={P}")
         quorums = [sorted(S) for S in placement.residency_sets]
+    cap = _capacity(weights, P)
     pair_holders: Dict[Tuple[int, int], List[int]] = {}
     block_holders: Dict[int, List[int]] = {}
     for i, S in enumerate(quorums):
@@ -300,14 +359,20 @@ def reassign(schedule: PairSchedule, failed: Sequence[int],
                     pair_holders.setdefault((x, y), []).append(i)
 
     load = {i: float(schedule.n_pairs) for i in range(P) if i not in failed_set}
+
+    def eff(c: int) -> float:
+        return load[c] / cap[c]
+
     extra: Dict[int, List[Tuple[int, int]]] = {i: [] for i in load}
     fetch: Dict[int, List[Tuple[Tuple[int, int], int, int]]] = {i: [] for i in load}
     for f in sorted(failed_set):
-        for (x, y) in schedule.global_pairs_of(f):
+        todo = (pairs.get(f, []) if pairs is not None
+                else schedule.global_pairs_of(f))
+        for (x, y) in todo:
             key = (min(x, y), max(x, y))
             cands = pair_holders.get(key, [])
             if cands:
-                tgt = min(cands, key=lambda c: load[c])
+                tgt = min(sorted(cands), key=lambda c: (eff(c), c))
                 load[tgt] += 1.0
                 extra[tgt].append(key)
                 continue
@@ -318,12 +383,16 @@ def reassign(schedule: PairSchedule, failed: Sequence[int],
                 raise RuntimeError(
                     f"block {lost} lost: all {schedule.k} holding quorums "
                     "failed; restore from checkpoint")
-            # device holding one block pulls the other (count fetch as extra load)
-            best = min(((c, key[1], key[0]) for c in hx), key=lambda t: load[t[0]])
-            alt = min(((c, key[0], key[1]) for c in hy), key=lambda t: load[t[0]])
-            tgt, missing, _have = best if load[best[0]] <= load[alt[0]] else alt
-            src = min(block_holders[missing], key=lambda c: load[c])
-            load[tgt] += 1.5
+            # device holding one block pulls the other; a tier-2 pair costs
+            # FETCH_LOAD_WEIGHT in the load model (compute + one transfer).
+            # hx and hy are disjoint (a holder of both would be tier 1), so
+            # the (eff, c) key is a strict total order over the candidates.
+            cands2 = sorted([(c, key[1]) for c in hx]
+                            + [(c, key[0]) for c in hy])
+            tgt, missing = min(cands2, key=lambda t: (eff(t[0]), t[0]))
+            src = min(sorted(block_holders[missing]),
+                      key=lambda c: (eff(c), c))
+            load[tgt] += FETCH_LOAD_WEIGHT
             fetch[tgt].append((key, missing, src))
     return ReassignPlan(
         extra_pairs={i: v for i, v in extra.items() if v},

@@ -59,6 +59,7 @@ __all__ = [
     "slot_items",
     "ready_order",
     "pair_ready_order",
+    "sweep_rounds",
     "quorum_gather",
     "quorum_scatter",
     "pair_mask_table",
@@ -308,6 +309,30 @@ def pair_ready_order(schedule: PairSchedule) -> list[list[int]]:
     section 4)."""
     return ready_order(schedule.pair_slots[:, 0], schedule.pair_slots[:, 1],
                        schedule.k)
+
+
+def sweep_rounds(schedule: PairSchedule, mode: str) -> List[List[int]]:
+    """Pair indices grouped into the mode's synchronization rounds — the
+    boundaries where a fault-tolerant driver may observe failures and
+    checkpoint partials (DESIGN.md section 13).
+
+    Mirrors each engine mode's real synchronization structure: ``batched``
+    materializes every pair in one fused step (a single round), ``overlap``
+    synchronizes once per gather shift as blocks land (the non-empty
+    :func:`pair_ready_order` groups), and ``scan`` carries state through
+    one pair per step (one round per pair).  Round lists concatenate to
+    ``range(schedule.n_pairs)`` reordered — every pair appears exactly
+    once, so replaying rounds in order folds partials in a
+    mode-independent canonical pair order.
+    """
+    if mode not in ENGINE_MODES:
+        raise ValueError(f"mode must be one of {ENGINE_MODES}, got {mode!r}")
+    n = schedule.n_pairs
+    if mode == "batched":
+        return [list(range(n))] if n else []
+    if mode == "scan":
+        return [[i] for i in range(n)]
+    return [grp for grp in pair_ready_order(schedule) if grp]
 
 
 def slot_items(k: int) -> Tuple[np.ndarray, np.ndarray]:

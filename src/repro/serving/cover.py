@@ -52,6 +52,7 @@ from ..core.placement import get_placement, resolve_placement
 __all__ = [
     "CoverPlan",
     "build_cover",
+    "build_degraded_cover",
     "closed_form_cover",
     "step_cover",
     "greedy_cover",
@@ -291,6 +292,82 @@ def build_cover(P: int, placement=None) -> CoverPlan:
             if block_owner[(a + i) % P] == i:
                 slot_mask[i, s] = 1.0
 
+    plan = CoverPlan(P=P, A=tuple(shifts), devices=devices,
+                     block_owner=block_owner, slot_mask=slot_mask,
+                     placement=plc.name)
+    _COVER_CACHE[key] = plan
+    return plan
+
+
+def build_degraded_cover(P: int, placement=None,
+                         dead: Sequence[int] = ()) -> CoverPlan:
+    """A cover plan that visits no dead device (DESIGN.md section 13) —
+    serving's half of failure handling: queries keep full-corpus answers
+    while recovery runs, as long as every block still has a live holder.
+
+    Same plan shape as :func:`build_cover` (and bit-identical to it when
+    ``dead`` is empty): greedy set-cover restricted to live translates,
+    improved by the exact search when P is small, then the same
+    first-holder dedup rule over live cover devices.  Raises
+    ``RuntimeError`` when some block's holders all died (the corpus is
+    no longer coverable — restore from checkpoint / re-replicate first).
+    Memoized on (P, placement, dead).
+    """
+    if P < 1:
+        raise ValueError(f"P must be >= 1, got {P}")
+    plc = (get_placement("cyclic", P) if placement is None
+           else resolve_placement(placement, P))
+    dead_set = frozenset(int(d) for d in dead)
+    if not dead_set:
+        return build_cover(P, plc)
+    key = (P, plc.name, tuple(sorted(dead_set)))
+    if key in _COVER_CACHE:
+        return _COVER_CACHE[key]
+    if plc.shifts is None:
+        raise NotImplementedError(
+            f"placement {plc.name!r} has no shift structure; CoverPlan's "
+            "slot mask is defined over shift slots")
+    A = list(plc.shifts)
+    k = len(A)
+    live = [i for i in range(P) if i not in dead_set]
+    quorums = {i: _quorum(P, A, i) for i in live}
+    reachable: set = set()
+    for q in quorums.values():
+        reachable |= q
+    if reachable != set(range(P)):
+        b = min(set(range(P)) - reachable)
+        raise RuntimeError(
+            f"block {b} lost: all holders are dead; no degraded cover "
+            f"exists — restore from checkpoint / re-replicate first")
+    # greedy over live translates only, then exact search when feasible
+    uncovered = set(range(P))
+    cover: List[int] = []
+    while uncovered:
+        best = max(live, key=lambda i: (len(uncovered & quorums[i]), -i))
+        cover.append(best)
+        uncovered -= quorums[best]
+    best_cover = sorted(cover)
+    if P <= _EXACT_COVER_MAX_P:
+        residency = [quorums[i] if i in quorums else frozenset()
+                     for i in range(P)]
+        exact = exact_cover_sets(residency, ub=len(best_cover))
+        if exact is not None:
+            best_cover = exact
+    assert is_cover(P, A, best_cover) and not (set(best_cover) & dead_set)
+
+    devices = tuple(sorted(best_cover))
+    shifts = sorted(A)
+    block_owner = np.full((P,), -1, np.int32)
+    for i in devices:
+        for a in shifts:
+            b = (a + i) % P
+            if block_owner[b] < 0:
+                block_owner[b] = i
+    slot_mask = np.zeros((P, k), np.float32)
+    for i in devices:
+        for s, a in enumerate(shifts):
+            if block_owner[(a + i) % P] == i:
+                slot_mask[i, s] = 1.0
     plan = CoverPlan(P=P, A=tuple(shifts), devices=devices,
                      block_owner=block_owner, slot_mask=slot_mask,
                      placement=plc.name)

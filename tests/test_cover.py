@@ -182,3 +182,41 @@ def test_exact_cover_cyclic_results_unchanged():
     serving fan-out)."""
     for P, n in [(5, 2), (12, 4), (13, 4), (22, 6), (31, 6)]:
         assert build_cover(P).n_cover == n, P
+
+
+# ---------------------------------------------------------------------------
+# degraded covers: serving's half of failure handling (DESIGN.md section 13)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("P", [5, 8, 13, 22, 31])
+def test_degraded_cover_avoids_dead_and_still_covers(P):
+    from repro.serving.cover import build_degraded_cover
+
+    base = build_cover(P)
+    dead = [base.devices[0]]  # kill a device the healthy plan relies on
+    plan = build_degraded_cover(P, dead=dead)
+    assert not (set(plan.devices) & set(dead))
+    assert is_cover(P, sorted(plan.A), list(plan.devices))
+    # dedup invariant: every block scored exactly once by a live device
+    assert sorted(int(b) for b in range(P)) == sorted(
+        b for b in range(P) if plan.block_owner[b] >= 0)
+    assert all(int(plan.block_owner[b]) in plan.devices for b in range(P))
+    np.testing.assert_allclose(
+        plan.slot_mask.sum(), P)  # one mask hit per block
+
+
+@pytest.mark.parametrize("P", [5, 13])
+def test_degraded_cover_empty_dead_is_build_cover(P):
+    from repro.serving.cover import build_degraded_cover
+
+    assert build_degraded_cover(P, dead=()) is build_cover(P)
+
+
+def test_degraded_cover_raises_on_lost_block():
+    from repro.serving.cover import build_degraded_cover
+
+    P = 8
+    plc = get_placement("cyclic", P)
+    holders = [i for i in range(P) if 0 in plc.residency_sets[i]]
+    with pytest.raises(RuntimeError, match="lost"):
+        build_degraded_cover(P, dead=holders)

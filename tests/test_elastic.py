@@ -1,11 +1,13 @@
-"""Elastic rescale plans (launch/elastic.py): identity, grow, shrink,
-and same-P placement migration (cyclic -> plane / full)."""
+"""Elastic rescale plans (launch/elastic.py): identity, grow, shrink
+(divisible resizes reuse re-chunkable local shards), same-P placement
+migration (cyclic -> plane / full), failover, and replication repair."""
 
 import pytest
 
 from repro.core.placement import get_placement
 from repro.core.quorum import cyclic_quorums
-from repro.launch.elastic import rescale
+from repro.launch.elastic import (failover, plan_replication_repair,
+                                  rescale)
 
 
 @pytest.mark.parametrize("P", [1, 4, 8, 13])
@@ -20,10 +22,10 @@ def test_identity_rescale_is_noop(P):
     assert plan.new_quorums == cyclic_quorums(P)
 
 
-@pytest.mark.parametrize("P_old,P_new", [(4, 8), (5, 12), (1, 6)])
-def test_grow_fetches_full_new_quorums(P_old, P_new):
-    """Across a resize block ids are re-chunked, so every device fetches
-    its entire new quorum — no stale-id reuse."""
+@pytest.mark.parametrize("P_old,P_new", [(5, 12), (3, 8), (7, 12)])
+def test_grow_nondivisible_fetches_full_new_quorums(P_old, P_new):
+    """Across a non-divisible resize chunk boundaries don't align, so
+    every device fetches its entire new quorum — no stale-id reuse."""
     plan = rescale(P_old, P_new)
     quorums = cyclic_quorums(P_new)
     assert set(plan.fetches) == set(range(P_new))
@@ -33,13 +35,62 @@ def test_grow_fetches_full_new_quorums(P_old, P_new):
     assert plan.total_fetch_blocks == P_new * k
 
 
-@pytest.mark.parametrize("P_old,P_new", [(8, 4), (12, 5), (6, 1)])
-def test_shrink_fetches_full_new_quorums(P_old, P_new):
+@pytest.mark.parametrize("P_old,P_new", [(12, 5), (8, 3)])
+def test_shrink_nondivisible_fetches_full_new_quorums(P_old, P_new):
     plan = rescale(P_old, P_new)
     quorums = cyclic_quorums(P_new)
     assert set(plan.fetches) == set(range(P_new))
     for i, S in enumerate(quorums):
         assert plan.fetches[i] == list(S)
+
+
+@pytest.mark.parametrize("P_old,P_new", [(4, 8), (1, 6), (2, 6), (4, 12)])
+def test_grow_divisible_reuses_rechunked_shards(P_old, P_new):
+    """When P_new % P_old == 0 old chunk boundaries nest: old block b
+    splits into new blocks b*m .. b*m+m-1, so surviving devices re-chunk
+    locally and fetch only the delta; fresh devices still fetch all."""
+    m = P_new // P_old
+    plan = rescale(P_old, P_new)
+    old = get_placement("cyclic", P_old)
+    full = sum(len(S) for S in cyclic_quorums(P_new))
+    assert plan.total_fetch_blocks < full
+    for i in range(P_new):
+        new_res = set(plan.new_quorums[i])
+        if i < P_old:
+            derivable = {b * m + j for b in old.residency(i)
+                         for j in range(m)}
+        else:
+            derivable = set()
+        fetched = set(plan.fetches.get(i, []))
+        assert fetched == new_res - derivable
+        # old shards + fetches assemble the full new residency
+        assert new_res <= derivable | fetched
+
+
+@pytest.mark.parametrize("P_old,P_new", [(8, 4), (6, 1), (12, 4)])
+def test_shrink_divisible_reuses_rechunked_shards(P_old, P_new):
+    """When P_old % P_new == 0 new block b is derivable locally iff all
+    of its constituent old blocks b*m .. b*m+m-1 were held."""
+    m = P_old // P_new
+    plan = rescale(P_old, P_new)
+    old = get_placement("cyclic", P_old)
+    for i in range(P_new):
+        new_res = set(plan.new_quorums[i])
+        held = old.residency(i)
+        derivable = {b for b in range(P_new)
+                     if all(b * m + j in held for j in range(m))}
+        fetched = set(plan.fetches.get(i, []))
+        assert fetched == new_res - derivable
+        assert new_res <= derivable | fetched
+
+
+def test_grow_from_one_device_reuses_everything_locally():
+    """P=1 -> 6: the lone device held the whole corpus, so it re-chunks
+    with zero fetches; the five new devices fetch their residency."""
+    plan = rescale(1, 6)
+    assert plan.fetches.get(0, []) == []
+    for i in range(1, 6):
+        assert plan.fetches[i] == plan.new_quorums[i]
 
 
 @pytest.mark.parametrize("P,name", [(12, "affine"), (13, "projective"),
@@ -87,6 +138,130 @@ def test_env_placement_steers_rescale(monkeypatch):
     monkeypatch.setenv("REPRO_PLACEMENT", "full")
     plan = rescale(4, 8)
     assert plan.placement_new.name == "full"
-    assert all(plan.fetches[i] == list(range(8)) for i in range(8))
+    # full @ P=4 held everything, so surviving devices re-chunk locally
+    # (4 | 8 is a divisible grow); the four fresh devices fetch all 8
+    for i in range(4):
+        assert plan.fetches.get(i, []) == []
+    for i in range(4, 8):
+        assert plan.fetches[i] == list(range(8))
     monkeypatch.delenv("REPRO_PLACEMENT")
     assert rescale(4, 8).placement_new.name == "cyclic"
+
+
+# ---------------------------------------------------------------------------
+# failover — first direct coverage
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("P,failed", [(8, [2]), (13, [0, 6]), (16, [15])])
+def test_failover_wraps_reassign(P, failed):
+    """failover() must hand back reassign()'s plan verbatim: every lost
+    pair recovered exactly once, onto live devices only."""
+    from repro.core.scheduler import build_schedule, reassign
+
+    s = build_schedule(P)
+    plan = failover(s, failed)
+    want = reassign(s, failed)
+    assert plan == want
+    assert plan.n_recovered == len(failed) * s.n_pairs
+    for i in list(plan.extra_pairs) + list(plan.fetch_pairs):
+        assert i not in failed
+
+
+def test_failover_honors_placement():
+    """A plane placement's residency steers tier-1/tier-2 splitting."""
+    plc = get_placement("projective", 13)
+    s = plc.schedule()
+    plan = failover(s, [3], placement=plc)
+    assert plan.n_recovered == s.n_pairs
+    for i, entries in plan.fetch_pairs.items():
+        for (_pair, missing, src) in entries:
+            assert missing in plc.residency_sets[src]
+
+
+# ---------------------------------------------------------------------------
+# replication repair
+# ---------------------------------------------------------------------------
+
+def _copy_counts(plc, dead, plan):
+    """Per-block live copy count after applying the plan."""
+    P = plc.P
+    dead_set = set(dead)
+    counts = [0] * P
+    for i, S in enumerate(plc.residency_sets):
+        if i in dead_set:
+            continue
+        for b in S:
+            counts[b] += 1
+    for (b, src, tgt) in plan.actions:
+        assert src not in dead_set and tgt not in dead_set
+        counts[b] += 1
+    return counts
+
+
+@pytest.mark.parametrize("name,P,dead", [
+    ("cyclic", 8, [2]), ("cyclic", 13, [0, 6]),
+    ("projective", 13, [1]), ("affine", 12, [3, 7]), ("full", 5, [0, 4])])
+def test_replication_repair_restores_invariant(name, P, dead):
+    plc = get_placement(name, P)
+    plan = plan_replication_repair(plc, dead)
+    orig = [0] * P
+    for S in plc.residency_sets:
+        for b in S:
+            orig[b] += 1
+    n_live = P - len(dead)
+    counts = _copy_counts(plc, dead, plan)
+    for b in range(P):
+        want = min(orig[b], n_live)
+        assert counts[b] == want, (name, P, dead, b)
+    assert tuple(counts) == plan.copies_after
+    # sources actually hold what they ship, and no action targets a holder
+    for (b, src, tgt) in plan.actions:
+        assert b in plc.residency_sets[src]
+        assert b not in plc.residency_sets[tgt]
+
+
+def test_replication_repair_is_deterministic():
+    plc = get_placement("cyclic", 13)
+    a = plan_replication_repair(plc, [2, 9])
+    b = plan_replication_repair(plc, [9, 2])
+    assert a == b
+    assert a.n_copies == len(a.actions)
+    assert a.blocks_repaired == tuple(sorted(set(a.blocks_repaired)))
+
+
+def test_replication_repair_no_failures_is_noop():
+    plc = get_placement("cyclic", 8)
+    plan = plan_replication_repair(plc, [])
+    assert plan.actions == ()
+    assert plan.n_copies == 0
+
+
+def test_replication_repair_block_lost_raises():
+    """All holders of one block dead: repair must refuse (restore from
+    checkpoint is the correct response)."""
+    plc = get_placement("cyclic", 8)
+    holders = [i for i in range(8) if 0 in plc.residency_sets[i]]
+    with pytest.raises(RuntimeError, match="lost"):
+        plan_replication_repair(plc, holders)
+
+
+def test_replication_repair_all_dead_raises():
+    plc = get_placement("cyclic", 4)
+    with pytest.raises(ValueError, match="all devices dead"):
+        plan_replication_repair(plc, [0, 1, 2, 3])
+
+
+def test_replication_repair_uses_current_residency():
+    """The residency override: a block already re-replicated onto a
+    survivor needs fewer (or no) new copies."""
+    plc = get_placement("cyclic", 8)
+    dead = [i for i in range(8) if 0 in plc.residency_sets[i]][:-1]
+    live_holder = [i for i in range(8) if 0 in plc.residency_sets[i]][-1]
+    base = plan_replication_repair(plc, dead)
+    assert any(b == 0 for (b, _s, _t) in base.actions)
+    # hand every live device block 0 already: nothing left to repair for it
+    current = [set(S) | {0} if i not in dead else set(S)
+               for i, S in enumerate(plc.residency_sets)]
+    plan = plan_replication_repair(plc, dead, residency=current)
+    assert not any(b == 0 for (b, _s, _t) in plan.actions)
+    assert live_holder not in dead

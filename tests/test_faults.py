@@ -1,0 +1,277 @@
+"""Fault-tolerant sweep execution (core/faults.py): fault plans, the
+round-based recovery driver, re-replication, checkpoint restore on block
+loss, and the chaos selfcheck contract (DESIGN.md section 13)."""
+
+import numpy as np
+import pytest
+
+from repro.core.faults import (CHAOS_P, DenseReduceWorkload, FaultEvent,
+                               FaultPlan, KnnGraphWorkload,
+                               SparseJoinWorkload, WORKLOADS,
+                               chaos_selfcheck, residency_invariant_ok,
+                               run_fault_tolerant_sweep)
+from repro.core.placement import get_placement
+from repro.core.sweep import ENGINE_MODES, sweep_rounds
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan
+# ---------------------------------------------------------------------------
+
+def test_fault_event_validates_kind():
+    with pytest.raises(ValueError, match="kind"):
+        FaultEvent("explode", 0, 1)
+
+
+def test_fault_plan_is_deterministic():
+    a = FaultPlan.random_kills(8, 6, every=2, seed=3)
+    b = FaultPlan.random_kills(8, 6, every=2, seed=3)
+    assert a == b
+    c = FaultPlan.random_kills(8, 6, every=2, seed=4)
+    assert a != c
+
+
+def test_fault_plan_never_kills_last_survivor():
+    plan = FaultPlan.random_kills(3, 50, every=1, seed=0, chaos=False)
+    assert plan.n_kills == 2  # P - 1 kills max
+
+
+def test_fault_plan_short_sweep_still_kills():
+    """batched mode has one round; the plan must not degenerate to
+    fault-free just because every > n_rounds."""
+    plan = FaultPlan.random_kills(8, 1, every=4, seed=0)
+    assert plan.n_kills == 1
+    assert plan.events_at(0)[0].kind == "kill"
+
+
+def test_events_at_orders_kills_first():
+    plan = FaultPlan(events=(
+        FaultEvent("slow", 1, 2, factor=2.0),
+        FaultEvent("kill", 1, 0), FaultEvent("drop", 1)))
+    kinds = [e.kind for e in plan.events_at(1)]
+    assert kinds == ["kill", "drop", "slow"]
+    assert plan.events_at(0) == []
+
+
+# ---------------------------------------------------------------------------
+# sweep_rounds — the synchronization boundary structure
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("P", [1, 2, 5, 8, 13])
+def test_sweep_rounds_partition_pairs(P):
+    sched = get_placement("cyclic", P).schedule()
+    for mode in ENGINE_MODES:
+        rounds = sweep_rounds(sched, mode)
+        flat = [s for grp in rounds for s in grp]
+        assert sorted(flat) == list(range(sched.n_pairs)), (P, mode)
+        assert all(grp for grp in rounds)
+    assert len(sweep_rounds(sched, "batched")) == 1
+    assert len(sweep_rounds(sched, "scan")) == sched.n_pairs
+
+
+def test_sweep_rounds_rejects_bad_mode():
+    sched = get_placement("cyclic", 4).schedule()
+    with pytest.raises(ValueError, match="mode"):
+        sweep_rounds(sched, "auto")
+
+
+# ---------------------------------------------------------------------------
+# driver: fault-free runs agree across modes and match the oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("wl_cls", WORKLOADS, ids=lambda c: c.name)
+def test_fault_free_modes_bit_identical(wl_cls):
+    P = 8
+    plc = get_placement("cyclic", P)
+    wl = wl_cls(P, seed=1)
+    results = []
+    for mode in ENGINE_MODES:
+        out, stats = run_fault_tolerant_sweep(wl, plc, mode)
+        assert stats.n_kills == stats.n_fetches == 0
+        assert stats.rounds == len(sweep_rounds(plc.schedule(), mode))
+        results.append(out)
+    wl.check_oracle(results[0])
+    for out in results[1:]:
+        assert wl.equal(out, results[0])
+
+
+# ---------------------------------------------------------------------------
+# driver: chaos (kills + drops + slowdowns) stays bit-exact
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("wl_cls", WORKLOADS, ids=lambda c: c.name)
+@pytest.mark.parametrize("mode", ENGINE_MODES)
+def test_chaos_run_bit_exact(wl_cls, mode, tmp_path):
+    P = 8
+    plc = get_placement("cyclic", P)
+    wl = wl_cls(P, seed=2)
+    baseline, _ = run_fault_tolerant_sweep(wl, plc, "batched")
+    n_rounds = len(sweep_rounds(plc.schedule(), mode))
+    plan = FaultPlan.random_kills(P, n_rounds, every=1, seed=5)
+    out, stats = run_fault_tolerant_sweep(
+        wl, plc, mode, plan, ckpt_dir=str(tmp_path / "ckpt"))
+    assert stats.n_kills == plan.n_kills > 0
+    assert stats.n_reassigned > 0
+    assert wl.equal(out, baseline)
+
+
+def test_recovery_restores_residency_invariant():
+    """After each repair the driver asserts the k-residency invariant;
+    drive it through a multi-kill plan and cross-check the predicate
+    directly on a hand-built state."""
+    P = 13
+    plc = get_placement("projective", P)
+    wl = DenseReduceWorkload(P, seed=0)
+    plan = FaultPlan.random_kills(
+        P, len(sweep_rounds(plc.schedule(), "scan")), every=2, seed=1)
+    baseline, _ = run_fault_tolerant_sweep(wl, plc, "batched")
+    out, stats = run_fault_tolerant_sweep(wl, plc, "scan", plan)
+    assert stats.n_rereplicated > 0
+    assert wl.equal(out, baseline)
+    # the predicate itself
+    res = [set(S) for S in plc.residency_sets]
+    alive = [True] * P
+    assert residency_invariant_ok(plc, res, alive)
+    alive[0] = False
+    res[0] = set()
+    assert not residency_invariant_ok(plc, res, alive)
+
+
+# ---------------------------------------------------------------------------
+# block loss end-to-end: reassign refuses, checkpoint restore resumes
+# ---------------------------------------------------------------------------
+
+def _holders_of_block(plc, b):
+    return [i for i in range(plc.P) if b in plc.residency_sets[i]]
+
+
+@pytest.mark.parametrize("wl_cls", WORKLOADS, ids=lambda c: c.name)
+def test_block_loss_restores_from_checkpoint(wl_cls, tmp_path):
+    """All k holders of block 0 die mid-sweep: reassign raises "block
+    lost", the driver restores blocks + durable partials from the
+    ckpt/checkpoint.py store, re-runs the tail, and the final output is
+    still bit-exact — the RuntimeError's promised recovery path,
+    exercised end-to-end."""
+    P = 8
+    plc = get_placement("cyclic", P)
+    holders = _holders_of_block(plc, 0)
+    assert len(holders) < P
+    wl = wl_cls(P, seed=3)
+    baseline, _ = run_fault_tolerant_sweep(wl, plc, "batched")
+    n_rounds = len(sweep_rounds(plc.schedule(), "scan"))
+    assert n_rounds >= 3
+    kill_round = 2  # after two checkpointed rounds
+    plan = FaultPlan(events=tuple(
+        FaultEvent("kill", kill_round, d) for d in holders))
+    out, stats = run_fault_tolerant_sweep(
+        wl, plc, "scan", plan, ckpt_dir=str(tmp_path / "ckpt"),
+        ckpt_every=1)
+    assert stats.n_kills == len(holders)
+    assert stats.n_restores >= 1
+    assert wl.equal(out, baseline)
+
+
+def test_block_loss_without_checkpoint_reseeds_pristine():
+    """No checkpoint directory: the restore path falls back to the
+    pristine input blocks (stable storage) and recomputes everything —
+    still no wrong answer."""
+    P = 8
+    plc = get_placement("cyclic", P)
+    holders = _holders_of_block(plc, 0)
+    wl = DenseReduceWorkload(P, seed=4)
+    baseline, _ = run_fault_tolerant_sweep(wl, plc, "batched")
+    plan = FaultPlan(events=tuple(
+        FaultEvent("kill", 1, d) for d in holders))
+    out, stats = run_fault_tolerant_sweep(wl, plc, "scan", plan)
+    assert stats.n_restores >= 1
+    assert wl.equal(out, baseline)
+
+
+def test_checkpoint_store_roundtrips_partials(tmp_path):
+    """The mid-sweep store really is ckpt/checkpoint.py: manifests
+    appear per round boundary, and the named-tree loader recovers
+    decodable partials."""
+    from repro.ckpt.checkpoint import latest_step, restore_or_none
+
+    P = 5
+    plc = get_placement("cyclic", P)
+    wl = SparseJoinWorkload(P, seed=0)
+    d = str(tmp_path / "ckpt")
+    assert restore_or_none(d) is None
+    out, stats = run_fault_tolerant_sweep(
+        wl, plc, "scan", ckpt_dir=d, ckpt_every=1)
+    n_rounds = len(sweep_rounds(plc.schedule(), "scan"))
+    assert stats.n_checkpoints == n_rounds
+    assert latest_step(d) == n_rounds
+    tree, step = restore_or_none(d)
+    assert step == n_rounds
+    assert int(tree["round"]) == n_rounds
+    assert set(tree["blocks"]) == {str(b) for b in range(P)}
+    partials = {tuple(int(v) for v in k.split("_")): wl.decode_partial(v)
+                for k, v in tree["partials"].items()}
+    assert len(partials) == P * (P + 1) // 2
+    assert wl.equal(wl.fold(partials), out)
+
+
+def test_ckpt_every_knob_controls_cadence(tmp_path, monkeypatch):
+    P = 5
+    plc = get_placement("cyclic", P)
+    wl = DenseReduceWorkload(P, seed=0)
+    monkeypatch.setenv("REPRO_CKPT_EVERY", "2")
+    _out, stats = run_fault_tolerant_sweep(
+        wl, plc, "scan", ckpt_dir=str(tmp_path / "ckpt"))
+    n_rounds = len(sweep_rounds(plc.schedule(), "scan"))
+    assert stats.n_checkpoints == n_rounds // 2
+    monkeypatch.setenv("REPRO_CKPT_EVERY", "zero")
+    with pytest.raises(ValueError, match="REPRO_CKPT_EVERY"):
+        run_fault_tolerant_sweep(wl, plc, "scan",
+                                 ckpt_dir=str(tmp_path / "c2"))
+
+
+# ---------------------------------------------------------------------------
+# weighted ownership rides the same driver
+# ---------------------------------------------------------------------------
+
+def test_weighted_ownership_same_result_more_fetches():
+    """Non-uniform capacity weights change who computes, not what:
+    the result stays bit-identical; single-block owners pull their
+    missing block over the tier-2 fetch path."""
+    P = 8
+    plc = get_placement("cyclic", P)
+    wl = DenseReduceWorkload(P, seed=5)
+    baseline, base_stats = run_fault_tolerant_sweep(wl, plc, "batched")
+    assert base_stats.n_fetches == 0
+    weights = [4.0 if i == 0 else 1.0 for i in range(P)]
+    out, stats = run_fault_tolerant_sweep(
+        wl, plc, "batched", weights=weights)
+    assert wl.equal(out, baseline)
+    assert stats.n_fetches > 0  # weighted owners hold >= 1 block, not 2
+
+
+def test_weighted_ownership_survives_faults(tmp_path):
+    P = 12
+    plc = get_placement("affine", P)
+    wl = KnnGraphWorkload(P, seed=6)
+    weights = [1.0 + (i % 3) for i in range(P)]
+    baseline, _ = run_fault_tolerant_sweep(wl, plc, "batched")
+    plan = FaultPlan.random_kills(
+        P, len(sweep_rounds(plc.schedule(), "overlap")), every=2, seed=2)
+    out, stats = run_fault_tolerant_sweep(
+        wl, plc, "overlap", plan, ckpt_dir=str(tmp_path / "ckpt"),
+        weights=weights)
+    assert stats.n_kills > 0
+    assert wl.equal(out, baseline)
+
+
+# ---------------------------------------------------------------------------
+# the chaos selfcheck entry point (a small slice; CI runs the matrix)
+# ---------------------------------------------------------------------------
+
+def test_chaos_selfcheck_small_slice():
+    n = chaos_selfcheck(Ps=(5,), modes=("scan",),
+                        placements=("cyclic",), verbose=False)
+    assert n == 3  # three workloads x one placement x one mode
+
+
+def test_chaos_constants_match_issue_acceptance():
+    assert CHAOS_P == (5, 7, 8, 12, 13)

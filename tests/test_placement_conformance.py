@@ -36,7 +36,7 @@ from repro.core.placement import (AffinePlanePlacement,
                                   ProjectivePlanePlacement, auto_placement,
                                   get_placement, plane_placement,
                                   registered_placements, resolve_placement,
-                                  supported_placements)
+                                  supported_placements, weighted_owner_table)
 from repro.core.quorum import quorum_size_lower_bound
 from repro.core.scheduler import reassign
 from repro.launch.elastic import rescale
@@ -176,6 +176,84 @@ def test_rescale_closure(name, P):
         assert new_res <= cyc.residency(i) | fetched
     if name == "cyclic":
         assert plan.total_fetch_blocks == 0 and not plan.is_migration
+
+
+# ---------------------------------------------------------------------------
+# Weighted ownership (DESIGN.md section 13): loads proportional to
+# capacity weights within ceil rounding; uniform == unweighted bit-exact
+# ---------------------------------------------------------------------------
+
+_WEIGHT_PATTERNS = {
+    "alt": lambda P: [1.0 if i % 2 == 0 else 2.0 for i in range(P)],
+    "one_big": lambda P: [4.0 if i == 0 else 1.0 for i in range(P)],
+    "ramp": lambda P: [1.0 + i / max(1, P - 1) for i in range(P)],
+}
+
+# the full P <= 64 sweep is the weighted_owner_table development check;
+# a diagonal slice keeps suite time linear while covering every family
+_WEIGHTED_P = (2, 5, 6, 7, 8, 12, 13, 16, 21, 31, 57, 64)
+
+
+@pytest.mark.parametrize(
+    "name,P", [(n, P) for (n, P) in _cases() if P in _WEIGHTED_P],
+    ids=[f"{n}-P{P}" for (n, P) in _cases() if P in _WEIGHTED_P])
+@pytest.mark.parametrize("pattern", sorted(_WEIGHT_PATTERNS))
+def test_weighted_ownership_balance(name, P, pattern):
+    """Weighted conformance: the owner of every pair holds at least one
+    endpoint block (the other rides the tier-2 fetch path), the table is
+    symmetric and total-preserving, and per-device load never exceeds
+    ceil of its proportional target."""
+    plc = get_placement(name, P)
+    w = _WEIGHT_PATTERNS[pattern](P)
+    table = weighted_owner_table(plc, w)
+    sets = plc.residency_sets
+    total = P * (P + 1) // 2
+    loads = np.zeros(P, dtype=int)
+    for x in range(P):
+        for y in range(x, P):
+            o = int(table[x, y])
+            assert table[y, x] == o
+            assert 0 <= o < P
+            assert x in sets[o] or y in sets[o], (name, P, x, y, o)
+            loads[o] += 1
+    assert loads.sum() == total
+    wsum = sum(w)
+    for c in range(P):
+        target = total * w[c] / wsum
+        assert loads[c] <= math.ceil(target), (name, P, pattern, c,
+                                               loads[c], target)
+
+
+@pytest.mark.parametrize("name,P", [("cyclic", 8), ("projective", 13),
+                                    ("affine", 12), ("full", 5)])
+def test_weighted_uniform_bit_identical_to_unweighted(name, P):
+    """Uniform weights must reproduce today's partition exactly — both
+    through the table and through owner_of's weights kwarg."""
+    plc = get_placement(name, P)
+    table = weighted_owner_table(plc, [1.0] * P)
+    for x in range(P):
+        for y in range(P):
+            assert table[x, y] == plc.owner_of(x, y)
+            assert plc.owner_of(x, y, weights=[2.5] * P) \
+                == plc.owner_of(x, y)
+
+
+def test_weighted_owner_of_kwarg_routes_to_table():
+    P = 8
+    plc = get_placement("cyclic", P)
+    w = [4.0 if i == 0 else 1.0 for i in range(P)]
+    table = weighted_owner_table(plc, w)
+    for x in range(P):
+        for y in range(P):
+            assert plc.owner_of(x, y, weights=w) == int(table[x, y])
+
+
+def test_weighted_owner_table_validates_weights():
+    plc = get_placement("cyclic", 8)
+    with pytest.raises(ValueError, match="length"):
+        weighted_owner_table(plc, [1.0] * 7)
+    with pytest.raises(ValueError, match="positive"):
+        weighted_owner_table(plc, [1.0] * 7 + [-1.0])
 
 
 # ---------------------------------------------------------------------------

@@ -7,8 +7,8 @@ Hypothesis property sweeps live in tests/test_scheduler_properties.py
 import numpy as np
 import pytest
 
-from repro.core.scheduler import (build_causal_schedule, build_schedule,
-                                  reassign)
+from repro.core.scheduler import (FETCH_LOAD_WEIGHT, build_causal_schedule,
+                                  build_schedule, reassign)
 
 
 @pytest.mark.parametrize("P", [1, 2, 3, 4, 5, 6, 8, 12, 31, 96])
@@ -101,3 +101,81 @@ def test_reassign_block_loss_detected():
     holders = [i for i, S in enumerate(cyclic_quorums(P)) if 0 in S]
     with pytest.raises(RuntimeError, match="lost"):
         reassign(s, holders)
+
+
+@pytest.mark.parametrize("P,failed", [(8, [2]), (16, [3, 7]), (13, [0])])
+def test_reassign_load_accounting(P, failed):
+    """Regression for the n_recovered / load-model inconsistency: tier-2
+    fetches cost FETCH_LOAD_WEIGHT in the greedy's load model but count
+    1 in n_recovered; the plan must expose both quantities and they must
+    reconcile exactly."""
+    s = build_schedule(P)
+    plan = reassign(s, failed)
+    n_tier1 = sum(len(v) for v in plan.extra_pairs.values())
+    n_tier2 = sum(len(v) for v in plan.fetch_pairs.values())
+    assert plan.n_recovered == n_tier1 + n_tier2
+    assert plan.weighted_load == n_tier1 + FETCH_LOAD_WEIGHT * n_tier2
+    if n_tier2:
+        assert plan.weighted_load > plan.n_recovered
+    # fetched_blocks mirrors fetch_pairs in deterministic order
+    fetched = plan.fetched_blocks
+    assert len(fetched) == n_tier2
+    for (blk, src, tgt) in fetched:
+        assert src not in failed and tgt not in failed
+
+
+@pytest.mark.parametrize("P,failed", [(8, [2]), (16, [3, 7]), (32, [31]),
+                                      (13, [0, 6, 11])])
+def test_reassign_plan_is_stable(P, failed):
+    """The greedy tie-break is deterministic (sorted candidates, ties to
+    the smallest id): the same inputs always produce the identical plan,
+    in any failed-device order — mid-sweep recovery replays depend on
+    this."""
+    s = build_schedule(P)
+    a = reassign(s, failed)
+    b = reassign(s, list(reversed(failed)))
+    assert a == b
+    assert a == reassign(s, failed)
+
+
+def test_reassign_pairs_override_restricts_todo():
+    """The fault-tolerant driver hands reassign only the *remaining*
+    tiles of a dead device; the plan must recover exactly those."""
+    P = 16
+    s = build_schedule(P)
+    remaining = s.global_pairs_of(3)[:2]
+    plan = reassign(s, [3], pairs={3: remaining})
+    assert plan.n_recovered == 2
+    recovered = [p for v in plan.extra_pairs.values() for p in v]
+    recovered += [pair for v in plan.fetch_pairs.values()
+                  for (pair, _m, _s) in v]
+    want = sorted((min(x, y), max(x, y)) for (x, y) in remaining)
+    assert sorted(recovered) == want
+    # empty override: nothing to recover
+    empty = reassign(s, [3], pairs={3: []})
+    assert empty.n_recovered == 0 and empty.weighted_load == 0.0
+
+
+def test_reassign_weights_steer_absorption():
+    """Capacity weights (Rocket heterogeneity): a high-capacity survivor
+    absorbs more of the recovered load than a low-capacity one, and
+    uniform weights reproduce the unweighted plan bit-identically."""
+    P = 16
+    s = build_schedule(P)
+    base = reassign(s, [5])
+    assert reassign(s, [5], weights=[1.0] * P) == base
+    heavy = 0 if 5 != 0 else 1
+    weights = [8.0 if i == heavy else 1.0 for i in range(P)]
+    plan = reassign(s, [5], weights=weights)
+
+    def absorbed(pl, i):
+        return (len(pl.extra_pairs.get(i, []))
+                + len(pl.fetch_pairs.get(i, [])))
+
+    others = [i for i in range(P) if i not in (5, heavy)]
+    assert absorbed(plan, heavy) >= max(absorbed(plan, i) for i in others)
+    assert absorbed(plan, heavy) > absorbed(base, heavy)
+    with pytest.raises(ValueError, match="weights"):
+        reassign(s, [5], weights=[1.0] * (P - 1))
+    with pytest.raises(ValueError, match="positive"):
+        reassign(s, [5], weights=[0.0] + [1.0] * (P - 1))
