@@ -77,6 +77,26 @@ def seed_scan():
     nbody.forces_fn.cache_clear()
     return distributed_forces(xb, mesh, strategy="quorum", mode="scan")
 out["seed_scan"] = bench(seed_scan, reps=3)
+
+# traced comm volume (AFTER the timings, so they stay tracing-free):
+# one fresh traced batched sweep; actuals must equal the analytical
+# predictor exactly (DESIGN.md section 14.3)
+from repro.obs import trace as obs_trace
+from repro.obs.comm import predict_sweep_comm, traced_sweep_comm
+from repro.core.placement import get_placement
+tracer = obs_trace.configure()
+nbody.forces_fn.cache_clear()
+distributed_forces(xb, mesh, strategy="quorum",
+                   mode="batched").block_until_ready()
+got = traced_sweep_comm(tracer)
+rows = N // P
+pred = predict_sweep_comm(get_placement("cyclic", P), rows * 4 * 4,
+                          partial_bytes=rows * 3 * 4)  # forces are [m, 3]
+assert got["gather_bytes"] == pred.gather_bytes, (got, pred.as_dict())
+assert got["scatter_bytes"] == pred.scatter_bytes, (got, pred.as_dict())
+out["comm"] = {"traced": got, "predicted": pred.as_dict()}
+obs_trace.reset()
+nbody.forces_fn.cache_clear()
 print(json.dumps(out))
 """
 
@@ -105,7 +125,7 @@ def placement_stats(N: int, Ps=(4, 8, 13)) -> dict:
 
 def run(csv_rows, N: int = 1024):
     modes = _modes()
-    results: dict[str, dict] = {"N": N, "timings_s": {},
+    results: dict[str, dict] = {"N": N, "timings_s": {}, "comm": {},
                                 "placements": placement_stats(N)}
     for P, stats in results["placements"].items():
         csv_rows.append((
@@ -123,6 +143,7 @@ def run(csv_rows, N: int = 1024):
                            timeout=900)
         assert r.returncode == 0, r.stderr[-2000:]
         res = json.loads(r.stdout.strip().splitlines()[-1])
+        results["comm"][str(P)] = res.pop("comm")
         results["timings_s"][str(P)] = res
         best = min(modes, key=lambda m: res[m])
         csv_rows.append((

@@ -71,6 +71,13 @@ def run(csv_rows, P: int = 13, n_items: int = 192, reps: int = 3,
             "n_rereplicated": stats.n_rereplicated,
             "n_restores": stats.n_restores,
             "n_checkpoints": stats.n_checkpoints,
+            # traced recovery breakdown (DESIGN.md section 14): seconds
+            # per phase and the bytes recovery actually moved
+            "recovery_phase_s": {k: round(v, 6)
+                                 for k, v in sorted(
+                                     stats.recovery_s.items())},
+            "bytes_fetched": stats.bytes_fetched,
+            "bytes_rereplicated": stats.bytes_rereplicated,
             "slowdown": slowdown}
         csv_rows.append((
             f"faults_{wl.name}_P{P}",

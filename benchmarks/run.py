@@ -32,7 +32,11 @@ tolerance — seconds-valued leaves under ``timings_s`` warn when the
 fresh value exceeds ``tolerance x`` the committed one, ``qps`` leaves
 when it drops below ``committed / tolerance``.  Warn-only: noisy CI
 hosts make a hard gate a flake machine, but the diff is always visible
-in the job log.
+in the job log.  Every BENCH_*.json is also stamped with an
+``environment`` section (python/jax versions, device kind/platform/
+count) and ``--compare`` warns on drift in those fields, so a timing
+diff taken on different software or hardware is never silently read as
+a code regression.
 
 Roofline extraction from the dry-run lives in benchmarks/roofline.py (it
 needs the 512-device dry-run JSON, produced by repro.launch.dryrun --all).
@@ -74,17 +78,64 @@ def snapshot_committed():
     return out
 
 
+def environment_stamp() -> dict:
+    """The benchmark host's identity: python/jax versions and device
+    kind/platform/count.  Stamped into every BENCH_*.json so
+    ``--compare`` can tell a code regression from an environment change
+    (different jax, different accelerator — DESIGN.md section 14).
+    Imports are guarded: a jax-free caller still gets the python row."""
+    import platform
+    stamp = {"python": platform.python_version()}
+    try:
+        import jax
+        stamp["jax"] = jax.__version__
+        import jaxlib
+        stamp["jaxlib"] = jaxlib.__version__
+        devs = jax.devices()
+        stamp["device_kind"] = devs[0].device_kind
+        stamp["platform"] = devs[0].platform
+        stamp["device_count"] = len(devs)
+    except Exception:  # pragma: no cover - jax absent or device init fails
+        pass
+    return stamp
+
+
+def stamp_results() -> None:
+    """Write :func:`environment_stamp` into every BENCH_*.json present
+    (after the benches ran, before ``--compare`` reads them back)."""
+    stamp = environment_stamp()
+    for name in BENCH_FILES:
+        p = ROOT / name
+        if not p.exists():
+            continue
+        obj = json.loads(p.read_text())
+        obj["environment"] = stamp
+        p.write_text(json.dumps(obj, indent=2) + "\n")
+
+
 def compare_results(committed, tolerance: float = COMPARE_TOLERANCE) -> int:
     """Diff fresh BENCH_*.json against the committed snapshot; print a
     warning per regressed timing (``timings_s`` leaves: slower than
     tolerance x committed; ``qps`` leaves: below committed / tolerance).
     Returns the number of regressions (informational — warn-only)."""
     regressions = 0
+    drift_seen = set()
     for name, old in committed.items():
         p = ROOT / name
         if not p.exists():
             continue
         new = json.loads(p.read_text())
+        # environment drift: a timing diff against a different
+        # jax/device is not a code regression — flag it loudly
+        old_env = old.get("environment", {})
+        new_env = new.get("environment", {})
+        for key in sorted(set(old_env) | set(new_env)):
+            if old_env.get(key) != new_env.get(key) and key not in drift_seen:
+                drift_seen.add(key)
+                print(f"::warning::bench environment drift: {key} was "
+                      f"{old_env.get(key)!r}, now {new_env.get(key)!r} — "
+                      f"timing diffs below may reflect the environment, "
+                      f"not the code")
         fresh = dict(_numeric_leaves(new))
         for path, old_v in _numeric_leaves(old):
             new_v = fresh.get(path)
@@ -140,6 +191,7 @@ def main() -> None:
         except Exception:
             traceback.print_exc()
             rows.append((mod.__name__, "ERROR", ""))
+    stamp_results()
     for r in rows:
         print(",".join(str(x) for x in r))
     if committed is not None:

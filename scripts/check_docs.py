@@ -44,6 +44,10 @@ MUST_CITE_DESIGN = [
     "launch/elastic.py",
     "serving/cover.py",
     "kernels/ops.py",
+    "obs/trace.py",
+    "obs/comm.py",
+    "obs/report.py",
+    "obs/feedback.py",
 ]
 
 

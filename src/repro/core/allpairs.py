@@ -33,6 +33,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from ..obs import trace as obs_trace
 from . import sweep as sweep_mod
 from .scheduler import PairSchedule
 from .sweep import (ENGINE_MODES, SweepEmitter, _DEFAULT_BATCH_BYTES,
@@ -275,6 +276,10 @@ def allgather_allpairs(
     (the contribution to a block does not depend on which side of the pair it
     was visited from — true for forces, correlations, and similarity sums).
     """
+    tr = obs_trace.get_tracer()
+    if tr:  # (P-1) peer blocks land per device; exact at jit-trace time
+        tr.count("comm.allgather.bytes",
+                 (axis_size - 1) * obs_trace.nbytes_of(x))
     i = lax.axis_index(axis_name)
     allblocks = lax.all_gather(x, axis_name)  # [P, block, ...] — full data
     mine = x

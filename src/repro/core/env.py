@@ -47,12 +47,14 @@ class EnvKnob:
     section 12.4).
 
     ``kind`` is ``"choice"`` (valid values from the ``choices`` thunk,
-    lowercased before matching) or ``"int"`` (integer with an inclusive
-    ``minimum``).  ``description`` is the README-table one-liner.
+    lowercased before matching), ``"int"`` (integer with an inclusive
+    ``minimum``), or ``"str"`` (any non-empty value passes through
+    verbatim — e.g. a trace-file path).  ``description`` is the
+    README-table one-liner.
     """
 
     name: str
-    kind: str                                   # "choice" | "int"
+    kind: str                                   # "choice" | "int" | "str"
     description: str
     choices: Optional[Callable[[], Tuple[str, ...]]] = None
     minimum: Optional[int] = None
@@ -61,6 +63,8 @@ class EnvKnob:
         """Validate and convert ``raw`` (non-empty, stripped); raises
         ``ValueError`` with the knob's canonical message on bad values
         (DESIGN.md section 12.4)."""
+        if self.kind == "str":
+            return raw
         if self.kind == "choice":
             val = raw.lower()
             valid = self.choices()
@@ -120,20 +124,36 @@ ENV_KNOBS = {
         name="REPRO_FAULT_SEED", kind="int", minimum=0,
         description="chaos selfcheck: seed of the deterministic fault "
                     "plan RNG (default 0)"),
+    "REPRO_TRACE": EnvKnob(
+        name="REPRO_TRACE", kind="str",
+        description="structured tracing: 0/unset off, 1 on (Chrome-trace "
+                    "JSON to repro_trace.json at exit), any other value "
+                    "is the output path"),
+    "REPRO_METRICS": EnvKnob(
+        name="REPRO_METRICS", kind="int", minimum=0,
+        description="counters-only tracing (no span events, no trace "
+                    "file): 1 on, 0/unset off"),
 }
 
 _warned_unknown: set = set()
+_seen_env_keys: frozenset = frozenset()
 
 
 def check_unknown_knobs() -> None:
     """Warn (once per variable per process) about ``REPRO_*`` variables
     in the environment that match no registered knob, suggesting the
     closest registered name — the typo detector (DESIGN.md section
-    12.4)."""
-    for key in os.environ:
-        if not key.startswith("REPRO_") or key in ENV_KNOBS:
-            continue
-        if key in _warned_unknown:
+    12.4).  Warn-once is keyed on the variable *name* (not warning
+    machinery state, so it survives ``warnings.simplefilter('always')``),
+    and an unchanged ``REPRO_*`` keyset skips the environment scan
+    entirely — every knob read pays one frozenset compare."""
+    global _seen_env_keys
+    keys = frozenset(k for k in os.environ if k.startswith("REPRO_"))
+    if keys == _seen_env_keys:
+        return
+    _seen_env_keys = keys
+    for key in sorted(keys):
+        if key in ENV_KNOBS or key in _warned_unknown:
             continue
         _warned_unknown.add(key)
         hint = difflib.get_close_matches(key, ENV_KNOBS, n=1)

@@ -24,9 +24,11 @@ seeded :class:`FaultPlan` and reacts to what it injects:
     computed since the last checkpoint are recomputed by the new
     owners; durable partials (saved by the ``REPRO_CKPT_EVERY``
     round-boundary checkpoints through ``ckpt/checkpoint.py``) are not.
-  * **slow d by f** — recorded (the bench's heterogeneity signal); a
-    real deployment feeds such measurements back as the capacity
-    weights of ``core.placement.weighted_owner_table``.
+  * **slow d by f** — device d's virtual per-pair busy time is scaled
+    by f from this round on (the heterogeneity signal, recorded in
+    ``RecoveryStats.busy_by_device``); ``obs.feedback`` turns it into
+    the capacity weights of ``core.placement.weighted_owner_table`` —
+    the Rocket loop, DESIGN.md section 14.5.
   * **drop** — one block-transfer message this round is lost and
     retransmitted (the ppermute-message drop of the fault model).
 
@@ -49,8 +51,10 @@ residency invariant holds after every repair.
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import tempfile
+import time
 from pathlib import Path
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
@@ -58,6 +62,7 @@ import numpy as np
 
 from ..ckpt.checkpoint import restore_or_none, save_checkpoint
 from ..launch.elastic import plan_replication_repair
+from ..obs import trace as obs_trace
 from . import env as env_mod
 from .placement import (Placement, get_placement, registered_placements,
                         weighted_owner_table)
@@ -156,8 +161,8 @@ class FaultPlan:
 @dataclasses.dataclass
 class RecoveryStats:
     """Counters the driver accumulates while recovering (DESIGN.md
-    section 13) — the quantities ``benchmarks/bench_faults.py``
-    reports."""
+    sections 13, 14) — the quantities ``benchmarks/bench_faults.py``
+    reports and ``obs.feedback`` turns into capacity weights."""
     rounds: int = 0
     n_kills: int = 0
     n_slow: int = 0
@@ -169,8 +174,21 @@ class RecoveryStats:
     n_restores: int = 0            # checkpoint restores (block loss)
     n_recomputed: int = 0          # non-durable partials recomputed
     n_checkpoints: int = 0
+    bytes_fetched: int = 0         # tier-2 fetch traffic
+    bytes_rereplicated: int = 0    # repair-copy traffic
+    # per-device work accounting: pairs computed, deterministic virtual
+    # busy time (rows_x * rows_y * slow_factor per pair — the obs.feedback
+    # throughput signal), and measured wall-clock busy time
+    pairs_by_device: Dict[int, int] = dataclasses.field(default_factory=dict)
+    busy_by_device: Dict[int, float] = dataclasses.field(
+        default_factory=dict)
+    busy_s_by_device: Dict[int, float] = dataclasses.field(
+        default_factory=dict)
+    # recovery latency breakdown: seconds per phase
+    # (reassign / rereplicate / restore / checkpoint)
+    recovery_s: Dict[str, float] = dataclasses.field(default_factory=dict)
 
-    def as_dict(self) -> Dict[str, int]:
+    def as_dict(self) -> Dict[str, Any]:
         """The counters as a plain dict (for JSON benchmark output)."""
         return dataclasses.asdict(self)
 
@@ -520,6 +538,21 @@ def run_fault_tolerant_sweep(workload: PairWorkload, placement: Placement,
     if every < 1:
         raise ValueError(f"ckpt_every must be >= 1, got {every}")
     stats = RecoveryStats()
+    tr = obs_trace.get_tracer()
+    slow = [1.0] * P  # current slowdown factor per device (slow events)
+
+    @contextlib.contextmanager
+    def phase(name: str):
+        # time one recovery phase into stats.recovery_s (+ the tracer)
+        t0 = time.perf_counter()
+        try:
+            yield
+        finally:
+            dt = time.perf_counter() - t0
+            stats.recovery_s[name] = stats.recovery_s.get(name, 0.0) + dt
+            if tr:
+                tr.record("faults." + name, dt, placement=plc.name, P=P,
+                          mode=mode)
 
     # canonical pair -> round, via the pair's difference class slot
     sidx_of_diff = {int(d): s for s, d in enumerate(schedule.pair_diff)}
@@ -569,6 +602,7 @@ def run_fault_tolerant_sweep(workload: PairWorkload, placement: Placement,
         src = holders[0]
         transfer(src)
         stats.n_fetches += 1
+        stats.bytes_fetched += int(stores[src][b].nbytes)
         return stores[src][b]
 
     def apply_reassign(rplan) -> None:
@@ -587,6 +621,7 @@ def run_fault_tolerant_sweep(workload: PairWorkload, placement: Placement,
         rplan = plan_replication_repair(plc, dead, residency=res_sets)
         for (b, src, tgt) in rplan.actions:
             transfer(src)
+            stats.bytes_rereplicated += int(stores[src][b].nbytes)
             stores[tgt][b] = stores[src][b]
             res_sets[tgt].add(b)
         stats.n_rereplicated += rplan.n_copies
@@ -597,6 +632,8 @@ def run_fault_tolerant_sweep(workload: PairWorkload, placement: Placement,
         section 13) — the no-full-restart path."""
         nonlocal partials, computed_by, durable
         stats.n_restores += 1
+        if tr:
+            tr.count("ckpt.restores")
         ck = restore_or_none(ckpt_dir) if ckpt_dir is not None else None
         if ck is not None:
             tree, _step = ck
@@ -658,20 +695,25 @@ def run_fault_tolerant_sweep(workload: PairWorkload, placement: Placement,
             stats.n_recomputed += len(lost_done)
             todo[victim] = pending + lost_done
         try:
-            rplan = reassign(schedule, dead, placement=_ResidencyView(
-                P, res_sets), weights=weights, pairs=todo)
-            apply_reassign(rplan)
-            rereplicate(dead)
+            with phase("reassign"):
+                rplan = reassign(schedule, dead, placement=_ResidencyView(
+                    P, res_sets), weights=weights, pairs=todo)
+                apply_reassign(rplan)
+            with phase("rereplicate"):
+                rereplicate(dead)
         except RuntimeError:
-            restore_from_checkpoint(dead)
+            with phase("restore"):
+                restore_from_checkpoint(dead)
 
     for rnd in range(len(rounds)):
+        rnd_t0 = time.perf_counter()
         drops_pending = 0
         victims: List[int] = []
         for ev in (plan.events_at(rnd) if plan is not None else []):
             if ev.kind == "slow":
                 if alive[ev.device]:
                     stats.n_slow += 1
+                    slow[ev.device] *= float(ev.factor)
             elif ev.kind == "drop":
                 drops_pending += 1
                 stats.n_drops += 1
@@ -693,21 +735,39 @@ def run_fault_tolerant_sweep(workload: PairWorkload, placement: Placement,
             assert alive[o], (p, o)
             bx = get_block(o, p[0])
             by = get_block(o, p[1])
+            t0 = time.perf_counter()
             partials[p] = workload.pair_partial(p[0], p[1], bx, by)
+            dt = time.perf_counter() - t0
             computed_by[p] = o
+            stats.pairs_by_device[o] = stats.pairs_by_device.get(o, 0) + 1
+            # virtual cost: work scales with the pair's item count, and a
+            # slowed device takes factor x longer — deterministic, so the
+            # obs.feedback weights it produces are reproducible
+            cost = float(bx.shape[0] * by.shape[0]) * slow[o]
+            stats.busy_by_device[o] = stats.busy_by_device.get(o, 0.0) + cost
+            stats.busy_s_by_device[o] = (
+                stats.busy_s_by_device.get(o, 0.0) + dt * slow[o])
         stats.rounds += 1
         if ckpt_dir is not None and (rnd + 1) % every == 0:
-            tree: Dict[str, Any] = {
-                "round": np.int64(rnd + 1),
-                "blocks": {str(b): workload.blocks[b] for b in range(P)},
-            }
-            if partials:
-                tree["partials"] = {
-                    f"{p[0]}_{p[1]}": workload.encode_partial(v)
-                    for p, v in partials.items()}
-            save_checkpoint(ckpt_dir, rnd + 1, tree)
+            with phase("checkpoint"):
+                tree: Dict[str, Any] = {
+                    "round": np.int64(rnd + 1),
+                    "blocks": {str(b): workload.blocks[b]
+                               for b in range(P)},
+                }
+                if partials:
+                    tree["partials"] = {
+                        f"{p[0]}_{p[1]}": workload.encode_partial(v)
+                        for p, v in partials.items()}
+                save_checkpoint(ckpt_dir, rnd + 1, tree)
             durable = set(partials)
             stats.n_checkpoints += 1
+            if tr:
+                tr.count("ckpt.saves")
+        if tr:
+            tr.record("faults.round", time.perf_counter() - rnd_t0,
+                      round=rnd, mode=mode, placement=plc.name, P=P,
+                      kills=len(victims))
 
     assert len(partials) == len(all_pairs)
     return workload.fold(partials), stats

@@ -57,6 +57,7 @@ import numpy as np
 from jax import lax
 
 from ..kernels.ref import IDX_SENTINEL, NEG_INF
+from ..obs import trace as obs_trace
 from . import env as env_mod
 from . import sweep as sweep_mod
 from .scheduler import PairSchedule
@@ -617,16 +618,30 @@ def similarity_join(corpus, mesh, *, threshold: float, axis_name: str = "q",
     cap = int(capacity) if capacity is not None else default_capacity(n_cand)
 
     escalations = 0
-    while True:
-        run = _join_fn(mesh, axis_name, N, block, float(threshold), metric,
-                       mode, cap, prefilter, use_kernel, plc)
-        vals, gi, gj, counts = (np.asarray(a) for a in run(xs))
-        counts = counts.reshape(-1)
-        overflow = bool((counts > cap).any())
-        if not overflow or not escalate or escalations >= max_doublings:
-            break
-        cap = 2 * cap
-        escalations += 1
+    tr = obs_trace.get_tracer()
+    span = tr.span("sparse.join", N=N, P=P, metric=metric, mode=mode,
+                   threshold=float(threshold), placement=plc.name) if tr \
+        else obs_trace.NOOP.span("")
+    with span:
+        while True:
+            run = _join_fn(mesh, axis_name, N, block, float(threshold),
+                           metric, mode, cap, prefilter, use_kernel, plc)
+            vals, gi, gj, counts = (np.asarray(a) for a in run(xs))
+            counts = counts.reshape(-1)
+            overflow = bool((counts > cap).any())
+            if (not overflow or not escalate
+                    or escalations >= max_doublings):
+                break
+            cap = 2 * cap
+            escalations += 1
+    if tr:
+        tr.count("sparse.tiles_scheduled", P * sched.n_pairs)
+        tr.count("sparse.candidates", P * n_cand)
+        if prefilter:
+            tr.count("sparse.tiles_pruned",
+                     _count_pruned_tiles(x, N, block, sched,
+                                         float(threshold), metric))
+        tr.count("sparse.escalations", escalations)
     if overflow and escalate:
         raise RuntimeError(
             f"similarity join still overflows capacity {cap} after "
@@ -646,9 +661,37 @@ def similarity_join(corpus, mesh, *, threshold: float, axis_name: str = "q",
     aj = np.concatenate(keep_j)
     av = np.concatenate(keep_v)
     order = np.lexsort((aj, ai))
+    if tr:
+        tr.count("sparse.pairs_emitted", int(ai.shape[0]))
     return JoinResult(i=ai[order], j=aj[order], scores=av[order],
                       counts=counts, capacity=cap, escalations=escalations,
                       overflow=overflow)
+
+
+def _count_pruned_tiles(x: np.ndarray, N: int, block: int,
+                        sched: PairSchedule, threshold: float,
+                        metric: str) -> int:
+    # host-side replay of the DESIGN.md 11.1 interval bound over every
+    # device's scheduled tiles — the sparse.tiles_pruned counter
+    P = sched.P
+    xb = x.reshape(P, block, -1)
+    norms = np.sqrt(np.sum(xb * xb, axis=-1))               # [P, block]
+    valid = (np.arange(P * block).reshape(P, block) < N)
+    maxn = np.where(valid, norms, 0.0).max(axis=-1)
+    minn = np.where(valid, norms, np.inf).min(axis=-1)
+    pruned = 0
+    for i in range(P):
+        for s in range(sched.n_pairs):
+            a = (i + int(sched.shifts[sched.pair_slots[s, 0]])) % P
+            b = (i + int(sched.shifts[sched.pair_slots[s, 1]])) % P
+            if metric == "dot":
+                bound = maxn[a] * maxn[b]
+            else:
+                gap = max(minn[a] - maxn[b], minn[b] - maxn[a], 0.0)
+                bound = -np.inf if np.isinf(gap) else -(gap * gap)
+            if bound < threshold:
+                pruned += 1
+    return pruned
 
 
 def _pair_score_matrix(corpus: np.ndarray, metric: str) -> np.ndarray:

@@ -49,6 +49,7 @@ import numpy as np
 from jax import lax
 
 from ..kernels.ref import IDX_SENTINEL, NEG_INF
+from ..obs import trace as obs_trace
 from . import env as env_mod
 from .scheduler import PairSchedule
 
@@ -182,6 +183,12 @@ def _shift_perm(P: int, shift: int) -> list[tuple[int, int]]:
     return [(j, (j - shift) % P) for j in range(P)]
 
 
+def _tree_nbytes(tree) -> int:
+    """Static payload bytes of a pytree (every leaf's size x itemsize —
+    exact during a jit trace, where shapes are static)."""
+    return sum(obs_trace.nbytes_of(leaf) for leaf in jax.tree.leaves(tree))
+
+
 def quorum_gather(x: jax.Array, schedule: PairSchedule, axis_name: str,
                   *, overlap_fn: Callable[[int, jax.Array], Any] | None = None):
     """Gather this device's quorum blocks (DESIGN.md section 2, phase 1).
@@ -202,17 +209,28 @@ def quorum_gather(x: jax.Array, schedule: PairSchedule, axis_name: str,
     """
     P = schedule.P
     shifts = [int(s) for s in schedule.shifts]
-    blocks = []
-    results = []
-    for slot, a in enumerate(shifts):
-        blk = x if a == 0 else lax.ppermute(x, axis_name, _shift_perm(P, a))
+    # comm accounting fires at jit-trace time: shapes are static, so the
+    # counted bytes are exact, once per compiled program (DESIGN.md 14.2)
+    tr = obs_trace.get_tracer()
+    if tr:
+        nz = sum(1 for a in shifts if a % P != 0)
+        tr.count("comm.ppermute.gather_hops", nz)
+        tr.count("comm.ppermute.gather_bytes", nz * obs_trace.nbytes_of(x))
+    span = tr.span("sweep.gather", P=P, k=len(shifts)) if tr \
+        else obs_trace.NOOP.span("")
+    with span:
+        blocks = []
+        results = []
+        for slot, a in enumerate(shifts):
+            blk = x if a == 0 else lax.ppermute(x, axis_name,
+                                                _shift_perm(P, a))
+            if overlap_fn is not None:
+                results.append(overlap_fn(slot, blk))
+            else:
+                blocks.append(blk)
         if overlap_fn is not None:
-            results.append(overlap_fn(slot, blk))
-        else:
-            blocks.append(blk)
-    if overlap_fn is not None:
-        return results
-    return jnp.stack(blocks, axis=0)
+            return results
+        return jnp.stack(blocks, axis=0)
 
 
 def quorum_scatter(partials, schedule: PairSchedule, axis_name: str,
@@ -235,17 +253,26 @@ def quorum_scatter(partials, schedule: PairSchedule, axis_name: str,
     """
     P = schedule.P
     shifts = [int(s) for s in schedule.shifts]
-    acc = None
-    for slot, a in enumerate(shifts):
-        part = partials[slot]
-        if a == 0:
-            arrived = part
-        else:
-            arrived = jax.tree.map(
-                lambda leaf: lax.ppermute(leaf, axis_name,
-                                          _shift_perm(P, -a)), part)
-        acc = arrived if acc is None else reduce_fn(acc, arrived)
-    return acc
+    tr = obs_trace.get_tracer()
+    span = tr.span("sweep.scatter", P=P, k=len(shifts)) if tr \
+        else obs_trace.NOOP.span("")
+    with span:
+        acc = None
+        for slot, a in enumerate(shifts):
+            part = partials[slot]
+            if a == 0:
+                arrived = part
+            else:
+                if tr:  # exact: per-slot pytree leaf bytes, counted at
+                    # jit-trace time (DESIGN.md 14.2)
+                    tr.count("comm.ppermute.scatter_hops")
+                    tr.count("comm.ppermute.scatter_bytes",
+                             _tree_nbytes(part))
+                arrived = jax.tree.map(
+                    lambda leaf: lax.ppermute(leaf, axis_name,
+                                              _shift_perm(P, -a)), part)
+            acc = arrived if acc is None else reduce_fn(acc, arrived)
+        return acc
 
 
 def pair_mask_table(schedule: PairSchedule) -> np.ndarray:
@@ -446,6 +473,24 @@ def pair_sweep(emitter: SweepEmitter, *, schedule: PairSchedule,
     :func:`select_mode` (each adapter supplies its working-set bytes).
     Returns whatever the emitter's finalize step produces.
     """
+    tr = obs_trace.get_tracer()
+    if not tr:
+        return _pair_sweep_impl(emitter, schedule=schedule,
+                                axis_name=axis_name, mode=mode, x=x,
+                                stack=stack)
+    lo, _hi = emitter.items()
+    with tr.span("sweep.pair_compute", mode=mode, P=schedule.P,
+                 k=schedule.k, n_items=int(len(lo))):
+        tr.count("sweep.pair_tiles", int(len(lo)))
+        return _pair_sweep_impl(emitter, schedule=schedule,
+                                axis_name=axis_name, mode=mode, x=x,
+                                stack=stack)
+
+
+def _pair_sweep_impl(emitter: SweepEmitter, *, schedule: PairSchedule,
+                     axis_name: str, mode: str, x: jax.Array | None = None,
+                     stack: jax.Array | None = None):
+    # the un-instrumented driver body (pair_sweep is the traced wrapper)
     assert (x is None) != (stack is None), "need exactly one of x / stack"
     assert mode in ENGINE_MODES, mode
     if mode == "overlap":

@@ -25,11 +25,13 @@ re-sharding with jax.device_put under the new mesh.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Dict, List, Sequence, Tuple
 
 from ..core.placement import (Placement, placement_from_env,
                               resolve_placement)
 from ..core.scheduler import PairSchedule, ReassignPlan, reassign
+from ..obs import trace as obs_trace
 
 
 @dataclasses.dataclass(frozen=True)
@@ -120,9 +122,13 @@ def rescale(P_old: int, P_new: int, placement_old=None,
                 fetches[i] = delta
     else:
         fetches = {i: list(S) for i, S in enumerate(new_res)}
-    return RescalePlan(P_old=P_old, P_new=P_new, schedule=sched,
+    plan = RescalePlan(P_old=P_old, P_new=P_new, schedule=sched,
                        new_quorums=new_res, fetches=fetches,
                        placement_old=plc_old, placement_new=plc_new)
+    tr = obs_trace.get_tracer()
+    if tr:
+        tr.count("elastic.fetch_blocks", plan.total_fetch_blocks)
+    return plan
 
 
 def failover(schedule: PairSchedule, failed: Sequence[int],
@@ -178,6 +184,7 @@ def plan_replication_repair(placement: Placement, dead: Sequence[int],
     ``RuntimeError`` (restore it from a checkpoint first — the path
     ``core.faults`` drives).
     """
+    t0 = time.perf_counter()
     P = placement.P
     dead_set = set(int(d) for d in dead)
     live = [i for i in range(P) if i not in dead_set]
@@ -214,6 +221,12 @@ def plan_replication_repair(placement: Placement, dead: Sequence[int],
     for b in range(P):
         copies_after[b] = len(live_holders[b]) + sum(
             1 for (bb, _s, _t) in actions if bb == b)
-    return ReplicationRepairPlan(
+    plan = ReplicationRepairPlan(
         P=P, dead=tuple(sorted(dead_set)), actions=tuple(actions),
         copies_after=tuple(copies_after))
+    tr = obs_trace.get_tracer()
+    if tr:
+        tr.count("elastic.rereplicated_blocks", plan.n_copies)
+        tr.record("elastic.plan_repair", time.perf_counter() - t0,
+                  P=P, dead=len(dead_set), copies=plan.n_copies)
+    return plan

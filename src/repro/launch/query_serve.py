@@ -20,6 +20,7 @@ import time
 import jax
 import numpy as np
 
+from ..obs import trace as obs_trace
 from ..serving import ServingCorpus
 
 
@@ -34,7 +35,7 @@ def serve_queries(sc: ServingCorpus, queries: np.ndarray, *, microbatch: int,
     vals_out, idx_out = [], []
     n_batches = -(-R // microbatch)
     warmup_batches = min(warmup_batches, n_batches - 1)  # measure >= 1 batch
-    done = served = 0
+    done = served = stream_updates = 0
     t0 = time.perf_counter() if warmup_batches == 0 else None
     for bi in range(n_batches):
         q = queries[done:done + microbatch]
@@ -48,6 +49,7 @@ def serve_queries(sc: ServingCorpus, queries: np.ndarray, *, microbatch: int,
             b = int(rng.integers(sc.P))
             sc.replace_block(b, rng.normal(size=(sc.block, d))
                              .astype(np.float32))
+            stream_updates += 1
         v, i = sc.query(q, topk=topk, mode=mode, metric=metric,
                         use_kernel=use_kernel)
         v, i = np.asarray(v), np.asarray(i)  # block until ready
@@ -61,6 +63,11 @@ def serve_queries(sc: ServingCorpus, queries: np.ndarray, *, microbatch: int,
             served += n
     dt = (time.perf_counter() - t0) if t0 and served else float("nan")
     qps = served / dt if served else float("nan")
+    tr = obs_trace.get_tracer()
+    if tr:
+        tr.count("serve.batches", n_batches)
+        tr.count("serve.queries", R)
+        tr.count("serve.stream_updates", stream_updates)
     return np.concatenate(vals_out), np.concatenate(idx_out), qps
 
 

@@ -1,0 +1,34 @@
+"""Observability for the pair-sweep runtime (DESIGN.md section 14).
+
+Four modules, deliberately thin so instrumented hot paths stay cheap:
+
+  * ``obs.trace``    — the :class:`Tracer`: structured spans + a counter
+    registry, Chrome-trace (Perfetto-loadable) JSON export, and the
+    ``REPRO_TRACE`` / ``REPRO_METRICS`` activation knobs (off = a falsy
+    no-op singleton, so disabled call sites cost one cached lookup).
+  * ``obs.comm``     — the analytical comm-volume predictor over the
+    placement/schedule layer (bytes per device from residency + shifts,
+    the paper's O(N/sqrt(P)) claim) and the predictor-vs-traced
+    cross-check CLI (``python -m repro.obs.comm``).
+  * ``obs.report``   — ``python -m repro.obs.report trace.json``:
+    validate a trace file and render per-phase / per-device tables.
+  * ``obs.feedback`` — per-device throughput estimates from sweep
+    metrics, fed back as the capacity weights of
+    ``core.placement.weighted_owner_table`` (the Rocket loop), with a
+    slowed-device selfcheck (``python -m repro.obs.feedback``).
+
+Only ``obs.trace`` is imported here: ``obs.feedback`` imports
+``core.faults`` (which itself imports ``obs.trace``), so the package
+root must stay cycle-free.
+"""
+
+from .trace import NoopTracer, Tracer, configure, get_tracer, nbytes_of, reset
+
+__all__ = [
+    "Tracer",
+    "NoopTracer",
+    "get_tracer",
+    "configure",
+    "reset",
+    "nbytes_of",
+]

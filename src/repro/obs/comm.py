@@ -1,0 +1,237 @@
+"""Analytical comm-volume predictor for the sweep data plane
+(DESIGN.md section 14.3).
+
+Every collective the runtime issues has a statically-known payload —
+the schedule's shift structure fixes the hop count and block shapes fix
+the bytes — so per-device communication is a pure function of
+(placement, block bytes):
+
+  * quorum gather:  one ppermute hop per **nonzero** shift, each moving
+    one block — ``(k - 1) * block_bytes`` per device for a difference
+    set containing 0.
+  * quorum scatter: the inverse shifts move per-slot partials —
+    ``(k - 1) * partial_bytes`` per device.
+  * full placement: the engine routes through ``lax.all_gather`` —
+    ``(P - 1) * block_bytes`` per device and **zero** ppermute hops.
+  * serving tree merge: ``ceil(log2 P)`` doubling hops; ring gather:
+    ``P - 1`` hops.
+
+Resident bytes per device are ``replication * block_bytes`` — the
+paper's O(N/sqrt(P)) replication claim, versus N for all-gather; the
+cluster-wide ppermute ratio ``(k-1)/(P-1)`` is the same sqrt saving on
+the wire.  The traced actuals (``obs.trace`` counters recorded at jit
+trace time, exact because collective shapes are static) must match
+these predictions bit-for-bit; :func:`verify_dense_comm` asserts it for
+every registered placement and is wired into CI as ``python -m
+repro.obs.comm`` (run under fake devices).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from ..core.placement import (Placement, resolve_placement,
+                              supported_placements)
+from . import trace as trace_mod
+
+__all__ = [
+    "SweepComm",
+    "predict_sweep_comm",
+    "predict_tree_merge_comm",
+    "predict_ring_gather_comm",
+    "traced_sweep_comm",
+    "verify_dense_comm",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepComm:
+    """Predicted per-device communication of one sweep under a placement
+    (DESIGN.md section 14.3).  All byte fields are **per device**; the
+    SPMD programs are symmetric, so the cluster total is ``P x`` each."""
+
+    P: int
+    placement: str
+    block_bytes: int
+    partial_bytes: int
+    gather_hops: int
+    scatter_hops: int
+    gather_bytes: int
+    scatter_bytes: int
+    allgather_bytes: int
+    resident_bytes: int
+
+    @property
+    def ppermute_bytes(self) -> int:
+        """Total per-device ppermute bytes (gather + scatter)."""
+        return self.gather_bytes + self.scatter_bytes
+
+    def as_dict(self) -> Dict[str, int]:
+        """The prediction as a plain dict (benchmark JSON output)."""
+        return dataclasses.asdict(self)
+
+
+def predict_sweep_comm(placement, block_bytes: int, *,
+                       partial_bytes: Optional[int] = None,
+                       P: Optional[int] = None) -> SweepComm:
+    """Predict one sweep's per-device comm volume under ``placement``
+    (a Placement or spec name; ``P`` required for a name) — the
+    analytical side of the DESIGN.md section 14.3 cross-check.
+
+    ``block_bytes`` is one block's payload; ``partial_bytes`` the
+    per-slot scatter payload (defaults to ``block_bytes`` — exact for
+    emitters whose partials have the block's shape).  A full placement
+    predicts zero ppermute hops and the all-gather baseline instead.
+    """
+    if not isinstance(placement, Placement):
+        if P is None:
+            raise ValueError("P is required when placement is a spec name")
+        placement = resolve_placement(placement, P)
+    pb = int(block_bytes) if partial_bytes is None else int(partial_bytes)
+    bb = int(block_bytes)
+    resident = placement.replication * bb
+    if placement.full:
+        return SweepComm(
+            P=placement.P, placement=placement.name, block_bytes=bb,
+            partial_bytes=pb, gather_hops=0, scatter_hops=0,
+            gather_bytes=0, scatter_bytes=0,
+            allgather_bytes=(placement.P - 1) * bb,
+            resident_bytes=resident)
+    sched = placement.schedule()
+    nz = sum(1 for a in sched.shifts if int(a) % placement.P != 0)
+    return SweepComm(
+        P=placement.P, placement=placement.name, block_bytes=bb,
+        partial_bytes=pb, gather_hops=nz, scatter_hops=nz,
+        gather_bytes=nz * bb, scatter_bytes=nz * pb, allgather_bytes=0,
+        resident_bytes=resident)
+
+
+def predict_tree_merge_comm(P: int, payload_bytes: int) -> Dict[str, int]:
+    """Per-device comm of the serving recursive-doubling top-k merge:
+    one ppermute hop per shift doubling (``ceil(log2 P)`` hops), each
+    moving the running candidate payload (DESIGN.md sections 9, 14.3)."""
+    hops = 0
+    shift = 1
+    while shift < P:
+        hops += 1
+        shift *= 2
+    return {"hops": hops, "bytes": hops * int(payload_bytes)}
+
+
+def predict_ring_gather_comm(P: int, payload_bytes: int) -> Dict[str, int]:
+    """Per-device comm of the thresholded-query ppermute ring gather:
+    ``P - 1`` single-step hops, each moving the full buffer payload
+    (DESIGN.md sections 11.4, 14.3)."""
+    return {"hops": max(0, P - 1),
+            "bytes": max(0, P - 1) * int(payload_bytes)}
+
+
+def traced_sweep_comm(tracer) -> Dict[str, int]:
+    """The traced per-device comm actuals out of a tracer's counters —
+    the empirical side of the DESIGN.md section 14.3 cross-check."""
+    return {
+        "gather_bytes": int(tracer.counter_total(
+            "comm.ppermute.gather_bytes")),
+        "scatter_bytes": int(tracer.counter_total(
+            "comm.ppermute.scatter_bytes")),
+        "gather_hops": int(tracer.counter_total(
+            "comm.ppermute.gather_hops")),
+        "scatter_hops": int(tracer.counter_total(
+            "comm.ppermute.scatter_hops")),
+        "allgather_bytes": int(tracer.counter_total("comm.allgather.bytes")),
+    }
+
+
+def verify_dense_comm(P: Optional[int] = None,
+                      placements: Optional[Sequence[str]] = None,
+                      *, block: int = 4, dim: int = 3,
+                      mode: str = "batched",
+                      verbose: bool = True) -> List[Dict[str, int]]:
+    """Run one dense sweep per registered placement under a fresh tracer
+    and assert the traced ppermute / all-gather bytes equal the
+    analytical prediction **exactly** (DESIGN.md section 14.3; the CI
+    trace-smoke cross-check, ``python -m repro.obs.comm``).
+
+    Needs ``P`` jax devices (fake-device subprocesses in tests).  The
+    toy pair function emits block-shaped partials, so
+    ``partial_bytes == block_bytes`` and the default prediction is
+    exact.  Returns one traced-actuals dict per placement checked.
+    """
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as PS
+
+    from ..core.allpairs import quorum_allpairs
+
+    devs = jax.devices()
+    Pn = P or len(devs)
+    if len(devs) < Pn:
+        raise RuntimeError(f"need {Pn} devices, have {len(devs)}")
+    mesh = jax.make_mesh((Pn,), ("q",), devices=devs[:Pn])
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(Pn * block, dim)).astype(np.float32)
+    block_bytes = block * dim * 4
+
+    def pair_fn(bi, bj):
+        # out_j(bi, bj) == out_i(bj, bi): the engine's symmetry contract
+        return bi * jnp.sum(bj * bj), bj * jnp.sum(bi * bi)
+
+    out: List[Dict[str, int]] = []
+    try:
+        for plc in supported_placements(Pn):
+            if placements is not None and plc.name not in placements:
+                continue
+            tracer = trace_mod.configure()
+
+            def f(xb):
+                return quorum_allpairs(pair_fn, xb, axis_name="q",
+                                       mode=mode, placement=plc)
+
+            run = jax.jit(jax.shard_map(f, mesh=mesh, in_specs=PS("q"),
+                                        out_specs=PS("q")))
+            np.asarray(run(x))  # trace + run once: counters fire per trace
+            pred = predict_sweep_comm(plc, block_bytes)
+            got = traced_sweep_comm(tracer)
+            for field in ("gather_bytes", "scatter_bytes", "gather_hops",
+                          "scatter_hops", "allgather_bytes"):
+                want = getattr(pred, field) if field != "allgather_bytes" \
+                    else pred.allgather_bytes
+                assert got[field] == want, (
+                    f"{plc.name} P={Pn}: traced {field}={got[field]} != "
+                    f"predicted {want}")
+            out.append({"placement": plc.name, **got})
+            if verbose:
+                print(f"  comm {plc.name:10s} P={Pn:<3d} mode={mode}: "
+                      f"gather={got['gather_bytes']}B x{got['gather_hops']} "
+                      f"scatter={got['scatter_bytes']}B "
+                      f"allgather={got['allgather_bytes']}B == predicted")
+    finally:
+        trace_mod.reset()
+    if verbose:
+        print(f"comm predictor OK: {len(out)} placement(s) at P={Pn}, "
+              f"traced == predicted exactly")
+    return out
+
+
+def _main(argv=None) -> int:
+    """CLI: ``python -m repro.obs.comm [--P N] [--placements ...]
+    [--mode batched]`` — the predictor-vs-traced equality check
+    (DESIGN.md section 14.3)."""
+    import argparse
+    ap = argparse.ArgumentParser(
+        description="assert traced ppermute bytes == analytical "
+                    "prediction for every registered placement")
+    ap.add_argument("--P", type=int, default=None)
+    ap.add_argument("--placements", nargs="*", default=None)
+    ap.add_argument("--mode", default="batched",
+                    choices=["batched", "overlap", "scan"])
+    args = ap.parse_args(argv)
+    verify_dense_comm(args.P, args.placements, mode=args.mode)
+    return 0
+
+
+if __name__ == "__main__":  # pragma: no cover
+    raise SystemExit(_main())

@@ -56,6 +56,7 @@ from ..core.scheduler import PairSchedule
 from ..core.sparse import default_capacity
 from ..core.sweep import SweepEmitter, merge_topk, slot_items, topk_by_score
 from ..kernels.ref import IDX_SENTINEL, NEG_INF, QUERY_METRICS as METRICS
+from ..obs import trace as obs_trace
 from .cover import build_cover
 from .stream import ServingState, build_state, replace_block
 
@@ -94,9 +95,14 @@ def tree_merge_topk(vals, idx, *, axis_name: str, P: int, topk: int):
     device holds the global top-k.  Round r pulls the running list from
     device i + 2^r; windows overlap when P is not a power of two, which
     the index dedup in :func:`core.sweep.merge_topk` absorbs exactly."""
+    tr = obs_trace.get_tracer()
     shift = 1
     while shift < P:
         perm = [(j, (j - shift) % P) for j in range(P)]
+        if tr:  # per hop: the running (vals, idx) candidate payload
+            tr.count("comm.ppermute.merge_hops")
+            tr.count("comm.ppermute.merge_bytes",
+                     obs_trace.nbytes_of(vals) + obs_trace.nbytes_of(idx))
         ov = lax.ppermute(vals, axis_name, perm)
         oi = lax.ppermute(idx, axis_name, perm)
         vals, idx = merge_topk(vals, idx, ov, oi, topk)
@@ -443,10 +449,15 @@ def quorum_query_threshold(
                                            stack=stack)
 
     # ppermute ring gather: append every other device's passing prefix
+    tr = obs_trace.get_tracer()
     perm = [(j, (j + 1) % P) for j in range(P)]
     cur = (vbuf, ibuf, cnt)
     slot_iota = lax.broadcasted_iota(jnp.int32, (Q, capacity), 1)
     for _ in range(1, P):
+        if tr:  # per hop: the three ring buffers (vals, idx, count)
+            tr.count("comm.ppermute.ring_hops")
+            tr.count("comm.ppermute.ring_bytes",
+                     sum(obs_trace.nbytes_of(c) for c in cur))
         cur = tuple(lax.ppermute(c, axis_name, perm) for c in cur)
         rv, ri, rc = cur
         valid_in = slot_iota < jnp.minimum(rc, capacity)[:, None]
@@ -593,10 +604,24 @@ class ServingCorpus:
 
     def query(self, queries, *, topk: int, mode: str = "auto",
               metric: str = "dot", use_kernel: bool = False):
-        """queries [Q, d] -> (scores [Q, topk], global row ids [Q, topk])."""
+        """queries [Q, d] -> (scores [Q, topk], global row ids [Q, topk]).
+
+        With tracing on, each call is a ``serving.query`` host span
+        (blocked until the result is device-complete, so the span is
+        true end-to-end latency) and a ``serving.queries`` counter
+        (DESIGN.md section 14.2)."""
         run = query_fn(self.mesh, self.axis_name, topk, mode, metric,
                        use_kernel, self.placement)
-        return run(jnp.asarray(queries, jnp.float32), self.state)
+        q = jnp.asarray(queries, jnp.float32)
+        tr = obs_trace.get_tracer()
+        if not tr:
+            return run(q, self.state)
+        with tr.span("serving.query", Q=int(q.shape[0]), topk=topk,
+                     mode=mode, metric=metric, P=self.P):
+            out = run(q, self.state)
+            jax.block_until_ready(out)
+        tr.count("serving.queries", int(q.shape[0]))
+        return out
 
     def query_threshold(self, queries, *, threshold: float,
                         capacity: int | None = None, mode: str = "auto",
@@ -621,16 +646,25 @@ class ServingCorpus:
                else min(default_capacity(total_rows), total_rows))
         q = jnp.asarray(queries, jnp.float32)
         escalations = 0
-        while True:
-            run = threshold_fn(self.mesh, self.axis_name, cap, mode, metric,
-                               self.placement)
-            vals, idx, cnt = run(q, threshold, self.state)
-            counts = np.asarray(cnt)
-            if (not (counts > cap).any() or not escalate
-                    or cap >= total_rows or escalations >= max_doublings):
-                break
-            cap = min(2 * cap, total_rows)
-            escalations += 1
+        tr = obs_trace.get_tracer()
+        span = tr.span("serving.query_threshold", Q=int(q.shape[0]),
+                       mode=mode, metric=metric, P=self.P) if tr \
+            else obs_trace.NOOP.span("")
+        with span:
+            while True:
+                run = threshold_fn(self.mesh, self.axis_name, cap, mode,
+                                   metric, self.placement)
+                vals, idx, cnt = run(q, threshold, self.state)
+                counts = np.asarray(cnt)
+                if (not (counts > cap).any() or not escalate
+                        or cap >= total_rows
+                        or escalations >= max_doublings):
+                    break
+                cap = min(2 * cap, total_rows)
+                escalations += 1
+        if tr:
+            tr.count("serving.queries", int(q.shape[0]))
+            tr.count("serving.threshold_escalations", escalations)
         if escalate and (counts > cap).any():
             raise RuntimeError(
                 f"thresholded query still overflows capacity {cap} after "

@@ -60,6 +60,20 @@ def test_int_knob_validation(monkeypatch):
         env_mod.read_knob("REPRO_SPARSE_CAPACITY")
 
 
+def test_trace_knob_passthrough(monkeypatch):
+    """REPRO_TRACE is a str knob: any non-empty value passes through
+    verbatim (case preserved — it may be a filesystem path)."""
+    monkeypatch.setenv("REPRO_TRACE", "1")
+    assert env_mod.read_knob("REPRO_TRACE") == "1"
+    monkeypatch.setenv("REPRO_TRACE", "/Traces/Run7.json")
+    assert env_mod.read_knob("REPRO_TRACE") == "/Traces/Run7.json"
+    monkeypatch.setenv("REPRO_METRICS", "1")
+    assert env_mod.read_knob("REPRO_METRICS") == 1
+    monkeypatch.setenv("REPRO_METRICS", "-1")
+    with pytest.raises(ValueError, match="REPRO_METRICS must be >= 0"):
+        env_mod.read_knob("REPRO_METRICS")
+
+
 def test_unknown_knob_typo_detection(monkeypatch):
     """A REPRO_* variable matching no registered knob warns once, naming
     the closest registered knob."""
@@ -74,6 +88,33 @@ def test_unknown_knob_typo_detection(monkeypatch):
     with _w.catch_warnings():
         _w.simplefilter("error")
         env_mod.read_knob("REPRO_ALLPAIRS_MODE")
+
+
+def test_unknown_knob_warns_once_across_reads(monkeypatch):
+    """Regression (ISSUE 7 satellite): the typo warning fires exactly
+    once per unknown variable per process, even with an ``always``
+    warning filter, across repeated reads of multiple knobs — and a
+    variable that appears later still gets its own single warning."""
+    import warnings as _w
+    monkeypatch.delenv("REPRO_ALLPAIRS_MODE", raising=False)
+    monkeypatch.delenv("REPRO_PLACEMENT", raising=False)
+    monkeypatch.setenv("REPRO_ALLPAIRS_MODES", "scan")      # trailing S
+    monkeypatch.setattr(env_mod, "_warned_unknown", set())
+    monkeypatch.setattr(env_mod, "_seen_env_keys", frozenset())
+    with _w.catch_warnings(record=True) as caught:
+        _w.simplefilter("always")
+        for _ in range(5):
+            env_mod.read_knob("REPRO_ALLPAIRS_MODE")
+            env_mod.read_knob("REPRO_PLACEMENT")
+        hits = [c for c in caught if "REPRO_ALLPAIRS_MODES" in
+                str(c.message)]
+        assert len(hits) == 1, [str(c.message) for c in caught]
+        # an unknown variable set later still warns (exactly once)
+        monkeypatch.setenv("REPRO_PLACEMENTT", "plane")     # trailing T
+        for _ in range(3):
+            env_mod.read_knob("REPRO_PLACEMENT")
+        late = [c for c in caught if "REPRO_PLACEMENTT" in str(c.message)]
+        assert len(late) == 1, [str(c.message) for c in caught]
 
 
 def test_registry_is_documented():

@@ -1,0 +1,111 @@
+"""Comm-volume predictor (obs/comm.py, DESIGN.md section 14.3): host-side
+unit tests for the analytical formulas, plus the predictor-vs-traced
+equality check at P in {5, 8, 13} across every registered placement
+(subprocess fake-device runs of ``python -m repro.obs.comm``).
+"""
+
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+from repro.core.placement import get_placement
+from repro.obs import trace as trace_mod
+from repro.obs.comm import (predict_ring_gather_comm, predict_sweep_comm,
+                            predict_tree_merge_comm, traced_sweep_comm)
+
+SRC = Path(__file__).resolve().parents[1] / "src"
+
+
+def run_sub(argv, devices, timeout=600):
+    """Run ``python -m <argv>`` under `devices` fake XLA devices."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = str(SRC)
+    r = subprocess.run([sys.executable, "-m"] + argv, env=env,
+                       capture_output=True, text=True, timeout=timeout)
+    assert r.returncode == 0, (
+        f"exit {r.returncode}\nstdout:\n{r.stdout}\nstderr:\n{r.stderr}")
+    return r.stdout
+
+
+def test_predict_cyclic_counts_nonzero_shifts():
+    """gather moves one block per nonzero shift; scatter returns one
+    partial per nonzero shift — the paper's O(N/sqrt(P)) replication
+    made concrete in bytes."""
+    plc = get_placement("cyclic", 8)
+    sched = plc.schedule()
+    nz = int(sum(1 for a in sched.shifts if a % 8 != 0))
+    c = predict_sweep_comm(plc, block_bytes=1000, partial_bytes=300)
+    assert c.gather_hops == nz and c.scatter_hops == nz
+    assert c.gather_bytes == nz * 1000
+    assert c.scatter_bytes == nz * 300
+    assert c.allgather_bytes == 0
+    assert c.ppermute_bytes == c.gather_bytes + c.scatter_bytes
+    assert c.resident_bytes == plc.replication * 1000
+
+
+def test_predict_partial_bytes_defaults_to_block_bytes():
+    c = predict_sweep_comm(get_placement("cyclic", 5), block_bytes=64)
+    assert c.partial_bytes == 64
+    assert c.gather_bytes == c.scatter_bytes
+
+
+def test_predict_full_placement_is_allgather():
+    c = predict_sweep_comm(get_placement("full", 8), block_bytes=100)
+    assert c.gather_hops == 0 and c.scatter_hops == 0
+    assert c.ppermute_bytes == 0
+    assert c.allgather_bytes == (8 - 1) * 100
+    assert c.resident_bytes == 8 * 100
+
+
+def test_predict_accepts_name_with_P():
+    c = predict_sweep_comm("cyclic", block_bytes=10, P=13)
+    assert c.P == 13 and c.placement == "cyclic"
+    with pytest.raises(ValueError):
+        predict_sweep_comm("cyclic", block_bytes=10)  # name needs P
+
+
+def test_predict_as_dict_roundtrip():
+    c = predict_sweep_comm(get_placement("cyclic", 5), block_bytes=48)
+    d = c.as_dict()
+    assert d["gather_bytes"] == c.gather_bytes
+    assert d["placement"] == "cyclic" and d["P"] == 5
+
+
+@pytest.mark.parametrize("P,hops", [(1, 0), (2, 1), (8, 3), (13, 4)])
+def test_predict_tree_merge_hops(P, hops):
+    c = predict_tree_merge_comm(P, payload_bytes=100)
+    assert c["hops"] == hops
+    assert c["bytes"] == hops * 100
+
+
+def test_predict_ring_gather():
+    c = predict_ring_gather_comm(8, payload_bytes=50)
+    assert c["hops"] == 7
+    assert c["bytes"] == 7 * 50
+
+
+def test_traced_sweep_comm_reads_counters():
+    tr = trace_mod.Tracer(metrics_only=True)
+    tr.count("comm.ppermute.gather_bytes", 128)
+    tr.count("comm.ppermute.scatter_bytes", 96)
+    tr.count("comm.ppermute.gather_hops", 2)
+    tr.count("comm.ppermute.scatter_hops", 2)
+    got = traced_sweep_comm(tr)
+    assert got == {"gather_bytes": 128, "scatter_bytes": 96,
+                   "gather_hops": 2, "scatter_hops": 2,
+                   "allgather_bytes": 0}
+
+
+@pytest.mark.parametrize("P", [5, 8, 13])
+def test_predictor_matches_traced_all_placements(P):
+    """ISSUE 7 acceptance: for every registered placement defined at P,
+    the traced ppermute/allgather bytes of a real dense sweep equal the
+    analytical prediction exactly.  verify_dense_comm asserts equality
+    per placement and prints one OK line per placement checked."""
+    out = run_sub(["repro.obs.comm", "--P", str(P)], devices=P)
+    assert "comm predictor OK" in out, out
+    assert f"P={P}" in out
