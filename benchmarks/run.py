@@ -11,6 +11,11 @@ Prints ``name,us_per_call,derived`` CSV rows:
                          per mode, fused kernel vs unfused reference
                          (writes BENCH_serve.json; ``--fast-serve`` runs
                          only this one, for CI)
+  bench_latency        — continuous-batching front end: per-request
+                         p50/p99 latency + steady-state qps for a
+                         heterogeneous request mix (writes
+                         BENCH_latency.json; ``--fast-latency`` runs
+                         only this one, for CI)
   bench_sparse         — thresholded similarity join: norm-bound
                          prefilter vs dense scoring at low selectivity
                          (writes BENCH_sparse.json; ``--fast-sparse``
@@ -50,7 +55,8 @@ import traceback
 from pathlib import Path
 
 ROOT = Path(__file__).resolve().parents[1]
-BENCH_FILES = ("BENCH_engine.json", "BENCH_serve.json", "BENCH_sparse.json",
+BENCH_FILES = ("BENCH_engine.json", "BENCH_serve.json",
+               "BENCH_latency.json", "BENCH_sparse.json",
                "BENCH_knn.json", "BENCH_faults.json")
 COMPARE_TOLERANCE = 1.5
 
@@ -166,16 +172,20 @@ def compare_results(committed, tolerance: float = COMPARE_TOLERANCE) -> int:
 def main() -> None:
     """CLI driver (see module docstring for flags)."""
     from . import (bench_attention_comm, bench_attention_hlo, bench_engine,
-                   bench_faults, bench_knn, bench_memory, bench_pcit_speedup,
-                   bench_quorum, bench_serve, bench_sparse)
+                   bench_faults, bench_knn, bench_latency, bench_memory,
+                   bench_pcit_speedup, bench_quorum, bench_serve,
+                   bench_sparse)
     rows = [("name", "us_per_call", "derived")]
     modules = [bench_quorum, bench_memory, bench_attention_comm,
                bench_attention_hlo, bench_engine, bench_serve,
-               bench_sparse, bench_knn, bench_faults, bench_pcit_speedup]
+               bench_latency, bench_sparse, bench_knn, bench_faults,
+               bench_pcit_speedup]
     if "--fast-engine" in sys.argv:
         modules = [bench_engine]
     elif "--fast-serve" in sys.argv:
         modules = [bench_serve]
+    elif "--fast-latency" in sys.argv:
+        modules = [bench_latency]
     elif "--fast-sparse" in sys.argv:
         modules = [bench_sparse]
     elif "--fast-knn" in sys.argv:

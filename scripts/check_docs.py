@@ -43,6 +43,7 @@ MUST_CITE_DESIGN = [
     "core/faults.py",
     "launch/elastic.py",
     "serving/cover.py",
+    "serving/batching.py",
     "kernels/ops.py",
     "obs/trace.py",
     "obs/comm.py",

@@ -124,6 +124,15 @@ ENV_KNOBS = {
         name="REPRO_FAULT_SEED", kind="int", minimum=0,
         description="chaos selfcheck: seed of the deterministic fault "
                     "plan RNG (default 0)"),
+    "REPRO_SERVE_MAX_BATCH": EnvKnob(
+        name="REPRO_SERVE_MAX_BATCH", kind="int", minimum=1,
+        description="continuous batcher: max requests packed per "
+                    "scheduler iteration (default 32)"),
+    "REPRO_SERVE_QUEUE_DEPTH": EnvKnob(
+        name="REPRO_SERVE_QUEUE_DEPTH", kind="int", minimum=1,
+        description="continuous batcher: admission-control bound on "
+                    "waiting requests before submits are rejected "
+                    "(default 1024)"),
     "REPRO_TRACE": EnvKnob(
         name="REPRO_TRACE", kind="str",
         description="structured tracing: 0/unset off, 1 on (Chrome-trace "

@@ -8,9 +8,15 @@ serves *query-vs-all* traffic against the same quorum-sharded residency:
   * ``engine`` — the shard_map query program: fused local top-k scoring
     plus a ppermute tree merge (`ServingCorpus` is the host handle),
   * ``stream`` — streamed corpus updates (replace / append a block)
-    over the existing cyclic ppermute shifts, no global reshuffle.
+    over the existing cyclic ppermute shifts, no global reshuffle,
+  * ``batching`` — the continuous-batching front end: bounded admission
+    queue, heterogeneous microbatch packing onto quantized program
+    keys, per-request deadlines, p50/p99 latency accounting
+    (imported lazily — ``from repro.serving.batching import
+    BatchScheduler``).
 
-See DESIGN.md section 9 ("Online serving").
+See DESIGN.md sections 9 ("Online serving") and 15 (continuous
+batching).
 """
 
 from .cover import CoverPlan, build_cover

@@ -65,12 +65,28 @@ __all__ = [
     "topk_by_score",
     "merge_topk",
     "tree_merge_topk",
+    "quantize_pow2",
     "quorum_query_topk",
     "quorum_query_threshold",
     "QueryTopKEmitter",
     "QueryThresholdEmitter",
     "ServingCorpus",
 ]
+
+
+def quantize_pow2(n: int, floor: int = 1) -> int:
+    """Round ``n`` up to the smallest power of two >= max(n, floor).
+
+    The program-cache quantizer (DESIGN.md section 15.2): request-shape
+    parameters (``topk``, range-query ``capacity``, packed microbatch
+    width) are bucketed onto powers of two before they become jit
+    program-cache keys, so heterogeneous traffic compiles O(log N)
+    programs instead of one per observed value — and capacity
+    escalation (doubling) maps onto the *same* bucket set instead of
+    flooding the LRU with one entry per escalated size.
+    """
+    n = max(int(n), int(floor), 1)
+    return 1 << (n - 1).bit_length()
 
 
 
@@ -346,7 +362,7 @@ class QueryThresholdEmitter(SweepEmitter):
         if self.metric == "l2":
             s = (2.0 * s - jnp.sum(quorum * quorum, axis=-1)[None]
                  - jnp.sum(self.queries * self.queries, axis=-1)[:, None, None])
-        keep = (s >= self.thr) & self.mask[None]
+        keep = (s >= self.thr[:, None, None]) & self.mask[None]
         return _compact_rows(
             vbuf, ibuf, cnt, keep.reshape(Q, k * block),
             s.reshape(Q, k * block),
@@ -370,7 +386,7 @@ class QueryThresholdEmitter(SweepEmitter):
         blk = jnp.take(quorum, slot, axis=0)
         Q, block = self.queries.shape[0], blk.shape[0]
         s = _scores(self.queries, blk, self.metric)
-        keep = (s >= self.thr) & mrow[None]
+        keep = (s >= self.thr[:, None]) & mrow[None]
         g = jnp.broadcast_to(grow[None], (Q, block))
         return _compact_rows(vb, ib, c, keep, s, g, self.capacity)
 
@@ -385,7 +401,7 @@ class QueryThresholdEmitter(SweepEmitter):
         Q, block = self.queries.shape[0], bi.shape[0]
         s = _scores(self.queries, bi, self.metric)
         state["s"].append(s)
-        state["keep"].append((s >= self.thr) & self.mask[idx][None])
+        state["keep"].append((s >= self.thr[:, None]) & self.mask[idx][None])
         state["g"].append(jnp.broadcast_to(self.gidx[idx][None], (Q, block)))
 
     def overlap_finalize(self, state):
@@ -421,8 +437,11 @@ def quorum_query_threshold(
     prefix, so all devices end with the identical global result, sorted
     by ascending corpus index.
 
-    Must run inside shard_map.  ``threshold`` is a traced f32 scalar (one
-    compiled program serves any threshold at a given capacity).  Returns
+    Must run inside shard_map.  ``threshold`` is a traced f32 scalar or a
+    per-query ``[Q]`` vector (one compiled program serves any threshold
+    values at a given capacity — the per-query form is what lets the
+    continuous batcher pack requests with different thresholds into one
+    launch, DESIGN.md section 15.2).  Returns
     ``(scores [Q, capacity], indices [Q, capacity], count [Q])``; count
     is each query's TRUE passing total — ``count > capacity`` flags
     overflow (escalate per DESIGN.md 11.2; overflowing buffers keep a
@@ -441,7 +460,7 @@ def quorum_query_threshold(
     P = schedule.P
     gidx, mask = _query_geometry(schedule, axis_name, block, mask_row,
                                  stack_valid)
-    thr = jnp.asarray(threshold, jnp.float32)
+    thr = jnp.broadcast_to(jnp.asarray(threshold, jnp.float32), (Q,))
     emitter = QueryThresholdEmitter(schedule, queries, mask, gidx, thr,
                                     capacity, metric, axis_name)
     vbuf, ibuf, cnt = sweep_mod.pair_sweep(emitter, schedule=schedule,
@@ -477,8 +496,12 @@ def threshold_fn(mesh, axis_name: str, capacity: int, mode: str,
 
     Returns ``f(queries [Q, d], threshold, state) -> (scores [Q,
     capacity], idx [Q, capacity], count [Q])`` — cached per capacity
-    like :func:`query_fn`; the threshold is a traced operand, so one
-    compiled program serves every threshold value (DESIGN.md 11.4).
+    like :func:`query_fn`; the threshold (scalar or per-query ``[Q]``
+    vector) is a traced operand, so one compiled program serves every
+    threshold value (DESIGN.md 11.4).  Callers are expected to
+    pre-quantize ``capacity`` through :func:`quantize_pow2` so the LRU
+    holds one entry per power-of-two bucket, not one per observed
+    capacity (DESIGN.md section 15.2).
     """
     P = mesh.shape[axis_name]
     if placement is None:
@@ -500,7 +523,9 @@ def threshold_fn(mesh, axis_name: str, capacity: int, mode: str,
         out_specs=(spec, spec, spec)))
 
     def run(queries, threshold, state: ServingState):
-        vals, idx, cnt = fn(queries, jnp.float32(threshold), state.stack,
+        thr = jnp.broadcast_to(jnp.asarray(threshold, jnp.float32),
+                               (queries.shape[0],))
+        vals, idx, cnt = fn(queries, thr, state.stack,
                             state.stack_valid, mask_table)
         return vals[0], idx[0], cnt[0]      # all device copies identical
 
@@ -606,44 +631,67 @@ class ServingCorpus:
               metric: str = "dot", use_kernel: bool = False):
         """queries [Q, d] -> (scores [Q, topk], global row ids [Q, topk]).
 
+        The compiled program is keyed on the power-of-two bucket
+        ``quantize_pow2(topk)`` rather than the raw ``topk`` (DESIGN.md
+        section 15.2) and the result is sliced back to ``topk`` columns
+        — exact by the prefix property of the (-score, index) total
+        order: the first k entries of a top-K list *are* the top-k list.
+        Heterogeneous k therefore share one program per bucket.
+
         With tracing on, each call is a ``serving.query`` host span
         (blocked until the result is device-complete, so the span is
         true end-to-end latency) and a ``serving.queries`` counter
         (DESIGN.md section 14.2)."""
-        run = query_fn(self.mesh, self.axis_name, topk, mode, metric,
+        if topk < 1:
+            raise ValueError(f"topk must be >= 1, got {topk}")
+        kq = quantize_pow2(topk)
+        run = query_fn(self.mesh, self.axis_name, kq, mode, metric,
                        use_kernel, self.placement)
         q = jnp.asarray(queries, jnp.float32)
         tr = obs_trace.get_tracer()
         if not tr:
-            return run(q, self.state)
-        with tr.span("serving.query", Q=int(q.shape[0]), topk=topk,
-                     mode=mode, metric=metric, P=self.P):
             out = run(q, self.state)
-            jax.block_until_ready(out)
-        tr.count("serving.queries", int(q.shape[0]))
-        return out
+        else:
+            with tr.span("serving.query", Q=int(q.shape[0]), topk=topk,
+                         mode=mode, metric=metric, P=self.P):
+                out = run(q, self.state)
+                jax.block_until_ready(out)
+            tr.count("serving.queries", int(q.shape[0]))
+        if kq == topk:
+            return out
+        return out[0][:, :topk], out[1][:, :topk]
 
-    def query_threshold(self, queries, *, threshold: float,
+    def query_threshold(self, queries, *, threshold,
                         capacity: int | None = None, mode: str = "auto",
                         metric: str = "dot", escalate: bool = True,
                         max_doublings: int = 16):
         """Range query: every corpus row with score >= threshold, per query.
 
-        queries [Q, d] -> ``(scores [Q, capacity], global row ids
-        [Q, capacity], count [Q])``, each query's hits sorted by
-        ascending corpus index with (NEG_INF, IDX_SENTINEL) sentinels
-        past ``count`` (:func:`quorum_query_threshold`, DESIGN.md
-        section 11.4).  ``capacity`` defaults to the
-        ``REPRO_SPARSE_CAPACITY``-aware heuristic and, under the
-        overflow contract (DESIGN.md 11.2), doubles until every query's
-        true ``count`` fits (capped at the corpus size); with
-        ``escalate=False`` the first pass returns as-is — ``count >
-        capacity`` then marks a truncated query.  The compiled program
-        is cached per capacity, not per threshold.
+        queries [Q, d] -> ``(scores [Q, cap], global row ids [Q, cap],
+        count [Q])``, each query's hits sorted by ascending corpus index
+        with (NEG_INF, IDX_SENTINEL) sentinels past ``count``
+        (:func:`quorum_query_threshold`, DESIGN.md section 11.4).
+        ``threshold`` is a scalar or a per-query ``[Q]`` vector (the
+        packed-batch form, DESIGN.md section 15.2).
+
+        ``capacity`` defaults to the ``REPRO_SPARSE_CAPACITY``-aware
+        heuristic; the *program* capacity ``cap`` is its
+        :func:`quantize_pow2` bucket (clamped to the corpus size), so
+        returned buffers may be wider than requested and the compiled
+        programs stay on the power-of-two bucket ladder — escalation
+        doubles along that same ladder instead of flooding the LRU with
+        one ``threshold_fn`` entry per observed capacity (DESIGN.md
+        sections 11.2, 15.2).  Under the overflow contract doubling
+        continues until every query's true ``count`` fits (capped at
+        the corpus size); with ``escalate=False`` the first pass
+        returns as-is — ``count > cap`` then marks a truncated query.
+        The compiled program is cached per capacity bucket, never per
+        threshold.
         """
         total_rows = self.P * self.block
-        cap = (int(capacity) if capacity is not None
-               else min(default_capacity(total_rows), total_rows))
+        cap_req = (int(capacity) if capacity is not None
+                   else min(default_capacity(total_rows), total_rows))
+        cap = min(quantize_pow2(cap_req), total_rows)
         q = jnp.asarray(queries, jnp.float32)
         escalations = 0
         tr = obs_trace.get_tracer()
@@ -672,18 +720,42 @@ class ServingCorpus:
                 "threshold")
         return vals, idx, cnt
 
+    def _check_block_data(self, data, what: str) -> np.ndarray:
+        """Validate streamed block payloads at the handle layer: ``data``
+        must be ``[rows, d]`` with ``rows <= block`` — the docstring
+        contract of :meth:`replace_block`/:meth:`append_block` — so
+        oversized or misshapen updates fail here with the block capacity
+        in the message instead of deep inside ``stream.replace_block``
+        (DESIGN.md section 9.4)."""
+        arr = np.asarray(data, np.float32)
+        if arr.ndim != 2 or arr.shape[1] != self.d:
+            raise ValueError(
+                f"{what} data must be a [rows, {self.d}] array (the "
+                f"corpus embedding dim), got shape {arr.shape}")
+        if arr.shape[0] > self.block:
+            raise ValueError(
+                f"{what} data has {arr.shape[0]} rows but the block "
+                f"capacity is {self.block}; split the update or rebuild "
+                "with a larger `block` (ServingCorpus.build)")
+        return arr
+
     def replace_block(self, b: int, data, nvalid: int | None = None) -> None:
-        """Replace block ``b`` in place (streamed to its k holder quorums)."""
+        """Replace block ``b`` in place (streamed to its k holder
+        quorums).  ``data`` must be ``[rows <= block capacity, d]`` —
+        validated here (DESIGN.md section 9.4)."""
         if not 0 <= b < self.P:
             raise ValueError(f"block id {b} out of range [0, {self.P})")
+        data = self._check_block_data(data, f"replace_block({b})")
         self.state = replace_block(self.state, self.mesh, self.axis_name,
-                                   b, np.asarray(data, np.float32), nvalid,
+                                   b, data, nvalid,
                                    placement=self.placement)
         self.filled[b] = (data.shape[0] if nvalid is None else nvalid)
 
     def append_block(self, data) -> int:
-        """Stream ``data`` (rows <= block capacity) into the first empty
-        block slot; returns the block id it landed in."""
+        """Stream ``data`` (rows <= block capacity, validated at this
+        layer) into the first empty block slot; returns the block id it
+        landed in."""
+        data = self._check_block_data(data, "append_block")
         empty = np.nonzero(self.filled == 0)[0]
         if empty.size == 0:
             raise ValueError(

@@ -1,0 +1,352 @@
+"""Continuous-batching scheduler tests (serving/batching.py, DESIGN.md
+section 15): heterogeneous packed batches bit-exact vs the per-request
+query/query_threshold oracles, deadline-preemption semantics under an
+injected clock, admission-control backpressure, the p50/p99 percentile
+math on a deterministic synthetic trace, and the engine-side cache-key
+quantization + block-update validation the scheduler leans on.  Jax
+meshes live in fake-device subprocesses (the dry-run isolation rule,
+see tests/test_distributed.py); the metrics/validation tests run
+in-process against a duck-typed corpus stand-in.
+"""
+
+import math
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+SRC = Path(__file__).resolve().parents[1] / "src"
+sys.path.insert(0, str(SRC))
+
+from repro.core.env import ENV_KNOBS                      # noqa: E402
+from repro.serving.batching import (AdmissionError, BatchScheduler,  # noqa: E402
+                                    latency_summary, percentile)
+from repro.serving.engine import quantize_pow2            # noqa: E402
+
+
+def run_sub(code: str, devices: int) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = str(SRC)
+    r = subprocess.run([sys.executable, "-c", code], env=env,
+                       capture_output=True, text=True, timeout=600)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    return r.stdout
+
+
+# --------------------------------------------------------------- host-side
+# percentile / latency math on deterministic synthetic traces
+
+
+def test_percentile_linear_interpolation():
+    """The stdlib-checkable definition: fractional rank (n-1)*q/100 with
+    linear interpolation — matches numpy's default method on a
+    deterministic trace, exact at the knots."""
+    trace = [0.4, 0.1, 0.3, 0.2]                       # unsorted on purpose
+    assert percentile(trace, 0) == 0.1
+    assert percentile(trace, 100) == 0.4
+    assert percentile(trace, 50) == pytest.approx(0.25)
+    assert percentile([7.0], 99) == 7.0
+    rng = np.random.default_rng(3)
+    xs = rng.exponential(size=37).tolist()
+    for q in (0, 10, 50, 90, 99, 100):
+        assert percentile(xs, q) == pytest.approx(
+            float(np.percentile(xs, q)), rel=1e-12)
+
+
+def test_percentile_rejects_bad_input():
+    with pytest.raises(ValueError, match="empty"):
+        percentile([], 50)
+    with pytest.raises(ValueError, match=r"\[0, 100\]"):
+        percentile([1.0], 101)
+
+
+def test_latency_summary_deterministic_trace():
+    """p50/p99/qps over a synthetic 1..100 ms ramp: every field is
+    hand-computable."""
+    trace = [i / 1000.0 for i in range(1, 101)]        # 1ms .. 100ms
+    s = latency_summary(trace, span_s=2.0)
+    assert s["n"] == 100.0
+    assert s["mean_s"] == pytest.approx(0.0505)
+    assert s["p50_s"] == pytest.approx(0.0505)         # between 50 and 51
+    assert s["p99_s"] == pytest.approx(0.09901)        # rank 98.01
+    assert s["max_s"] == pytest.approx(0.1)
+    assert s["qps"] == pytest.approx(50.0)
+    empty = latency_summary([])
+    assert empty == {"n": 0.0}
+    no_span = latency_summary(trace)
+    assert "qps" not in no_span
+
+
+def test_quantize_pow2_buckets():
+    """The program-cache bucket function (DESIGN.md section 15.2):
+    round up to a power of two, with an optional floor."""
+    assert [quantize_pow2(n) for n in (1, 2, 3, 4, 5, 8, 9, 1000)] == \
+        [1, 2, 4, 4, 8, 8, 16, 1024]
+    assert quantize_pow2(3, floor=8) == 8
+    assert quantize_pow2(0) == 1
+
+
+def test_env_knobs_registered():
+    """The scheduler's env knobs are in the central registry with int
+    validation (tests/test_env.py separately pins the README table)."""
+    for name in ("REPRO_SERVE_MAX_BATCH", "REPRO_SERVE_QUEUE_DEPTH"):
+        knob = ENV_KNOBS[name]
+        assert knob.kind == "int" and knob.minimum == 1
+        assert knob.parse("4") == 4
+        with pytest.raises(ValueError, match=">= 1"):
+            knob.parse("0")
+
+
+# --------------------------------------------------------------- host-side
+# front-door behavior against a duck-typed corpus (no launch, no jax mesh)
+
+
+class _FakeCorpus:
+    """Just enough ServingCorpus surface for submit-side tests."""
+    P, block, d = 4, 16, 8
+
+
+def test_submit_validation_messages():
+    sched = BatchScheduler(_FakeCorpus())
+    q = np.zeros(8, np.float32)
+    with pytest.raises(ValueError, match="kind"):
+        sched.submit(q, kind="knn")
+    with pytest.raises(ValueError, match="metric"):
+        sched.submit(q, kind="topk", topk=3, metric="cosine")
+    with pytest.raises(ValueError, match="8 features"):
+        sched.submit(np.zeros(5, np.float32), kind="topk", topk=3)
+    with pytest.raises(ValueError, match="topk >= 1"):
+        sched.submit(q, kind="topk", topk=0)
+    with pytest.raises(ValueError, match="needs a threshold"):
+        sched.submit(q, kind="threshold")
+    with pytest.raises(ValueError, match="capacity"):
+        sched.submit(q, kind="threshold", threshold=1.0, capacity=0)
+
+
+def test_admission_backpressure_counters():
+    """Bounded queue: the (max_queue+1)-th waiting request raises
+    AdmissionError naming the depth knob; counters record both sides
+    (DESIGN.md section 15.1)."""
+    sched = BatchScheduler(_FakeCorpus(), max_queue=2)
+    q = np.zeros(8, np.float32)
+    sched.submit(q, kind="topk", topk=1)
+    sched.submit(q, kind="topk", topk=1)
+    with pytest.raises(AdmissionError, match="REPRO_SERVE_QUEUE_DEPTH"):
+        sched.submit(q, kind="topk", topk=1)
+    assert sched.counters["admitted"] == 2
+    assert sched.counters["rejected"] == 1
+    assert sched.queue_depth == 2
+
+
+def test_scheduler_env_knob_defaults(monkeypatch):
+    """max_batch / max_queue default from the env registry; explicit
+    arguments win over the knobs."""
+    monkeypatch.setenv("REPRO_SERVE_MAX_BATCH", "7")
+    monkeypatch.setenv("REPRO_SERVE_QUEUE_DEPTH", "9")
+    sched = BatchScheduler(_FakeCorpus())
+    assert (sched.max_batch, sched.max_queue) == (7, 9)
+    sched = BatchScheduler(_FakeCorpus(), max_batch=3, max_queue=4)
+    assert (sched.max_batch, sched.max_queue) == (3, 4)
+    with pytest.raises(ValueError, match="narrower than"):
+        BatchScheduler(_FakeCorpus(), max_batch=8, pad_queries_to=4)
+
+
+# ------------------------------------------------------------- subprocess
+# packed launches against a real fake-device mesh
+
+
+def test_batching_selfcheck_small_mesh():
+    """The module selfcheck end to end at P=5 (ragged tail): packed
+    heterogeneous batches bit-exact vs solo oracles, escalation ladder,
+    deadline expiry/partial, admission, async loop."""
+    out = run_sub("from repro.serving.batching import main; main()", 5)
+    assert "batching selfcheck OK: P=5" in out
+
+
+def test_heterogeneous_pack_bit_exact_vs_oracles():
+    """A single packed step with mixed k, mixed thresholds, both
+    metrics returns bit-identical indices/scores to issuing each
+    request alone (the ISSUE 8 acceptance criterion), on O(log)
+    program keys."""
+    code = """
+import numpy as np, jax
+from repro.serving import ServingCorpus
+from repro.serving.batching import BatchScheduler
+
+P, block, d = 4, 16, 12
+rng = np.random.default_rng(7)
+corpus = rng.normal(size=(P * block - 5, d)).astype(np.float32)
+mesh = jax.make_mesh((P,), ("q",), axis_types=(jax.sharding.AxisType.Auto,))
+sc = ServingCorpus.build(corpus, mesh, block=block)
+
+sched = BatchScheduler(sc, max_batch=32)
+specs = ([dict(kind="topk", topk=k, metric=m)
+          for m in ("dot", "l2") for k in (1, 2, 5, 7)] +
+         [dict(kind="threshold", threshold=t, capacity=c, metric=m)
+          for m in ("dot", "l2") for t, c in ((3.0, None), (-1e9, 4))])
+reqs = [sched.submit(rng.normal(size=(d,)), **s) for s in specs]
+sched.drain()
+for req in reqs:
+    res = req.result(0)
+    assert res.ok, (req.rid, res.status)
+    if req.kind == "topk":
+        ov, oi = sc.query(req.query[None], topk=req.topk, metric=req.metric)
+        assert np.array_equal(res.indices, np.asarray(oi)[0]), req.rid
+        assert np.array_equal(res.scores, np.asarray(ov)[0]), req.rid
+    else:
+        ov, oi, oc = sc.query_threshold(req.query[None],
+                                        threshold=req.threshold,
+                                        metric=req.metric)
+        n = int(np.asarray(oc)[0])
+        assert res.count == n, (req.rid, res.count, n)
+        assert np.array_equal(res.indices, np.asarray(oi)[0, :n]), req.rid
+        assert np.array_equal(res.scores, np.asarray(ov)[0, :n]), req.rid
+# mixed batch stayed on pow2-bucketed program keys
+assert len(sched.program_keys) <= 10, sched.program_keys
+assert sched.counters["launches"] < len(reqs), sched.counters
+print("PACK-ORACLE-OK", len(sched.program_keys))
+"""
+    assert "PACK-ORACLE-OK" in run_sub(code, 4)
+
+
+def test_deadline_preemption_semantics():
+    """Manual clock: a request past deadline at assembly expires with
+    sentinels and zero batch slots; an overflowing range query whose
+    budget runs out mid-escalation returns partial (truncated prefix,
+    true count); live batchmates are untouched."""
+    code = """
+import numpy as np, jax
+from repro.kernels.ref import IDX_SENTINEL, NEG_INF
+from repro.serving import ServingCorpus
+from repro.serving.batching import BatchScheduler
+
+P, block, d = 2, 16, 8
+rng = np.random.default_rng(11)
+corpus = rng.normal(size=(P * block, d)).astype(np.float32)
+mesh = jax.make_mesh((P,), ("q",), axis_types=(jax.sharding.AxisType.Auto,))
+sc = ServingCorpus.build(corpus, mesh, block=block)
+
+t = [0.0]
+sched = BatchScheduler(sc, max_batch=8, clock=lambda: t[0])
+live = sched.submit(rng.normal(size=(d,)), kind="topk", topk=3)
+dead = sched.submit(rng.normal(size=(d,)), kind="topk", topk=3,
+                    deadline_s=1.0)
+t[0] = 5.0
+sched.drain()
+r_live, r_dead = live.result(0), dead.result(0)
+assert r_dead.status == "expired" and not r_dead.ok
+assert (r_dead.indices == IDX_SENTINEL).all()
+assert (r_dead.scores == NEG_INF).all()
+ov, oi = sc.query(live.query[None], topk=3)
+assert np.array_equal(r_live.indices, np.asarray(oi)[0])
+assert sched.counters["expired"] == 1 and sched.counters["done"] == 1
+
+# partial: clock steps 0.5s per read -> deadline lands between the
+# launch and its escalation decision
+t2 = [0.0]
+def clock2():
+    t2[0] += 0.5
+    return t2[0]
+sched2 = BatchScheduler(sc, max_batch=8, clock=clock2)
+part = sched2.submit(rng.normal(size=(d,)), kind="threshold",
+                     threshold=-1e9, capacity=1, deadline_s=0.6)
+sched2.step()
+res = part.result(0)
+assert res.status == "partial", res.status
+assert res.count == sc.n_valid and len(res.indices) < res.count
+_, oi, _ = sc.query_threshold(part.query[None], threshold=-1e9)
+assert np.array_equal(res.indices, np.asarray(oi)[0, :len(res.indices)])
+assert sched2.counters["partial"] == 1
+print("DEADLINE-OK")
+"""
+    assert "DEADLINE-OK" in run_sub(code, 2)
+
+
+def test_block_update_validation():
+    """replace_block/append_block reject misshapen or oversized payloads
+    at the handle layer, naming the block capacity (ISSUE 8
+    satellite)."""
+    code = """
+import numpy as np, jax
+from repro.serving import ServingCorpus
+
+P, block, d = 2, 8, 4
+rng = np.random.default_rng(0)
+corpus = rng.normal(size=(P * block - 4, d)).astype(np.float32)
+mesh = jax.make_mesh((P,), ("q",), axis_types=(jax.sharding.AxisType.Auto,))
+sc = ServingCorpus.build(corpus, mesh, block=block)
+
+for bad, frag in [
+        (np.zeros((block + 1, d), np.float32), "block capacity is 8"),
+        (np.zeros((block, d + 1), np.float32), "[rows, 4]"),
+        (np.zeros((block,), np.float32), "[rows, 4]")]:
+    try:
+        sc.replace_block(0, bad)
+    except ValueError as e:
+        assert frag in str(e), (frag, str(e))
+    else:
+        raise AssertionError(f"no ValueError for shape {bad.shape}")
+    try:
+        sc.append_block(bad)
+    except ValueError as e:
+        assert frag in str(e), (frag, str(e))
+    else:
+        raise AssertionError(f"append: no ValueError for {bad.shape}")
+
+try:
+    sc.replace_block(P, np.zeros((1, d), np.float32))
+except ValueError as e:
+    assert "out of range" in str(e)
+else:
+    raise AssertionError("no ValueError for bad block id")
+
+# the happy path still works after the rejections
+sc.replace_block(0, rng.normal(size=(block, d)).astype(np.float32))
+v, i = sc.query(rng.normal(size=(1, d)).astype(np.float32), topk=2)
+assert np.asarray(v).shape == (1, 2)
+print("BLOCK-VALIDATE-OK")
+"""
+    assert "BLOCK-VALIDATE-OK" in run_sub(code, 2)
+
+
+def test_threshold_capacity_quantized_program_keys():
+    """Engine-side satellite: query_threshold quantizes requested and
+    escalated capacities onto the pow2 ladder, so an escalating query
+    reuses O(log N) compiled programs instead of flooding the LRU with
+    raw-capacity keys."""
+    code = """
+import numpy as np, jax
+from repro.serving import ServingCorpus
+from repro.serving.engine import threshold_fn
+
+P, block, d = 2, 32, 8
+rng = np.random.default_rng(1)
+corpus = rng.normal(size=(P * block, d)).astype(np.float32)
+mesh = jax.make_mesh((P,), ("q",), axis_types=(jax.sharding.AxisType.Auto,))
+sc = ServingCorpus.build(corpus, mesh, block=block)
+q = rng.normal(size=(2, d)).astype(np.float32)
+
+threshold_fn.cache_clear()
+# raw capacities 5,6,7,8 all collapse onto the single pow2-8 program
+for cap in (5, 6, 7, 8):
+    v, i, c = sc.query_threshold(q, threshold=1e9, capacity=cap)
+    assert np.asarray(v).shape[1] == 8, np.asarray(v).shape
+assert threshold_fn.cache_info().misses == 1, threshold_fn.cache_info()
+
+# escalation from capacity=1 doubles along the same ladder: 1, 2, 4,
+# ... total -- every relaunch hits a pow2 (or total-clamped) shape
+threshold_fn.cache_clear()
+v, i, c = sc.query_threshold(q, threshold=-1e9, capacity=1)
+total = P * block
+assert int(np.asarray(c)[0]) == total
+assert np.asarray(v).shape[1] == total
+misses = threshold_fn.cache_info().misses
+import math
+assert misses <= math.ceil(math.log2(total)) + 1, (misses, total)
+print("CAP-QUANTIZE-OK", misses)
+"""
+    assert "CAP-QUANTIZE-OK" in run_sub(code, 2)
