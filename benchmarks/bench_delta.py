@@ -1,0 +1,96 @@
+"""Incremental delta-sweep microbenchmark: maintenance cost of a
+standing output under churn (DESIGN.md section 16.5) — the sixth member
+of the benchmark JSON family.
+
+For each workload (dense reduce, sparse join, k-NN graph), each
+P in {8, 13}, and 1, 2, and 4 dirty blocks, the bench times one block
+update folded through a standing ``core.delta.DeltaIndex`` against a
+from-scratch recompute of all C(P,2)+P tiles, and reports the tiles
+each path swept — the delta schedule touches ``|D|*P - C(|D|,2) <=
+|D|*P`` tiles, which is the paper-side point of the whole subsystem
+(output-sensitive cost, arXiv:1602.01443).  Bit-exactness of the
+maintained output against the recompute is asserted before any number
+is recorded — a wrong fast update is not a result.  Writes
+BENCH_delta.json at the repo root (CI uploads it next to the other
+BENCH_*.json artifacts and diffs it with ``benchmarks.run --compare``).
+"""
+
+from __future__ import annotations
+
+import json
+import statistics
+import time
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+JSON_PATH = ROOT / "BENCH_delta.json"
+
+
+def run(csv_rows, Ps=(8, 13), dirty_counts=(1, 2, 4), reps: int = 3,
+        seed: int = 0):
+    import numpy as np
+
+    from repro.core.delta import DeltaIndex, churn_workload, scratch_fold
+    from repro.core.faults import WORKLOADS
+    from repro.core.placement import get_placement
+
+    results: dict = {"Ps": list(Ps), "dirty_counts": list(dirty_counts),
+                     "mode": "batched", "reps": reps,
+                     "timings_s": {}, "tiles": {}, "speedup": {}}
+    for P in Ps:
+        plc = get_placement("cyclic", P)
+        pk = f"P{P}"
+        results["timings_s"][pk] = {}
+        results["tiles"][pk] = {}
+        results["speedup"][pk] = {}
+        for wl_cls in WORKLOADS:
+            wl = churn_workload(wl_cls, P, seed=seed)
+            index = DeltaIndex(wl, plc)
+            dim = wl.blocks[0].shape[1]
+            rng = np.random.RandomState(seed + P)
+            t_delta: dict = {}
+            t_full: dict = {}
+            tiles: dict = {}
+            for n_dirty in dirty_counts:
+                blocks = [(2 * i + 1) % P for i in range(n_dirty)]
+                ds, fs = [], []
+                for _ in range(reps):
+                    for b in blocks:
+                        rows = wl.blocks[b].shape[0]
+                        index.replace_block(
+                            b, rng.randn(rows, dim).astype(np.float32))
+                    t0 = time.perf_counter()
+                    out = index.apply()
+                    ds.append(time.perf_counter() - t0)
+                    t0 = time.perf_counter()
+                    want = scratch_fold(wl)
+                    fs.append(time.perf_counter() - t0)
+                    assert wl.equal(out, want), (
+                        f"{wl.name} P={P} dirty={n_dirty}: delta output "
+                        "diverged from the from-scratch recompute")
+                n_tiles = index.stats.last_tiles
+                assert n_tiles <= n_dirty * P, (
+                    f"{wl.name} P={P}: {n_tiles} tiles > bound "
+                    f"{n_dirty} * {P}")
+                dk = f"dirty{n_dirty}"
+                t_delta[dk] = statistics.median(ds)
+                t_full[dk] = statistics.median(fs)
+                tiles[dk] = {"delta": n_tiles,
+                             "full": index.stats.tiles_full,
+                             "bound": n_dirty * P}
+            results["timings_s"][pk][wl.name] = {
+                "delta": t_delta, "full_recompute": t_full}
+            results["tiles"][pk][wl.name] = tiles
+            results["speedup"][pk][wl.name] = {
+                dk: (t_full[dk] / t_delta[dk] if t_delta[dk] > 0
+                     else float("inf"))
+                for dk in t_delta}
+            d1 = f"dirty{dirty_counts[0]}"
+            csv_rows.append((
+                f"delta_{wl.name}_P{P}",
+                f"{t_delta[d1] * 1e6:.0f}",
+                f"full_us={t_full[d1] * 1e6:.0f}"
+                f";tiles={tiles[d1]['delta']}/{tiles[d1]['full']}"
+                f";speedup={t_full[d1] / max(t_delta[d1], 1e-12):.2f}"))
+    JSON_PATH.write_text(json.dumps(results, indent=2) + "\n")
+    return results

@@ -28,6 +28,11 @@ Prints ``name,us_per_call,derived`` CSV rows:
                          chaos-plan wall time, recovery latency, blocks
                          re-replicated (writes BENCH_faults.json;
                          ``--fast-faults`` runs only this one, for CI)
+  bench_delta          — incremental delta-sweep: standing-index update
+                         vs from-scratch recompute wall time and tiles
+                         swept at 1/2/4 dirty blocks (writes
+                         BENCH_delta.json; ``--fast-delta`` runs only
+                         this one, for CI)
   bench_attention_comm — comm-volume model: quorum vs ring vs all-gather
 
 ``--compare`` snapshots the committed BENCH_*.json files before running,
@@ -57,7 +62,8 @@ from pathlib import Path
 ROOT = Path(__file__).resolve().parents[1]
 BENCH_FILES = ("BENCH_engine.json", "BENCH_serve.json",
                "BENCH_latency.json", "BENCH_sparse.json",
-               "BENCH_knn.json", "BENCH_faults.json")
+               "BENCH_knn.json", "BENCH_faults.json",
+               "BENCH_delta.json")
 COMPARE_TOLERANCE = 1.5
 
 
@@ -171,15 +177,15 @@ def compare_results(committed, tolerance: float = COMPARE_TOLERANCE) -> int:
 
 def main() -> None:
     """CLI driver (see module docstring for flags)."""
-    from . import (bench_attention_comm, bench_attention_hlo, bench_engine,
-                   bench_faults, bench_knn, bench_latency, bench_memory,
-                   bench_pcit_speedup, bench_quorum, bench_serve,
-                   bench_sparse)
+    from . import (bench_attention_comm, bench_attention_hlo, bench_delta,
+                   bench_engine, bench_faults, bench_knn, bench_latency,
+                   bench_memory, bench_pcit_speedup, bench_quorum,
+                   bench_serve, bench_sparse)
     rows = [("name", "us_per_call", "derived")]
     modules = [bench_quorum, bench_memory, bench_attention_comm,
                bench_attention_hlo, bench_engine, bench_serve,
                bench_latency, bench_sparse, bench_knn, bench_faults,
-               bench_pcit_speedup]
+               bench_delta, bench_pcit_speedup]
     if "--fast-engine" in sys.argv:
         modules = [bench_engine]
     elif "--fast-serve" in sys.argv:
@@ -192,6 +198,8 @@ def main() -> None:
         modules = [bench_knn]
     elif "--fast-faults" in sys.argv:
         modules = [bench_faults]
+    elif "--fast-delta" in sys.argv:
+        modules = [bench_delta]
     elif "--fast" in sys.argv:
         modules = modules[:3]
     committed = snapshot_committed() if "--compare" in sys.argv else None

@@ -41,6 +41,7 @@ MUST_CITE_DESIGN = [
     "core/knn.py",
     "core/env.py",
     "core/faults.py",
+    "core/delta.py",
     "launch/elastic.py",
     "serving/cover.py",
     "serving/batching.py",

@@ -31,6 +31,7 @@ from typing import Callable
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax import lax
 
 from ..obs import trace as obs_trace
@@ -96,6 +97,23 @@ class DenseReduceEmitter(SweepEmitter):
         self.lo_slots = jnp.asarray(schedule.pair_slots[:, 0])
         self.hi_slots = jnp.asarray(schedule.pair_slots[:, 1])
         self.is_self = jnp.asarray(schedule.pair_diff == 0)
+
+    @staticmethod
+    def delta_retract(standing, stale, ctx=None):
+        """Subtract a stale tile partial from the running float64 total
+        — the additive group's retract (DESIGN.md section 16.2).  The
+        delta driver publishes the canonical-order refold of its scalar
+        ledger (float addition is not associative), keeping the
+        standing result bit-exact; this running total is the O(1)
+        fast-path estimate the refold is cross-checked against."""
+        return np.float64(standing) - np.float64(stale)
+
+    @staticmethod
+    def delta_fold(standing, fresh, ctx=None):
+        """Add a fresh tile partial to the running float64 total — the
+        additive monoid's fold, the subtract-then-add counterpart of
+        :meth:`delta_retract` (DESIGN.md section 16.2)."""
+        return np.float64(standing) + np.float64(fresh)
 
     def batch(self, quorum):
         """All n_pairs interactions in one vmapped call + segment_sum over

@@ -1,0 +1,667 @@
+"""Incremental delta-sweep: dirty-block scheduling that maintains
+standing sweep outputs under churn (DESIGN.md section 16).
+
+The batch workloads recompute all C(P,2)+P pair tiles whenever a block
+changes, even though ``serving/stream.py`` already delivers block-level
+updates.  Ullman's output-sensitive "Some Pairs" framing
+(arXiv:1602.01443) says the correct cost is proportional to the pairs
+actually touched: a set D of dirty blocks invalidates exactly the tiles
+with >= 1 endpoint in D — ``|D|*P - C(|D|,2) <= |D|*P`` tiles, not
+O(P^2).  This module owns that schedule and the drivers around it:
+
+  * :func:`dirty_tiles` — the one shared dirty-tile enumerator (sorted,
+    deterministic, canonical (x, y) x <= y order) that both the delta
+    scheduler here and the failure-recovery path of ``core/faults.py``
+    use (a dead device's lost partials are just another dirty set).
+  * :func:`owner_partition` — the exactly-once tile -> owner partition
+    over the k holder quorums (``Placement.owner_of`` /
+    ``weighted_owner_table``), shared with the fault-tolerant driver.
+  * :func:`delta_sweep` — run only the dirty tiles, grouped into the
+    engine mode's round structure (:func:`core.sweep.sweep_rounds`).
+  * :class:`DeltaIndex` — a continuously maintained standing output:
+    a per-tile partials ledger plus each emitter's monoid patch rule
+    (``delta_retract``/``delta_fold`` on the ``SweepEmitter`` classes):
+    subtract-then-add for the additive dense reduce (published via a
+    canonical-order refold of the ledger, which is what keeps the
+    result bit-exact under float non-associativity), a hit-set patch
+    for the threshold join, and the per-row candidate-refresh rule for
+    the k-NN graph (rows whose neighbor list cites a dirty block are
+    rebuilt from the retained per-tile candidate ledger — standing-list
+    survivors alone are *not* sufficient, DESIGN.md section 16.4).
+
+The headline check is the churn-chaos differential selfcheck
+(``python -m repro.core.delta``): R random replace/append updates
+across every registered placement x engine mode x P in
+{4, 5, 7, 8, 12, 13} and all three workloads, asserting after every
+update that the incrementally maintained output is bit-identical to a
+from-scratch recompute and that the delta sweep touched at most
+``|dirty| * P`` tiles.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import (Any, Dict, Iterable, List, Mapping, Optional, Sequence,
+                    Tuple)
+
+import numpy as np
+
+from . import env as env_mod
+from .allpairs import DenseReduceEmitter
+from .knn import KnnEmitter
+from .placement import (Placement, get_placement, registered_placements,
+                        resolve_placement, weighted_owner_table)
+from .sparse import ThresholdJoinEmitter
+from .sweep import ENGINE_MODES, sweep_rounds
+
+__all__ = [
+    "DELTA_P",
+    "dirty_tiles",
+    "owner_partition",
+    "delta_rounds",
+    "delta_sweep",
+    "DeltaStats",
+    "DeltaIndex",
+    "churn_workload",
+    "churn_selfcheck",
+]
+
+# the churn matrix: odd/even P, the projective planes 7 and 13, the
+# affine plane 12, and the small even P=4 (ISSUE acceptance set)
+DELTA_P = (4, 5, 7, 8, 12, 13)
+
+_SENT_I = np.iinfo(np.int64).max
+
+# workload name -> the SweepEmitter class carrying its monoid patch rule
+_EMITTER_OF = {
+    "dense": DenseReduceEmitter,
+    "sparse": ThresholdJoinEmitter,
+    "knn": KnnEmitter,
+}
+
+
+def dirty_tiles(placement: Optional[Placement], dirty: Iterable[int],
+                P: Optional[int] = None) -> List[Tuple[int, int]]:
+    """All pair tiles (x, y), x <= y, with at least one endpoint block
+    in ``dirty``, in sorted canonical order (DESIGN.md section 16.1).
+
+    The one shared dirty-tile enumerator: the delta scheduler runs
+    exactly these tiles, and the failure recovery of ``core/faults.py``
+    scans the same set for a dead device's lost work (every pair a
+    device can own or compute has >= 1 endpoint among its resident
+    blocks).  Deterministic: sorted ascending, the same canonical
+    (x, y) x <= y order ``PairWorkload.canonical_pairs`` folds in and
+    the same tie-breaks ``scheduler.reassign`` sees (sorted candidate
+    lists), so plans built on top of it are stable.  Tile count is
+    ``|D|*P - C(|D|, 2) <= |D|*P`` — never O(P^2) for ``|D| < P/2``.
+
+    ``P`` defaults to ``placement.P`` (pass it explicitly when no
+    placement object is at hand — enumeration needs only the block
+    count).
+    """
+    if P is None:
+        if placement is None:
+            raise ValueError("need a placement or an explicit P")
+        P = placement.P
+    D = {int(b) for b in dirty}
+    for b in D:
+        if not 0 <= b < P:
+            raise ValueError(f"dirty block {b} outside [0, {P})")
+    return [(x, y) for x in range(P) for y in range(x, P)
+            if x in D or y in D]
+
+
+def owner_partition(placement: Placement,
+                    pairs: Optional[Sequence[Tuple[int, int]]] = None, *,
+                    weights: Optional[Sequence[float]] = None
+                    ) -> Dict[Tuple[int, int], int]:
+    """The exactly-once tile -> owner map over the k holder quorums
+    (DESIGN.md section 16.1).
+
+    Every tile is assigned to exactly one device that holds both
+    endpoint blocks — ``Placement.owner_of`` (or the capacity-weighted
+    ``weighted_owner_table`` when ``weights`` is given), the same
+    partition the batch engines and the fault-tolerant driver of
+    ``core/faults.py`` execute under.  ``pairs`` defaults to every
+    canonical tile; pass a dirty-tile subset to partition just a delta
+    schedule.
+    """
+    P = placement.P
+    if pairs is None:
+        pairs = [(x, y) for x in range(P) for y in range(x, P)]
+    if weights is not None:
+        table = weighted_owner_table(placement, weights)
+        return {(x, y): int(table[x, y]) for (x, y) in pairs}
+    return {(x, y): int(placement.owner_of(x, y)) for (x, y) in pairs}
+
+
+def delta_rounds(placement: Placement, tiles: Sequence[Tuple[int, int]],
+                 mode: str) -> List[List[Tuple[int, int]]]:
+    """Group dirty tiles into the engine mode's synchronization rounds
+    (DESIGN.md section 16.1).
+
+    A tile lands in the round its difference class occupies under
+    :func:`core.sweep.sweep_rounds` — batched: one fused round, overlap:
+    the gather-shift ready groups, scan: one round per tile — so a delta
+    sweep observes the same failure/checkpoint boundaries as a full
+    sweep in the same mode.  Within a round tiles stay in canonical
+    sorted order; empty rounds are dropped.  Outputs are mode-invariant
+    (the fold is canonical-order), which the churn selfcheck asserts.
+    """
+    if mode not in ENGINE_MODES:
+        raise ValueError(f"mode must be one of {ENGINE_MODES}, got {mode!r}")
+    P = placement.P
+    sched = placement.schedule()
+    rounds = sweep_rounds(sched, mode)
+    sidx_of_diff = {int(d): s for s, d in enumerate(sched.pair_diff)}
+    round_of_sidx = {s: r for r, grp in enumerate(rounds) for s in grp}
+    if mode == "scan":
+        # one tile per round, canonical order (the scan carries state
+        # through one pair per step — the round index is the step)
+        return [[t] for t in sorted(tiles)]
+    grouped: Dict[int, List[Tuple[int, int]]] = {}
+    for t in tiles:
+        d = (t[1] - t[0]) % P
+        dd = min(d, P - d) if P > 1 else 0
+        grouped.setdefault(round_of_sidx[sidx_of_diff[dd]], []).append(t)
+    return [sorted(grouped[r]) for r in sorted(grouped)]
+
+
+def delta_sweep(workload, placement: Placement, dirty: Iterable[int], *,
+                mode: str = "batched",
+                owner_map: Optional[Mapping[Tuple[int, int], int]] = None,
+                stats: Optional["DeltaStats"] = None
+                ) -> Dict[Tuple[int, int], Any]:
+    """Recompute only the dirty tiles' partials (DESIGN.md section 16.2).
+
+    Enumerates :func:`dirty_tiles`, groups them into ``mode``'s round
+    structure (:func:`delta_rounds`), and computes each tile's fresh
+    partial at its owner (:func:`owner_partition` when ``owner_map`` is
+    not supplied), accounting tiles swept and per-device work into
+    ``stats``.  Returns ``{tile: fresh partial}`` — the ledger patch a
+    :class:`DeltaIndex` folds into its standing output.  Partials are
+    pure functions of block contents (``PairWorkload.pair_partial``),
+    so the patch is bit-identical no matter which mode shaped the
+    rounds.
+    """
+    tiles = dirty_tiles(placement, dirty)
+    if owner_map is None:
+        owner_map = owner_partition(placement, tiles)
+    fresh: Dict[Tuple[int, int], Any] = {}
+    for rnd in delta_rounds(placement, tiles, mode):
+        for t in rnd:
+            x, y = t
+            fresh[t] = workload.pair_partial(
+                x, y, workload.blocks[x], workload.blocks[y])
+            if stats is not None:
+                o = int(owner_map[t])
+                stats.tiles_by_device[o] = stats.tiles_by_device.get(o, 0) + 1
+    if stats is not None:
+        stats.tiles_swept += len(fresh)
+        stats.last_tiles = len(fresh)
+    return fresh
+
+
+@dataclasses.dataclass
+class DeltaStats:
+    """Counters a :class:`DeltaIndex` accumulates across updates — the
+    quantities ``benchmarks/bench_delta.py`` reports (DESIGN.md
+    section 16.5)."""
+
+    updates: int = 0               # apply() calls that saw dirty blocks
+    tiles_swept: int = 0           # dirty tiles recomputed, total
+    last_tiles: int = 0            # tiles swept by the latest apply()
+    tiles_full: int = 0            # C(P,2)+P — the full-sweep tile count
+    full_rebuilds: int = 0         # max-dirty fallbacks to a full sweep
+    rows_refreshed: int = 0        # k-NN rows rebuilt from the ledger
+    rows_merged: int = 0           # k-NN rows patched by the fast merge
+    hits_retracted: int = 0        # join rows retracted from the hit set
+    hits_inserted: int = 0         # join rows inserted into the hit set
+    tiles_by_device: Dict[int, int] = dataclasses.field(default_factory=dict)
+
+    def as_dict(self) -> Dict[str, Any]:
+        """The counters as a plain dict (for JSON benchmark output)."""
+        return dataclasses.asdict(self)
+
+
+def _max_dirty_pct_default() -> int:
+    val = env_mod.read_knob("REPRO_DELTA_MAX_DIRTY_PCT")
+    return 50 if val is None else int(val)
+
+
+class DeltaIndex:
+    """A continuously maintained sweep output (DESIGN.md section 16).
+
+    Holds a per-tile partials **ledger** for one ``PairWorkload``
+    (``core/faults.py``'s dense reduce, threshold join, or k-NN graph)
+    plus the standing folded output.  Block updates arrive through
+    :meth:`replace_block` (new contents for one block — an append is a
+    replace that grows the block within its capacity span) or
+    :meth:`mark_dirty` (the ``serving/stream.py`` listener form, when
+    the caller mutates ``workload.blocks`` itself); :meth:`apply` then
+    recomputes only the dirty tiles (:func:`delta_sweep`) and patches
+    the standing output under the workload emitter's monoid:
+
+      * dense — ``DenseReduceEmitter.delta_retract``/``delta_fold``
+        subtract-then-add a running total; the *published* result is
+        the canonical-order refold of the scalar ledger, which is what
+        keeps it bit-exact vs a from-scratch recompute (float addition
+        is not associative; DESIGN.md section 16.2).
+      * join — ``ThresholdJoinEmitter`` retracts the stale (i, j) rows
+        of the dirty tiles from the hit set and inserts the fresh ones
+        (a pair's tile is unique, so the patch is an exact set
+        difference/union; DESIGN.md section 16.3).
+      * k-NN — rows living in a dirty block, and rows whose standing
+        neighbor list cites one, are rebuilt from the retained per-tile
+        candidate ledger; every other row merges the fresh dirty-tile
+        candidates into its standing list (``KnnEmitter.delta_fold``,
+        exact because top-k under the strict (-score, index) order is
+        an associative-commutative monoid; DESIGN.md section 16.4).
+
+    When more than ``max_dirty_pct`` percent of the blocks are dirty
+    (``REPRO_DELTA_MAX_DIRTY_PCT``, default 50), the delta schedule
+    approaches the full O(P^2) sweep and the index falls back to a full
+    rebuild — same bits, fewer bookkeeping passes.
+    """
+
+    def __init__(self, workload, placement: Placement, *,
+                 mode: str = "batched",
+                 weights: Optional[Sequence[float]] = None,
+                 max_dirty_pct: Optional[int] = None):
+        if mode not in ENGINE_MODES:
+            raise ValueError(
+                f"mode must be one of {ENGINE_MODES}, got {mode!r}")
+        if workload.P != placement.P:
+            raise ValueError(
+                f"workload P={workload.P} != placement P={placement.P}")
+        if workload.name not in _EMITTER_OF:
+            raise ValueError(
+                f"workload {workload.name!r} has no delta emitter rule "
+                f"(supported: {tuple(_EMITTER_OF)})")
+        self.workload = workload
+        self.placement = placement
+        self.mode = mode
+        self.owner_map = owner_partition(placement, weights=weights)
+        self.max_dirty_pct = (
+            _max_dirty_pct_default() if max_dirty_pct is None
+            else int(max_dirty_pct))
+        if not 0 <= self.max_dirty_pct <= 100:
+            raise ValueError(
+                f"max_dirty_pct must be in [0, 100], got {self.max_dirty_pct}")
+        self._emitter = _EMITTER_OF[workload.name]
+        self.stats = DeltaStats(
+            tiles_full=len(workload.canonical_pairs()))
+        self.pending: set = set()
+        self.ledger: Dict[Tuple[int, int], Any] = {}
+        self._standing: Any = None
+        self._running_total: Optional[np.float64] = None  # dense fast path
+        self._best_s: Optional[np.ndarray] = None         # knn standing
+        self._best_i: Optional[np.ndarray] = None
+        self._rebuild_all()
+
+    # -- block geometry ---------------------------------------------------
+    def span_of(self, b: int) -> int:
+        """Block ``b``'s capacity span in global-index space — the id
+        range ``[offsets[b], offsets[b] + span)`` stays stable under
+        churn, so appends never renumber other blocks (DESIGN.md
+        section 16.1)."""
+        wl = self.workload
+        if not 0 <= b < wl.P:
+            raise ValueError(f"block {b} outside [0, {wl.P})")
+        end = wl.offsets[b + 1] if b + 1 < wl.P else wl.n
+        return int(end - wl.offsets[b])
+
+    # -- update intake ----------------------------------------------------
+    def mark_dirty(self, b: int) -> None:
+        """Record block ``b`` as dirty without staging data — the
+        ``serving.stream.register_dirty_listener`` callback form; the
+        caller is responsible for refreshing ``workload.blocks[b]``
+        before :meth:`apply` (DESIGN.md section 16.5)."""
+        if not 0 <= int(b) < self.workload.P:
+            raise ValueError(f"block {b} outside [0, {self.workload.P})")
+        self.pending.add(int(b))
+
+    def replace_block(self, b: int, data: np.ndarray) -> None:
+        """Stage new contents for block ``b`` (rows <= the block's
+        capacity span) and mark it dirty; an append is a replace with
+        the grown row set (DESIGN.md section 16.1).  The sweep itself
+        runs at the next :meth:`apply`."""
+        wl = self.workload
+        data = np.ascontiguousarray(np.asarray(data, np.float32))
+        if data.ndim != 2 or data.shape[1] != wl.blocks[0].shape[1]:
+            raise ValueError(
+                f"block data must be [rows, {wl.blocks[0].shape[1]}], "
+                f"got {data.shape}")
+        span = self.span_of(b)
+        if data.shape[0] > span:
+            raise ValueError(
+                f"block {b} holds at most {span} rows, got {data.shape[0]}")
+        wl.blocks[b] = data
+        self.pending.add(int(b))
+
+    # -- the delta update -------------------------------------------------
+    def apply(self) -> Any:
+        """Fold all pending dirty blocks into the standing output and
+        return it (DESIGN.md section 16.2): sweep only the dirty tiles
+        (:func:`delta_sweep` under this index's engine mode), patch the
+        ledger, and run the workload's retract/fold rule — or a full
+        rebuild when the dirty fraction exceeds ``max_dirty_pct``.  The
+        result is bit-identical to a from-scratch recompute of the
+        current blocks (the churn selfcheck's differential contract)."""
+        dirty = sorted(self.pending)
+        self.pending.clear()
+        if not dirty:
+            return self.result
+        self.stats.updates += 1
+        P = self.workload.P
+        if 100 * len(dirty) > self.max_dirty_pct * P:
+            self.stats.full_rebuilds += 1
+            self._rebuild_all()
+            return self.result
+        fresh = delta_sweep(self.workload, self.placement, dirty,
+                            mode=self.mode, owner_map=self.owner_map,
+                            stats=self.stats)
+        patch = getattr(self, "_patch_" + self.workload.name)
+        patch(dirty, fresh)
+        return self.result
+
+    @property
+    def result(self) -> Any:
+        """The standing output, always equal to a from-scratch fold of
+        the current blocks (DESIGN.md section 16): the dense float64
+        total, the sorted (i, j) join hit set, or the [N, topk] k-NN
+        index matrix."""
+        if self.workload.name == "knn":
+            return self._best_i
+        return self._standing
+
+    # -- full (re)build ---------------------------------------------------
+    def _rebuild_all(self) -> None:
+        wl = self.workload
+        pairs = wl.canonical_pairs()
+        self.ledger = {
+            (x, y): wl.pair_partial(x, y, wl.blocks[x], wl.blocks[y])
+            for (x, y) in pairs}
+        self.stats.tiles_swept += len(pairs)
+        self.stats.last_tiles = len(pairs)
+        if wl.name == "knn":
+            n, topk = wl.n, wl.topk
+            self._best_s = np.full((n, topk), -np.inf, np.float32)
+            self._best_i = np.full((n, topk), _SENT_I, np.int64)
+            self._knn_rebuild_rows(np.ones(n, bool))
+        else:
+            self._standing = wl.fold(self.ledger)
+            if wl.name == "dense":
+                self._running_total = np.float64(self._standing)
+
+    # -- per-workload patch rules ----------------------------------------
+    def _patch_dense(self, dirty: List[int],
+                     fresh: Dict[Tuple[int, int], Any]) -> None:
+        # subtract-then-add keeps an O(|delta|) running total (the
+        # additive monoid); the published standing result is the
+        # canonical-order refold of the scalar ledger — bit-exact under
+        # float non-associativity (DESIGN.md section 16.2)
+        emit = self._emitter
+        total = self._running_total
+        for t in sorted(fresh):
+            total = emit.delta_retract(total, self.ledger[t])
+            total = emit.delta_fold(total, fresh[t])
+            self.ledger[t] = fresh[t]
+        self._running_total = np.float64(total)
+        self._standing = self.workload.fold(self.ledger)
+
+    def _patch_sparse(self, dirty: List[int],
+                      fresh: Dict[Tuple[int, int], Any]) -> None:
+        # hit-set patch: a global pair (i, j) lives in exactly one tile,
+        # so retract-stale / insert-fresh is an exact set difference and
+        # union (DESIGN.md section 16.3)
+        emit = self._emitter
+        order = sorted(fresh)
+        stale_rows = [self.ledger[t] for t in order]
+        fresh_rows = [fresh[t] for t in order]
+        stale = (np.concatenate(stale_rows, axis=0) if stale_rows
+                 else np.zeros((0, 2), np.int64))
+        ins = (np.concatenate(fresh_rows, axis=0) if fresh_rows
+               else np.zeros((0, 2), np.int64))
+        standing = emit.delta_retract(self._standing, stale)
+        self._standing = emit.delta_fold(standing, ins)
+        self.stats.hits_retracted += int(stale.shape[0])
+        self.stats.hits_inserted += int(ins.shape[0])
+        for t in order:
+            self.ledger[t] = fresh[t]
+
+    def _patch_knn(self, dirty: List[int],
+                   fresh: Dict[Tuple[int, int], Any]) -> None:
+        # per-row candidate refresh (DESIGN.md section 16.4): rows in a
+        # dirty block, and rows whose standing list cites one, rebuild
+        # from the per-tile candidate ledger; everyone else merges the
+        # fresh dirty-tile candidates into their standing list
+        wl = self.workload
+        emit = self._emitter
+        for t in sorted(fresh):
+            self.ledger[t] = fresh[t]
+        starts = np.asarray([wl.offsets[b] for b in dirty], np.int64)
+        stops = starts + np.asarray([self.span_of(b) for b in dirty],
+                                    np.int64)
+        refresh = emit.delta_retract((self._best_s, self._best_i),
+                                     (starts, stops))
+        for b, lo, hi in zip(dirty, starts, stops):
+            refresh[lo:hi] = True
+        self.stats.rows_refreshed += int(refresh.sum())
+        self._knn_rebuild_rows(refresh)
+        dirty_set = set(dirty)
+        for t in sorted(fresh):
+            x, y = t
+            part = fresh[t]
+            for side, b in (("x", x), ("y", y)):
+                if b in dirty_set:
+                    continue  # rebuilt above
+                if side == "y" and x == y:
+                    continue  # self tile carries only the x plane
+                ps = part["xs"] if side == "x" else part["ys"]
+                pi = part["xi"] if side == "x" else part["yi"]
+                off = int(wl.offsets[b])
+                nb = wl.blocks[b].shape[0]
+                view_s = self._best_s[off:off + nb]
+                view_i = self._best_i[off:off + nb]
+                m = ~refresh[off:off + nb]
+                if not m.any():
+                    continue
+                ms, mi = emit.delta_fold((view_s[m], view_i[m]),
+                                         (ps[m], pi[m]))
+                view_s[m] = ms
+                view_i[m] = mi
+                self.stats.rows_merged += int(m.sum())
+
+    def _knn_rebuild_rows(self, mask: np.ndarray) -> None:
+        # exact per-row refold from the per-tile candidate ledger: the
+        # global top-k of a row is always contained in the union of its
+        # per-tile top-k lists (DESIGN.md section 16.4)
+        wl = self.workload
+        emit = self._emitter
+        topk = wl.topk
+        for x in range(wl.P):
+            off = int(wl.offsets[x])
+            span = self.span_of(x)
+            msl = mask[off:off + span]
+            if not msl.any():
+                continue
+            # capacity rows past the block's valid count pin to sentinel
+            self._best_s[off:off + span][msl] = -np.inf
+            self._best_i[off:off + span][msl] = _SENT_I
+            nx = wl.blocks[x].shape[0]
+            m = msl[:nx]
+            if not m.any():
+                continue
+            nm = int(m.sum())
+            acc_s = np.full((nm, topk), -np.inf, np.float32)
+            acc_i = np.full((nm, topk), _SENT_I, np.int64)
+            for y in range(wl.P):
+                part = self.ledger[(min(x, y), max(x, y))]
+                if x <= y:
+                    ps, pi = part["xs"], part["xi"]
+                else:
+                    ps, pi = part["ys"], part["yi"]
+                acc_s, acc_i = emit.delta_fold((acc_s, acc_i),
+                                               (ps[m], pi[m]))
+            rows = off + np.nonzero(m)[0]
+            self._best_s[rows] = acc_s
+            self._best_i[rows] = acc_i
+
+
+# ---------------------------------------------------------------------------
+# Churn-chaos differential selfcheck
+# ---------------------------------------------------------------------------
+
+def churn_workload(wl_cls, P: int, *, seed: int = 0, spare: int = 2):
+    """Build a churn-capable instance of a ``core/faults.py`` workload
+    (DESIGN.md section 16.1).
+
+    Re-blocks the workload's corpus onto fixed per-block capacity
+    spans — every block keeps its initial rows and gains ``spare``
+    empty capacity rows, global index = block offset + row — so a
+    replace or append changes one block's contents without renumbering
+    any other block's rows (the serving-tier indexing discipline of
+    ``serving/stream.py``).  Offsets, ``n``, and blocks are rewritten
+    in place; partials, folds, and the differential oracle all run on
+    the current ragged blocks.
+    """
+    if spare < 0:
+        raise ValueError(f"spare must be >= 0, got {spare}")
+    wl = wl_cls(P, seed=seed)
+    spans = [b.shape[0] + spare for b in wl.blocks]
+    starts = np.cumsum([0] + spans)
+    wl.offsets = [int(s) for s in starts[:-1]]
+    wl.n = int(starts[-1])
+    wl.blocks = [np.ascontiguousarray(b) for b in wl.blocks]
+    return wl
+
+
+def scratch_fold(workload) -> Any:
+    """From-scratch oracle: recompute every tile's partial from the
+    current blocks and fold in canonical order — the reference the
+    churn selfcheck holds a :class:`DeltaIndex` bit-exactly to
+    (DESIGN.md section 16.6)."""
+    return workload.fold({
+        (x, y): workload.pair_partial(
+            x, y, workload.blocks[x], workload.blocks[y])
+        for (x, y) in workload.canonical_pairs()})
+
+
+def _random_update(wl, rng: np.random.RandomState,
+                   span_of) -> Tuple[int, np.ndarray]:
+    """One random replace-or-append: returns (block, new contents)."""
+    P = wl.P
+    dim = wl.blocks[0].shape[1]
+    b = int(rng.randint(P))
+    cur = wl.blocks[b]
+    span = span_of(b)
+    free = span - cur.shape[0]
+    if free > 0 and rng.rand() < 0.4:
+        # append: grow the block within its capacity span
+        extra = int(rng.randint(1, free + 1))
+        new = np.concatenate(
+            [cur, rng.randn(extra, dim).astype(np.float32)], axis=0)
+    else:
+        # replace: fresh contents, possibly a different valid count
+        rows = int(rng.randint(1, span + 1))
+        new = rng.randn(rows, dim).astype(np.float32)
+    return b, new
+
+
+def _delta_placements(P: int,
+                      names: Optional[Sequence[str]] = None
+                      ) -> List[Placement]:
+    if names is None:
+        return [get_placement(name, P)
+                for name, cls in sorted(registered_placements().items())
+                if cls.supports(P)]
+    out: List[Placement] = []
+    for name in names:
+        plc = resolve_placement(name, P)
+        if all(p.name != plc.name for p in out):
+            out.append(plc)
+    return out
+
+
+def churn_selfcheck(Ps: Sequence[int] = DELTA_P,
+                    modes: Sequence[str] = ENGINE_MODES,
+                    placements: Optional[Sequence[str]] = None,
+                    n_updates: Optional[int] = None,
+                    seed: Optional[int] = None,
+                    verbose: bool = True) -> int:
+    """The churn-chaos differential check (DESIGN.md section 16.6): for
+    every registered placement x engine mode x P in ``Ps`` and all
+    three workloads, apply R random replace/append updates
+    (``n_updates``, default ``REPRO_DELTA_UPDATES`` else 3; seed from
+    ``REPRO_DELTA_SEED`` else 0) to a standing :class:`DeltaIndex` —
+    every third update dirties two blocks at once — asserting after
+    each update that the incrementally maintained output is bit-exact
+    vs a from-scratch recompute and that the delta sweep touched at
+    most ``|dirty| * P`` tiles.  Returns the number of cases checked.
+    """
+    if n_updates is None:
+        val = env_mod.read_knob("REPRO_DELTA_UPDATES")
+        n_updates = 3 if val is None else int(val)
+    if seed is None:
+        val = env_mod.read_knob("REPRO_DELTA_SEED")
+        seed = 0 if val is None else int(val)
+    from .faults import WORKLOADS  # faults imports delta: keep it lazy here
+    n_cases = 0
+    for P in Ps:
+        for plc in _delta_placements(P, placements):
+            for wl_cls in WORKLOADS:
+                for mode in modes:
+                    wl = churn_workload(wl_cls, P, seed=seed)
+                    index = DeltaIndex(wl, plc, mode=mode)
+                    rng = np.random.RandomState(
+                        seed + 7 * P + len(mode) + sum(map(ord, plc.name)))
+                    for u in range(n_updates):
+                        n_dirty = 2 if (u % 3 == 2 and P > 2) else 1
+                        seen: set = set()
+                        while len(seen) < n_dirty:
+                            b, data = _random_update(wl, rng, index.span_of)
+                            index.replace_block(b, data)
+                            seen.add(b)
+                        out = index.apply()
+                        assert index.stats.last_tiles <= len(seen) * P, (
+                            plc.name, P, mode, wl.name, index.stats)
+                        want = scratch_fold(wl)
+                        assert wl.equal(out, want), (
+                            plc.name, P, mode, wl.name, u)
+                    n_cases += 1
+                    if verbose:
+                        st = index.stats
+                        print(f"  churn {wl.name:6s} {plc.name:10s} "
+                              f"P={P:<3d} {mode:7s}: updates={st.updates} "
+                              f"tiles={st.tiles_swept - st.tiles_full}"
+                              f"/{st.tiles_full} bit-exact OK")
+    if verbose:
+        print(f"churn selfcheck OK ({n_cases} cases, P in {tuple(Ps)})")
+    return n_cases
+
+
+def _main(argv: Optional[Sequence[str]] = None) -> int:
+    """CLI: ``python -m repro.core.delta [--P 5 8] [--modes scan]
+    [--placements cyclic] [--updates 3] [--seed 0] [--quiet]``
+    (DESIGN.md section 16.6)."""
+    import argparse
+    ap = argparse.ArgumentParser(
+        description="churn selfcheck: delta-maintained outputs must be "
+                    "bit-exact vs from-scratch recomputes")
+    ap.add_argument("--P", type=int, nargs="*", default=list(DELTA_P))
+    ap.add_argument("--modes", nargs="*", default=list(ENGINE_MODES),
+                    choices=list(ENGINE_MODES))
+    ap.add_argument("--placements", nargs="*", default=None)
+    ap.add_argument("--updates", type=int, default=None)
+    ap.add_argument("--seed", type=int, default=None)
+    ap.add_argument("--quiet", action="store_true")
+    args = ap.parse_args(argv)
+    churn_selfcheck(Ps=args.P, modes=args.modes,
+                    placements=args.placements, n_updates=args.updates,
+                    seed=args.seed, verbose=not args.quiet)
+    return 0
+
+
+if __name__ == "__main__":  # pragma: no cover
+    raise SystemExit(_main())

@@ -124,6 +124,19 @@ ENV_KNOBS = {
         name="REPRO_FAULT_SEED", kind="int", minimum=0,
         description="chaos selfcheck: seed of the deterministic fault "
                     "plan RNG (default 0)"),
+    "REPRO_DELTA_UPDATES": EnvKnob(
+        name="REPRO_DELTA_UPDATES", kind="int", minimum=1,
+        description="churn selfcheck: random replace/append updates "
+                    "applied per case (default 3)"),
+    "REPRO_DELTA_SEED": EnvKnob(
+        name="REPRO_DELTA_SEED", kind="int", minimum=0,
+        description="churn selfcheck: seed of the deterministic update "
+                    "RNG (default 0)"),
+    "REPRO_DELTA_MAX_DIRTY_PCT": EnvKnob(
+        name="REPRO_DELTA_MAX_DIRTY_PCT", kind="int", minimum=0,
+        description="delta index: dirty-block percentage above which an "
+                    "update falls back to a full rebuild instead of a "
+                    "dirty-tile sweep (default 50)"),
     "REPRO_SERVE_MAX_BATCH": EnvKnob(
         name="REPRO_SERVE_MAX_BATCH", kind="int", minimum=1,
         description="continuous batcher: max requests packed per "

@@ -64,8 +64,8 @@ from ..ckpt.checkpoint import restore_or_none, save_checkpoint
 from ..launch.elastic import plan_replication_repair
 from ..obs import trace as obs_trace
 from . import env as env_mod
-from .placement import (Placement, get_placement, registered_placements,
-                        weighted_owner_table)
+from .delta import dirty_tiles, owner_partition
+from .placement import Placement, get_placement, registered_placements
 from .scheduler import PairSchedule, reassign
 from .sparse import threshold_with_gap
 from .sweep import ENGINE_MODES, sweep_rounds
@@ -564,12 +564,9 @@ def run_fault_tolerant_sweep(workload: PairWorkload, placement: Placement,
         dd = min(d, P - d) if P > 1 else 0
         return round_of_sidx[sidx_of_diff[dd]]
 
-    # ownership: the placement partition, or the weighted one
-    if weights is not None:
-        table = weighted_owner_table(plc, weights)
-        owner_map = {p: int(table[p[0], p[1]]) for p in all_pairs}
-    else:
-        owner_map = {p: int(plc.owner_of(p[0], p[1])) for p in all_pairs}
+    # ownership: the shared exactly-once partition (core/delta.py) —
+    # the placement's owner_of, or the capacity-weighted table
+    owner_map = owner_partition(plc, all_pairs, weights=weights)
 
     orig_count = [0] * P
     for S in plc.residency_sets:
@@ -577,6 +574,7 @@ def run_fault_tolerant_sweep(workload: PairWorkload, placement: Placement,
             orig_count[b] += 1
 
     alive = [True] * P
+    lost_res: Dict[int, List[int]] = {}  # residency at death, per victim
     res_sets: List[set] = [set(plc.residency(i)) for i in range(P)]
     stores: List[Dict[int, np.ndarray]] = [
         {b: workload.blocks[b] for b in res_sets[i]} for i in range(P)]
@@ -684,9 +682,15 @@ def run_fault_tolerant_sweep(workload: PairWorkload, placement: Placement,
         path."""
         todo: Dict[int, List[Tuple[int, int]]] = {}
         for victim in victims:
-            pending = [p for p in all_pairs
-                       if p not in partials and owner_map[p] == victim]
-            lost_done = sorted(p for p in partials
+            # a dead device's lost work is just another dirty set: every
+            # pair it can have owned or computed has >= 1 endpoint among
+            # the blocks it held at death, so the delta scheduler's
+            # dirty-tile enumeration (core/delta.py, DESIGN.md section
+            # 16.1) is the recovery scan — not the full O(P^2) pair list
+            universe = dirty_tiles(plc, lost_res[victim], P=P)
+            pending = [p for p in universe
+                       if p not in partials and owner_map.get(p) == victim]
+            lost_done = sorted(p for p in universe
                                if computed_by.get(p) == victim
                                and p not in durable)
             for p in lost_done:
@@ -719,6 +723,7 @@ def run_fault_tolerant_sweep(workload: PairWorkload, placement: Placement,
                 stats.n_drops += 1
             elif ev.kind == "kill" and alive[ev.device]:
                 alive[ev.device] = False
+                lost_res[ev.device] = sorted(res_sets[ev.device])
                 stores[ev.device] = {}
                 res_sets[ev.device] = set()
                 stats.n_kills += 1

@@ -136,6 +136,40 @@ class KnnEmitter(SweepEmitter):
             self.is_self = meta
         self.batch_fn = batch_fn
 
+    @staticmethod
+    def delta_retract(standing, stale, ctx=None):
+        """Report the rows whose standing neighbor list cites a
+        retracted source (DESIGN.md section 16.4).  Top-k selection is
+        not invertible — a removed neighbor can expose a candidate the
+        list already discarded — so retraction returns the *refresh
+        set*: ``standing`` is the ``(scores, indices)`` pair, ``stale``
+        the dirty global-id ``(starts, stops)`` ranges, and the result
+        a boolean row mask the delta driver rebuilds from its per-tile
+        candidate ledger."""
+        _, best_i = standing
+        starts, stops = (np.asarray(stale[0], np.int64),
+                         np.asarray(stale[1], np.int64))
+        hit = ((best_i[:, :, None] >= starts[None, None, :])
+               & (best_i[:, :, None] < stops[None, None, :]))
+        return hit.any(axis=(1, 2))
+
+    @staticmethod
+    def delta_fold(standing, fresh, ctx=None):
+        """Merge fresh per-row candidates into standing neighbor lists
+        under the strict (-score, index) total order (DESIGN.md
+        section 16.4) — an associative, commutative monoid, so the
+        merged top-k is bit-equal to a from-scratch fold whenever the
+        standing list already equals the top-k of its unretracted
+        sources.  Both arguments are ``(scores [n, k], indices [n, k])``
+        with the (-inf, int64 max) sentinel padding every candidate
+        plane in this repo uses."""
+        s = np.concatenate([standing[0], fresh[0]], axis=1)
+        i = np.concatenate([standing[1], fresh[1]], axis=1)
+        order = np.lexsort((i, -s.astype(np.float64)), axis=1)
+        topk = standing[0].shape[1]
+        return (np.take_along_axis(s, order, axis=1)[:, :topk],
+                np.take_along_axis(i, order, axis=1)[:, :topk])
+
     def batch(self, quorum):
         """Every tile in one batched accumulation.  The batched jnp step
         IS the ref oracle (kernels/ref.py pairwise_topk), with the fused

@@ -299,6 +299,32 @@ class ThresholdJoinEmitter(SweepEmitter):
         self.batch_fn = batch_fn
         self.active = self.mask > 0           # refined by prepare()
 
+    @staticmethod
+    def delta_retract(standing, stale, ctx=None):
+        """Retract stale (i, j) rows from a standing sorted hit set
+        (DESIGN.md section 16.3).  A global pair lives in exactly one
+        tile, so removing the dirty tiles' old rows is an exact set
+        difference — no other tile can have contributed them."""
+        standing = np.asarray(standing, np.int64).reshape(-1, 2)
+        stale = np.asarray(stale, np.int64).reshape(-1, 2)
+        if not len(standing) or not len(stale):
+            return standing
+        key = standing[:, 0] << np.int64(32) | standing[:, 1]
+        gone = stale[:, 0] << np.int64(32) | stale[:, 1]
+        return standing[~np.isin(key, gone)]
+
+    @staticmethod
+    def delta_fold(standing, fresh, ctx=None):
+        """Insert fresh (i, j) rows into a standing hit set and restore
+        the canonical (lo, hi) lexsort order (DESIGN.md section 16.3) —
+        rows are globally unique, so the union re-sorted is bit-equal
+        to a from-scratch fold."""
+        standing = np.asarray(standing, np.int64).reshape(-1, 2)
+        fresh = np.asarray(fresh, np.int64).reshape(-1, 2)
+        allr = np.concatenate([standing, fresh], axis=0)
+        order = np.lexsort((allr[:, 1], allr[:, 0]))
+        return allr[order]
+
     def prepare(self, quorum):
         """Norm-bound prefilter over the full gathered stack
         (batched/scan modes; DESIGN.md 11.1)."""

@@ -458,6 +458,33 @@ class SweepEmitter(abc.ABC):
     def overlap_finalize(self, state):
         """Fold the overlap state into the sweep output."""
 
+    # -- delta maintenance (DESIGN.md section 16) -------------------------
+    # Host-side monoid patch rules over *standing* outputs, consumed by
+    # core/delta.py's DeltaIndex: retract a dirty tile's stale
+    # contribution, fold its fresh one.  Static numpy functions — they
+    # act on folded host results, not traced arrays — so any driver can
+    # call them without constructing a traced emitter.
+
+    @staticmethod
+    def delta_retract(standing, stale, ctx=None):
+        """Remove a stale contribution from a standing output (the
+        delta-sweep retract hook, DESIGN.md section 16).  Emitters with
+        an invertible (or patchable) output monoid override this; the
+        base protocol does not support delta maintenance."""
+        raise NotImplementedError(
+            "this emitter does not support delta maintenance "
+            "(no delta_retract rule; see DESIGN.md section 16)")
+
+    @staticmethod
+    def delta_fold(standing, fresh, ctx=None):
+        """Fold a fresh contribution into a standing output (the
+        delta-sweep fold hook, DESIGN.md section 16).  Emitters with a
+        delta-maintainable output monoid override this; the base
+        protocol does not support delta maintenance."""
+        raise NotImplementedError(
+            "this emitter does not support delta maintenance "
+            "(no delta_fold rule; see DESIGN.md section 16)")
+
 
 def pair_sweep(emitter: SweepEmitter, *, schedule: PairSchedule,
                axis_name: str, mode: str, x: jax.Array | None = None,

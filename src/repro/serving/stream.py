@@ -24,7 +24,7 @@ updates — the block id and row count are traced scalars.
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple
+from typing import Callable, List, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -34,7 +34,39 @@ from jax.sharding import PartitionSpec as PS
 from ..core.allpairs import quorum_gather
 from ..core.placement import Placement, placement_from_env, resolve_placement
 
-__all__ = ["ServingState", "build_state", "update_fn", "replace_block"]
+__all__ = ["ServingState", "build_state", "update_fn", "replace_block",
+           "register_dirty_listener", "unregister_dirty_listener"]
+
+# Dirty-block listeners (DESIGN.md section 16.5): every streamed block
+# update — replace, and append (which is a replace into empty capacity,
+# see engine.ServingCorpus.append_block) — notifies the registered
+# callbacks with the block id, so standing delta indexes
+# (core.delta.DeltaIndex.mark_dirty) learn about churn at the moment it
+# is applied, not by polling.
+_DIRTY_LISTENERS: List[Callable[[int], None]] = []
+
+
+def register_dirty_listener(fn: Callable[[int], None]) -> Callable[[int], None]:
+    """Register a callback invoked with the block id after every
+    streamed block update (replace or append) — the hook that marks
+    standing ``core.delta.DeltaIndex`` objects dirty.  Returns ``fn``
+    so it can be used as a decorator."""
+    _DIRTY_LISTENERS.append(fn)
+    return fn
+
+
+def unregister_dirty_listener(fn: Callable[[int], None]) -> None:
+    """Remove a callback added by :func:`register_dirty_listener`
+    (no-op if it is not registered)."""
+    try:
+        _DIRTY_LISTENERS.remove(fn)
+    except ValueError:
+        pass
+
+
+def _notify_dirty(b: int) -> None:
+    for fn in list(_DIRTY_LISTENERS):
+        fn(int(b))
 
 
 class ServingState(NamedTuple):
@@ -151,4 +183,5 @@ def replace_block(state: ServingState, mesh, axis_name: str, b: int,
     out = update_fn(mesh, axis_name, P, plc)(
         state.shard, state.valid,
         jnp.int32(b), jnp.asarray(full), jnp.int32(nvalid))
+    _notify_dirty(b)
     return ServingState(*out)

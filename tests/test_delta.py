@@ -1,0 +1,474 @@
+"""Incremental delta-sweep (core/delta.py): the dirty-tile schedule,
+the exactly-once ownership partition, per-emitter retract/fold rules,
+the churn-chaos differential selfcheck, and the plan-stability contract
+shared with failure recovery (DESIGN.md section 16)."""
+
+import numpy as np
+import pytest
+
+from repro.core.allpairs import DenseReduceEmitter
+from repro.core.delta import (DELTA_P, DeltaIndex, churn_selfcheck,
+                              churn_workload, delta_rounds, delta_sweep,
+                              dirty_tiles, owner_partition, scratch_fold)
+from repro.core.faults import (DenseReduceWorkload, KnnGraphWorkload,
+                               SparseJoinWorkload, WORKLOADS)
+from repro.core.knn import KnnEmitter
+from repro.core.placement import (get_placement, registered_placements,
+                                  weighted_owner_table)
+from repro.core.scheduler import reassign
+from repro.core.sparse import ThresholdJoinEmitter
+from repro.core.sweep import ENGINE_MODES, SweepEmitter, sweep_rounds
+
+
+# ---------------------------------------------------------------------------
+# dirty_tiles — the shared dirty-tile enumerator
+# ---------------------------------------------------------------------------
+
+def _brute_dirty(P, dirty):
+    D = set(dirty)
+    return {(x, y) for x in range(P) for y in range(x, P)
+            if x in D or y in D}
+
+
+@pytest.mark.parametrize("P,dirty", [
+    (5, [0]), (7, [1, 4]), (8, [7]), (13, [0, 6, 12]), (4, [0, 1, 2, 3]),
+])
+def test_dirty_tiles_covers_exactly_dirty_endpoints(P, dirty):
+    tiles = dirty_tiles(None, dirty, P=P)
+    assert set(tiles) == _brute_dirty(P, dirty)
+    assert tiles == sorted(tiles)                      # canonical order
+    d = len(set(dirty))
+    assert len(tiles) == d * P - d * (d - 1) // 2      # exact count
+    assert len(tiles) <= d * P                         # the ISSUE bound
+
+
+def test_dirty_tiles_deterministic_and_placement_P():
+    plc = get_placement("cyclic", 8)
+    a = dirty_tiles(plc, [2, 5])
+    b = dirty_tiles(plc, [5, 2])          # order of the dirty set is moot
+    c = dirty_tiles(None, {2, 5}, P=8)
+    assert a == b == c == sorted(a)
+
+
+def test_dirty_tiles_validates():
+    with pytest.raises(ValueError, match="placement or an explicit P"):
+        dirty_tiles(None, [0])
+    with pytest.raises(ValueError, match="outside"):
+        dirty_tiles(None, [5], P=5)
+    with pytest.raises(ValueError, match="outside"):
+        dirty_tiles(None, [-1], P=5)
+    assert dirty_tiles(None, [], P=5) == []
+
+
+def test_dirty_tiles_empty_dirty_set_everywhere():
+    for P in (1, 2, 5):
+        assert dirty_tiles(None, [], P=P) == []
+        full = dirty_tiles(None, range(P), P=P)
+        assert len(full) == P * (P + 1) // 2  # all-dirty == full sweep
+
+
+# ---------------------------------------------------------------------------
+# owner_partition — exactly-once over the holder quorums
+# ---------------------------------------------------------------------------
+
+def _supported_P(name):
+    cls = registered_placements()[name]
+    return next(P for P in (8, 7, 12, 5) if cls.supports(P))
+
+
+@pytest.mark.parametrize("name", sorted(registered_placements()))
+def test_owner_partition_exactly_once_and_coresident(name):
+    P = _supported_P(name)
+    plc = get_placement(name, P)
+    owners = owner_partition(plc)
+    assert set(owners) == {(x, y) for x in range(P) for y in range(x, P)}
+    for (x, y), o in owners.items():
+        res = plc.residency_sets[o]
+        assert x in res and y in res, (name, (x, y), o)
+        assert o == plc.owner_of(x, y)
+
+
+def test_owner_partition_weighted_matches_table():
+    P = 8
+    plc = get_placement("cyclic", P)
+    weights = [4.0 if i == 0 else 1.0 for i in range(P)]
+    owners = owner_partition(plc, weights=weights)
+    table = weighted_owner_table(plc, weights)
+    for (x, y), o in owners.items():
+        assert o == int(table[x, y])
+
+
+def test_owner_partition_subset_of_tiles():
+    plc = get_placement("cyclic", 5)
+    tiles = dirty_tiles(plc, [3])
+    owners = owner_partition(plc, tiles)
+    assert set(owners) == set(tiles)
+
+
+# ---------------------------------------------------------------------------
+# delta_rounds — tiles land in the mode's synchronization rounds
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("P", [4, 5, 8, 13])
+@pytest.mark.parametrize("mode", ENGINE_MODES)
+def test_delta_rounds_partition_tiles(P, mode):
+    plc = get_placement("cyclic", P)
+    tiles = dirty_tiles(plc, [0, P - 1])
+    rounds = delta_rounds(plc, tiles, mode)
+    flat = [t for grp in rounds for t in grp]
+    assert sorted(flat) == sorted(tiles)   # exactly once
+    assert all(grp == sorted(grp) for grp in rounds)
+    assert all(grp for grp in rounds)      # no empty rounds
+    if mode == "batched":
+        assert len(rounds) == 1
+    if mode == "scan":
+        assert rounds == [[t] for t in sorted(tiles)]
+
+
+def test_delta_rounds_never_more_rounds_than_full_sweep():
+    plc = get_placement("cyclic", 8)
+    tiles = dirty_tiles(plc, [2])
+    for mode in ("batched", "overlap"):
+        assert (len(delta_rounds(plc, tiles, mode))
+                <= len(sweep_rounds(plc.schedule(), mode)))
+
+
+def test_delta_rounds_rejects_bad_mode():
+    plc = get_placement("cyclic", 4)
+    with pytest.raises(ValueError, match="mode"):
+        delta_rounds(plc, [(0, 1)], "auto")
+
+
+# ---------------------------------------------------------------------------
+# delta_sweep — fresh partials equal a direct recompute
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("wl_cls", WORKLOADS, ids=lambda c: c.name)
+def test_delta_sweep_partials_match_direct(wl_cls):
+    P = 7
+    plc = get_placement("projective", P)
+    wl = wl_cls(P, seed=1)
+    fresh = delta_sweep(wl, plc, [3], mode="overlap")
+    assert set(fresh) == set(dirty_tiles(plc, [3]))
+    for (x, y), part in fresh.items():
+        want = wl.pair_partial(x, y, wl.blocks[x], wl.blocks[y])
+        if isinstance(part, dict):
+            assert set(part) == set(want)
+            for k in part:
+                np.testing.assert_array_equal(part[k], want[k])
+        else:
+            np.testing.assert_array_equal(np.asarray(part), np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+# SweepEmitter delta hooks — base class refuses, emitters implement
+# ---------------------------------------------------------------------------
+
+def test_base_emitter_has_no_delta_rule():
+    with pytest.raises(NotImplementedError, match="delta_retract"):
+        SweepEmitter.delta_retract(0.0, 0.0)
+    with pytest.raises(NotImplementedError, match="delta_fold"):
+        SweepEmitter.delta_fold(0.0, 0.0)
+
+
+def test_dense_emitter_subtract_then_add():
+    total = DenseReduceEmitter.delta_retract(np.float64(10.0), 4.0)
+    total = DenseReduceEmitter.delta_fold(total, 1.5)
+    assert total == np.float64(7.5)
+    assert isinstance(total, np.float64)
+
+
+def test_join_emitter_hit_set_patch():
+    standing = np.array([[0, 1], [2, 5], [3, 4]], np.int64)
+    stale = np.array([[2, 5]], np.int64)
+    out = ThresholdJoinEmitter.delta_retract(standing, stale)
+    assert out.tolist() == [[0, 1], [3, 4]]
+    ins = np.array([[2, 6], [0, 9]], np.int64)
+    out = ThresholdJoinEmitter.delta_fold(out, ins)
+    assert out.tolist() == [[0, 1], [0, 9], [2, 6], [3, 4]]  # (lo, hi) sorted
+    # empty edges
+    empty = np.zeros((0, 2), np.int64)
+    assert ThresholdJoinEmitter.delta_retract(standing, empty).tolist() \
+        == standing.tolist()
+    assert ThresholdJoinEmitter.delta_retract(empty, stale).shape == (0, 2)
+
+
+def test_knn_emitter_merge_is_rowwise_topk():
+    s1 = np.array([[3.0, 1.0], [5.0, -np.inf]], np.float32)
+    i1 = np.array([[7, 9], [2, np.iinfo(np.int64).max]], np.int64)
+    s2 = np.array([[2.0, 3.0], [5.0, 6.0]], np.float32)
+    i2 = np.array([[8, 4], [1, 0]], np.int64)
+    ms, mi = KnnEmitter.delta_fold((s1, i1), (s2, i2))
+    assert ms.shape == (2, 2)
+    # row 0: scores 3,3,2,1 -> ties on 3 break by smaller index (4 < 7)
+    assert ms[0].tolist() == [3.0, 3.0] and mi[0].tolist() == [4, 7]
+    # row 1: 6@0, 5@1 (tie 5 breaks to index 1 < 2)
+    assert ms[1].tolist() == [6.0, 5.0] and mi[1].tolist() == [0, 1]
+
+
+def test_knn_emitter_retract_flags_citing_rows():
+    best_i = np.array([[0, 5], [9, 3], [7, 8]], np.int64)
+    starts = np.array([4], np.int64)
+    stops = np.array([6], np.int64)   # dirty id range [4, 6)
+    mask = KnnEmitter.delta_retract((None, best_i), (starts, stops))
+    assert mask.tolist() == [True, False, False]
+
+
+# ---------------------------------------------------------------------------
+# DeltaIndex — per-workload bit-exact maintenance
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("wl_cls", WORKLOADS, ids=lambda c: c.name)
+@pytest.mark.parametrize("mode", ENGINE_MODES)
+def test_delta_index_bit_exact_under_updates(wl_cls, mode):
+    P = 7
+    plc = get_placement("projective", P)
+    wl = churn_workload(wl_cls, P, seed=3)
+    index = DeltaIndex(wl, plc, mode=mode)
+    assert wl.equal(index.result, scratch_fold(wl))
+    rng = np.random.RandomState(11)
+    dim = wl.blocks[0].shape[1]
+    # replace, shrink, append, and a two-block update
+    updates = [
+        (2, rng.randn(wl.blocks[2].shape[0], dim)),          # same-size
+        (4, rng.randn(1, dim)),                              # shrink to 1 row
+        (4, rng.randn(index.span_of(4), dim)),               # grow to capacity
+    ]
+    for b, data in updates:
+        index.replace_block(b, data.astype(np.float32))
+        out = index.apply()
+        assert index.stats.last_tiles <= P
+        assert wl.equal(out, scratch_fold(wl))
+    index.replace_block(0, rng.randn(2, dim).astype(np.float32))
+    index.replace_block(6, rng.randn(2, dim).astype(np.float32))
+    out = index.apply()
+    assert index.stats.last_tiles <= 2 * P
+    assert wl.equal(out, scratch_fold(wl))
+    assert index.stats.updates == 4
+
+
+def test_delta_index_sweeps_fewer_tiles_than_full():
+    P = 13
+    plc = get_placement("projective", P)
+    wl = churn_workload(DenseReduceWorkload, P, seed=0)
+    index = DeltaIndex(wl, plc)
+    full = index.stats.tiles_full
+    assert full == P * (P + 1) // 2
+    index.replace_block(5, np.zeros((1, wl.blocks[0].shape[1]), np.float32))
+    index.apply()
+    assert 0 < index.stats.last_tiles <= P < full
+
+
+def test_delta_index_dense_running_total_tracks_refold():
+    P = 8
+    plc = get_placement("cyclic", P)
+    wl = churn_workload(DenseReduceWorkload, P, seed=5)
+    index = DeltaIndex(wl, plc)
+    rng = np.random.RandomState(0)
+    for b in (1, 6, 3):
+        index.replace_block(
+            b, rng.randn(2, wl.blocks[0].shape[1]).astype(np.float32))
+        out = index.apply()
+        # the fast-path running total is the same sum in a different
+        # association order — close, while the published refold is exact
+        np.testing.assert_allclose(
+            float(index._running_total), float(out), rtol=1e-9)
+        assert wl.equal(out, scratch_fold(wl))
+
+
+def test_delta_index_knn_counts_refreshed_and_merged_rows():
+    P = 8
+    plc = get_placement("cyclic", P)
+    wl = churn_workload(KnnGraphWorkload, P, seed=2)
+    index = DeltaIndex(wl, plc)
+    rng = np.random.RandomState(4)
+    index.replace_block(
+        3, rng.randn(2, wl.blocks[0].shape[1]).astype(np.float32))
+    out = index.apply()
+    assert wl.equal(out, scratch_fold(wl))
+    assert index.stats.rows_refreshed > 0   # the dirty block's own rows
+    assert index.stats.rows_merged > 0      # clean rows took the fast merge
+
+
+def test_delta_index_sparse_counts_hit_patches():
+    P = 8
+    plc = get_placement("cyclic", P)
+    wl = churn_workload(SparseJoinWorkload, P, seed=2)
+    index = DeltaIndex(wl, plc)
+    rng = np.random.RandomState(4)
+    index.replace_block(
+        0, rng.randn(2, wl.blocks[0].shape[1]).astype(np.float32))
+    out = index.apply()
+    assert wl.equal(out, scratch_fold(wl))
+    assert index.stats.hits_retracted >= 0
+    assert index.stats.hits_inserted >= 0
+
+
+def test_delta_index_mark_dirty_listener_form():
+    P = 5
+    plc = get_placement("cyclic", P)
+    wl = churn_workload(DenseReduceWorkload, P, seed=7)
+    index = DeltaIndex(wl, plc)
+    rng = np.random.RandomState(1)
+    wl.blocks[2] = rng.randn(
+        wl.blocks[2].shape[0], wl.blocks[2].shape[1]).astype(np.float32)
+    index.mark_dirty(2)
+    out = index.apply()
+    assert wl.equal(out, scratch_fold(wl))
+    with pytest.raises(ValueError, match="outside"):
+        index.mark_dirty(P)
+
+
+def test_delta_index_apply_without_dirty_is_a_noop():
+    P = 5
+    plc = get_placement("cyclic", P)
+    wl = churn_workload(DenseReduceWorkload, P, seed=0)
+    index = DeltaIndex(wl, plc)
+    before = index.stats.updates
+    out = index.apply()
+    assert wl.equal(out, scratch_fold(wl))
+    assert index.stats.updates == before
+
+
+def test_delta_index_max_dirty_falls_back_to_full_rebuild():
+    P = 5
+    plc = get_placement("cyclic", P)
+    wl = churn_workload(DenseReduceWorkload, P, seed=0)
+    index = DeltaIndex(wl, plc, max_dirty_pct=0)   # any dirt -> full rebuild
+    rng = np.random.RandomState(2)
+    index.replace_block(
+        1, rng.randn(2, wl.blocks[0].shape[1]).astype(np.float32))
+    out = index.apply()
+    assert index.stats.full_rebuilds == 1
+    assert index.stats.last_tiles == index.stats.tiles_full
+    assert wl.equal(out, scratch_fold(wl))
+
+
+def test_delta_index_max_dirty_knob(monkeypatch):
+    P = 5
+    plc = get_placement("cyclic", P)
+    wl = churn_workload(DenseReduceWorkload, P, seed=0)
+    monkeypatch.setenv("REPRO_DELTA_MAX_DIRTY_PCT", "0")
+    index = DeltaIndex(wl, plc)
+    assert index.max_dirty_pct == 0
+    monkeypatch.setenv("REPRO_DELTA_MAX_DIRTY_PCT", "150")
+    with pytest.raises(ValueError, match="max_dirty_pct"):
+        DeltaIndex(churn_workload(DenseReduceWorkload, P, seed=0), plc)
+
+
+def test_delta_index_validates_inputs():
+    P = 5
+    plc = get_placement("cyclic", P)
+    wl = churn_workload(DenseReduceWorkload, P, seed=0)
+    index = DeltaIndex(wl, plc)
+    dim = wl.blocks[0].shape[1]
+    with pytest.raises(ValueError, match="mode"):
+        DeltaIndex(churn_workload(DenseReduceWorkload, P, seed=0), plc,
+                   mode="auto")
+    with pytest.raises(ValueError, match="P="):
+        DeltaIndex(churn_workload(DenseReduceWorkload, 4, seed=0), plc)
+    with pytest.raises(ValueError, match="at most"):
+        index.replace_block(0, np.zeros((index.span_of(0) + 1, dim),
+                                        np.float32))
+    with pytest.raises(ValueError, match="block data"):
+        index.replace_block(0, np.zeros((1, dim + 1), np.float32))
+    with pytest.raises(ValueError, match="outside"):
+        index.span_of(P)
+
+
+def test_churn_workload_keeps_global_ids_stable():
+    P = 5
+    wl = churn_workload(DenseReduceWorkload, P, seed=0, spare=2)
+    base = DenseReduceWorkload(P, seed=0)
+    spans = [base.blocks[b].shape[0] + 2 for b in range(P)]
+    assert wl.offsets == [int(s) for s in np.cumsum([0] + spans[:-1])]
+    assert wl.n == sum(spans)
+    with pytest.raises(ValueError, match="spare"):
+        churn_workload(DenseReduceWorkload, P, spare=-1)
+
+
+# ---------------------------------------------------------------------------
+# the churn-chaos selfcheck entry point (a small slice; CI runs the matrix)
+# ---------------------------------------------------------------------------
+
+def test_churn_selfcheck_small_slice():
+    n = churn_selfcheck(Ps=(5,), modes=("batched",),
+                        placements=("cyclic",), n_updates=2, verbose=False)
+    assert n == 3  # three workloads x one placement x one mode
+
+
+def test_churn_selfcheck_even_P_orbit():
+    """Even P exercises the doubly-owned d = P/2 orbit in the round
+    grouping; run it through overlap and scan."""
+    n = churn_selfcheck(Ps=(4,), modes=("overlap", "scan"),
+                        placements=("cyclic",), n_updates=2, verbose=False)
+    assert n == 6
+
+
+def test_churn_selfcheck_env_knobs(monkeypatch):
+    monkeypatch.setenv("REPRO_DELTA_UPDATES", "1")
+    monkeypatch.setenv("REPRO_DELTA_SEED", "9")
+    n = churn_selfcheck(Ps=(4,), modes=("batched",),
+                        placements=("cyclic",), verbose=False)
+    assert n == 3
+    monkeypatch.setenv("REPRO_DELTA_UPDATES", "zero")
+    with pytest.raises(ValueError, match="REPRO_DELTA_UPDATES"):
+        churn_selfcheck(Ps=(4,), modes=("batched",),
+                        placements=("cyclic",), verbose=False)
+
+
+def test_delta_constants_match_issue_acceptance():
+    assert DELTA_P == (4, 5, 7, 8, 12, 13)
+
+
+# ---------------------------------------------------------------------------
+# plan stability — the contract shared with failure recovery
+# ---------------------------------------------------------------------------
+
+def test_dirty_tiles_is_canonical_order_subset():
+    """The enumerator must emit a contiguous-ordered subset of the
+    canonical pair order the workloads fold in — recovery scans built on
+    it preserve enumeration order and tie-breaks."""
+    P = 8
+    wl = DenseReduceWorkload(P, seed=0)
+    canon = wl.canonical_pairs()
+    tiles = dirty_tiles(None, [2, 6], P=P)
+    pos = [canon.index(t) for t in tiles]
+    assert pos == sorted(pos)
+
+
+@pytest.mark.parametrize("name", ["cyclic", "projective"])
+def test_reassign_plan_stable_over_dirty_tiles(name):
+    """Feeding reassign a dirty_tiles-derived pending list (exactly what
+    the fault driver now does) yields the same plan on every call — the
+    same sorted candidate tie-breaks as the full-universe path."""
+    P = 13
+    plc = get_placement(name, P)
+    sched = plc.schedule()
+    victim = 2
+    owners = owner_partition(plc)
+    universe = dirty_tiles(plc, plc.residency_sets[victim])
+    pending = [t for t in universe if owners[t] == victim]
+    assert pending  # the victim owns work inside its residency universe
+    plans = [reassign(sched, [victim], placement=plc,
+                      pairs={victim: list(pending)}) for _ in range(2)]
+    assert plans[0].extra_pairs == plans[1].extra_pairs
+    assert plans[0].fetch_pairs == plans[1].fetch_pairs
+    replayed = {t for ps in plans[0].extra_pairs.values() for t in ps}
+    replayed |= {t for entries in plans[0].fetch_pairs.values()
+                 for (t, _b, _src) in entries}
+    assert replayed == set(pending)  # nothing dropped, nothing invented
+
+
+@pytest.mark.parametrize("name", sorted(registered_placements()))
+def test_residency_universe_contains_owned_tiles(name):
+    """The invariant the fault driver's dirty_tiles recovery scan rests
+    on: every tile a device owns has both endpoints — a fortiori one —
+    in its residency, so dirty_tiles(residency) covers its lost work."""
+    P = _supported_P(name)
+    plc = get_placement(name, P)
+    owners = owner_partition(plc)
+    for d in range(P):
+        universe = set(dirty_tiles(plc, plc.residency_sets[d]))
+        owned = {t for t, o in owners.items() if o == d}
+        assert owned <= universe, (name, d)

@@ -1,0 +1,83 @@
+"""Property tests for the delta-sweep schedule (core/delta.py): random
+dirty sets must yield schedules that cover exactly the pairs with a
+dirty endpoint, partition ownership exactly once across the holder
+quorums, and respect the |D|*P tile bound (DESIGN.md section 16.6).
+
+Skipped wholesale when hypothesis is not installed (same gate as the
+other property suites)."""
+
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core.delta import delta_rounds, dirty_tiles, owner_partition  # noqa: E402
+from repro.core.placement import get_placement  # noqa: E402
+from repro.core.sweep import ENGINE_MODES  # noqa: E402
+
+
+@st.composite
+def dirty_case(draw, max_P=16):
+    """A (P, dirty set) pair with dirty a (possibly empty) subset of
+    range(P)."""
+    P = draw(st.integers(min_value=1, max_value=max_P))
+    dirty = draw(st.sets(st.integers(min_value=0, max_value=P - 1),
+                         max_size=P))
+    return P, dirty
+
+
+@given(dirty_case())
+@settings(max_examples=60, deadline=None)
+def test_schedule_covers_exactly_dirty_endpoint_pairs(case):
+    P, dirty = case
+    tiles = dirty_tiles(None, dirty, P=P)
+    brute = {(x, y) for x in range(P) for y in range(x, P)
+             if x in dirty or y in dirty}
+    assert set(tiles) == brute
+    assert len(tiles) == len(set(tiles))   # no duplicates
+    assert tiles == sorted(tiles)          # deterministic canonical order
+
+
+@given(dirty_case())
+@settings(max_examples=60, deadline=None)
+def test_tile_count_formula_and_bound(case):
+    P, dirty = case
+    tiles = dirty_tiles(None, dirty, P=P)
+    d = len(dirty)
+    assert len(tiles) == d * P - d * (d - 1) // 2
+    assert len(tiles) <= d * P
+    full = P * (P + 1) // 2
+    if 0 < d < P / 2:
+        assert len(tiles) < full   # strictly output-sensitive
+    if d == P:
+        assert len(tiles) == full  # all-dirty degenerates to a full sweep
+
+
+@given(st.integers(min_value=1, max_value=16))
+@settings(max_examples=40, deadline=None)
+def test_ownership_partitions_exactly_once(P):
+    plc = get_placement("cyclic", P)
+    owners = owner_partition(plc)
+    all_tiles = {(x, y) for x in range(P) for y in range(x, P)}
+    assert set(owners) == all_tiles          # every tile, exactly once
+    assert owners == owner_partition(plc)    # deterministic
+    for (x, y), o in owners.items():
+        res = plc.residency_sets[o]
+        assert x in res and y in res         # the owner co-resides the pair
+
+
+@given(dirty_case(max_P=13), st.sampled_from(ENGINE_MODES))
+@settings(max_examples=60, deadline=None)
+def test_rounds_partition_the_schedule(case, mode):
+    P, dirty = case
+    plc = get_placement("cyclic", P)
+    tiles = dirty_tiles(plc, dirty)
+    rounds = delta_rounds(plc, tiles, mode)
+    flat = [t for grp in rounds for t in grp]
+    assert sorted(flat) == sorted(tiles)     # each tile in exactly one round
+    assert all(grp for grp in rounds)        # no empty rounds
+    if mode == "scan":
+        assert all(len(grp) == 1 for grp in rounds)
+    if mode == "batched" and tiles:
+        assert len(rounds) == 1
