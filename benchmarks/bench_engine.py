@@ -127,6 +127,12 @@ def run(csv_rows, N: int = 1024):
     modes = _modes()
     results: dict[str, dict] = {"N": N, "timings_s": {}, "comm": {},
                                 "placements": placement_stats(N)}
+    if JSON_PATH.exists():
+        # bench_memory.py owns the quantized-vs-f32 "memory" section
+        # (read-modify-write); carry it across this full rewrite
+        prev = json.loads(JSON_PATH.read_text())
+        if "memory" in prev:
+            results["memory"] = prev["memory"]
     for P, stats in results["placements"].items():
         csv_rows.append((
             f"placement_bytes_P{P}", "",

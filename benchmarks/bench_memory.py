@@ -6,11 +6,56 @@ Analytic + measured: the resident working set of the quorum PCIT pipeline is
 versus the single-node N*G + N^2 — the paper's "1/3rd the memory at 8
 nodes (16 processes)" claim is the k(16)/16 = 5/16 ≈ 0.31 line.
 Measured bytes come from the shard_map-lowered per-device buffer sizes.
+
+Alongside the CSV rows, :func:`run` records a ``memory`` section into
+BENCH_engine.json (read-modify-write — bench_engine owns the rest of
+that file) comparing the f32 resident bytes/device against the
+quantized int8/bf16 working set (DESIGN.md section 17.1): the int8
+ratio must clear the >= 2x reduction the quant path exists for.
 """
 
 from __future__ import annotations
 
+import json
+from pathlib import Path
+
 from repro.core.scheduler import build_schedule
+
+ROOT = Path(__file__).resolve().parents[1]
+ENGINE_JSON = ROOT / "BENCH_engine.json"
+
+
+def quant_resident_bytes(N: int, d: int, P: int, k: int, mode: str) -> int:
+    """Resident working-set bytes/device of an [N, d] corpus under a
+    quant mode — a jax-free mirror of
+    ``repro.core.quant.corpus_bytes_per_device`` (tests pin the two
+    formulas equal): f32 is ``k * block * d * 4``; int8/bf16 add the
+    per-block scale/delta scalars and the f32 l1/sq rows that ride the
+    gather (DESIGN.md section 17.1)."""
+    block = -(-N // P)
+    if mode == "off":
+        return k * block * d * 4
+    itemsize = {"int8": 1, "bf16": 2}[mode]
+    return k * (block * d * itemsize + 8 + 8 * block)
+
+
+def quant_memory_stats(N: int = 4096, d: int = 256,
+                       Ps=(4, 8, 13)) -> dict:
+    """The BENCH_engine.json ``memory`` section: per P, the f32 vs
+    int8/bf16 resident bytes/device under the cyclic placement and the
+    reduction ratios (DESIGN.md section 17.1).  Host-side math only —
+    no jax import."""
+    out: dict[str, dict] = {"N": N, "d": d, "per_P": {}}
+    for P in Ps:
+        s = build_schedule(P)
+        f32 = quant_resident_bytes(N, d, P, s.k, "off")
+        entry = {"k": s.k, "f32_bytes_per_device": f32}
+        for mode in ("int8", "bf16"):
+            b = quant_resident_bytes(N, d, P, s.k, mode)
+            entry[f"{mode}_bytes_per_device"] = b
+            entry[f"{mode}_reduction_x"] = round(f32 / b, 4)
+        out["per_P"][str(P)] = entry
+    return out
 
 
 def run(csv_rows, N: int = 3072, G: int = 256):
@@ -23,3 +68,17 @@ def run(csv_rows, N: int = 3072, G: int = 256):
             f"pcit_memory_P{P}", f"{per/1e6:.2f}",
             f"MB_per_proc;frac_of_single={frac:.4f};k={s.k};"
             f"paper_claim_P16=0.3125"))
+    mem = quant_memory_stats()
+    for P, st in mem["per_P"].items():
+        csv_rows.append((
+            f"quant_memory_P{P}", f"{st['f32_bytes_per_device']}",
+            f"f32_B;int8_B={st['int8_bytes_per_device']}"
+            f";int8_x={st['int8_reduction_x']}"
+            f";bf16_B={st['bf16_bytes_per_device']}"
+            f";bf16_x={st['bf16_reduction_x']};k={st['k']}"))
+    # read-modify-write: bench_engine owns the rest of the file (and
+    # preserves this key when it rewrites)
+    obj = (json.loads(ENGINE_JSON.read_text()) if ENGINE_JSON.exists()
+           else {})
+    obj["memory"] = mem
+    ENGINE_JSON.write_text(json.dumps(obj, indent=2) + "\n")

@@ -33,6 +33,11 @@ Prints ``name,us_per_call,derived`` CSV rows:
                          swept at 1/2/4 dirty blocks (writes
                          BENCH_delta.json; ``--fast-delta`` runs only
                          this one, for CI)
+  bench_quant          — quantized int8/bf16 scoring path: bytes/device
+                         reduction vs f32, quantized-only recall, and
+                         the error-bounded rescored join f32-vs-quant
+                         wall time (writes BENCH_quant.json;
+                         ``--fast-quant`` runs only this one, for CI)
   bench_attention_comm — comm-volume model: quorum vs ring vs all-gather
 
 ``--compare`` snapshots the committed BENCH_*.json files before running,
@@ -42,7 +47,9 @@ tolerance — seconds-valued leaves under ``timings_s`` warn when the
 fresh value exceeds ``tolerance x`` the committed one, ``qps`` leaves
 when it drops below ``committed / tolerance``.  Warn-only: noisy CI
 hosts make a hard gate a flake machine, but the diff is always visible
-in the job log.  Every BENCH_*.json is also stamped with an
+in the job log (``--compare-strict`` upgrades the warning to a nonzero
+exit for gating jobs that accept the flake risk).  Every BENCH_*.json is
+also stamped with an
 ``environment`` section (python/jax versions, device kind/platform/
 count) and ``--compare`` warns on drift in those fields, so a timing
 diff taken on different software or hardware is never silently read as
@@ -63,7 +70,7 @@ ROOT = Path(__file__).resolve().parents[1]
 BENCH_FILES = ("BENCH_engine.json", "BENCH_serve.json",
                "BENCH_latency.json", "BENCH_sparse.json",
                "BENCH_knn.json", "BENCH_faults.json",
-               "BENCH_delta.json")
+               "BENCH_delta.json", "BENCH_quant.json")
 COMPARE_TOLERANCE = 1.5
 
 
@@ -179,13 +186,13 @@ def main() -> None:
     """CLI driver (see module docstring for flags)."""
     from . import (bench_attention_comm, bench_attention_hlo, bench_delta,
                    bench_engine, bench_faults, bench_knn, bench_latency,
-                   bench_memory, bench_pcit_speedup, bench_quorum,
-                   bench_serve, bench_sparse)
+                   bench_memory, bench_pcit_speedup, bench_quant,
+                   bench_quorum, bench_serve, bench_sparse)
     rows = [("name", "us_per_call", "derived")]
     modules = [bench_quorum, bench_memory, bench_attention_comm,
                bench_attention_hlo, bench_engine, bench_serve,
                bench_latency, bench_sparse, bench_knn, bench_faults,
-               bench_delta, bench_pcit_speedup]
+               bench_delta, bench_quant, bench_pcit_speedup]
     if "--fast-engine" in sys.argv:
         modules = [bench_engine]
     elif "--fast-serve" in sys.argv:
@@ -200,9 +207,13 @@ def main() -> None:
         modules = [bench_faults]
     elif "--fast-delta" in sys.argv:
         modules = [bench_delta]
+    elif "--fast-quant" in sys.argv:
+        modules = [bench_quant]
     elif "--fast" in sys.argv:
         modules = modules[:3]
-    committed = snapshot_committed() if "--compare" in sys.argv else None
+    strict = "--compare-strict" in sys.argv
+    compare = strict or "--compare" in sys.argv
+    committed = snapshot_committed() if compare else None
     for mod in modules:
         try:
             mod.run(rows)
@@ -213,7 +224,9 @@ def main() -> None:
     for r in rows:
         print(",".join(str(x) for x in r))
     if committed is not None:
-        compare_results(committed)
+        regressions = compare_results(committed)
+        if strict and regressions:
+            sys.exit(1)
 
 
 if __name__ == "__main__":

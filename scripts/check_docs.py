@@ -42,6 +42,7 @@ MUST_CITE_DESIGN = [
     "core/env.py",
     "core/faults.py",
     "core/delta.py",
+    "core/quant.py",
     "launch/elastic.py",
     "serving/cover.py",
     "serving/batching.py",

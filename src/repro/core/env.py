@@ -35,6 +35,7 @@ from typing import Callable, Optional, Tuple, Union
 __all__ = [
     "EnvKnob",
     "ENV_KNOBS",
+    "QUANT_MODES",
     "read_knob",
     "check_unknown_knobs",
     "describe_knobs",
@@ -93,6 +94,10 @@ def _placement_choices() -> Tuple[str, ...]:
     return ("auto", "plane") + tuple(sorted(registered_placements()))
 
 
+#: valid values of ``REPRO_QUANT`` (core/quant.py; DESIGN.md section 17)
+QUANT_MODES: Tuple[str, ...] = ("off", "int8", "bf16")
+
+
 ENV_KNOBS = {
     "REPRO_ALLPAIRS_MODE": EnvKnob(
         name="REPRO_ALLPAIRS_MODE", kind="choice", choices=_mode_choices,
@@ -146,6 +151,11 @@ ENV_KNOBS = {
         description="continuous batcher: admission-control bound on "
                     "waiting requests before submits are rejected "
                     "(default 1024)"),
+    "REPRO_QUANT": EnvKnob(
+        name="REPRO_QUANT", kind="choice", choices=lambda: QUANT_MODES,
+        description="quantized scoring path with error-bounded exact "
+                    "rescoring: off (default, pure f32), int8 (per-block "
+                    "symmetric int8), bf16"),
     "REPRO_TRACE": EnvKnob(
         name="REPRO_TRACE", kind="str",
         description="structured tracing: 0/unset off, 1 on (Chrome-trace "

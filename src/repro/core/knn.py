@@ -370,7 +370,8 @@ def _knn_fn(mesh, axis_name: str, N: int, block: int, topk: int,
 
 def knn_graph(corpus, mesh, *, topk: int, axis_name: str = "q",
               metric: str = "dot", mode: str = "auto", placement=None,
-              use_kernel: bool = False) -> KnnResult:
+              use_kernel: bool = False,
+              quant: str | None = None) -> KnnResult:
     """The k-NN graph of ``corpus`` rows, exactly (DESIGN.md section
     12.3).
 
@@ -378,9 +379,22 @@ def knn_graph(corpus, mesh, *, topk: int, axis_name: str = "q",
     runs :func:`quorum_allpairs_knn` under the selected placement (None
     defers to ``REPRO_PLACEMENT``), and slices the padding rows back
     off.  ``use_kernel`` routes the batched inner step through the fused
-    Pallas kernel (kernels/pairwise_topk.py).  Returns a
-    :class:`KnnResult` with each row's exact top-k neighbors.
+    Pallas kernel (kernels/pairwise_topk.py).  ``quant`` selects the
+    quantized candidate-generation + certified-rescoring path (DESIGN.md
+    section 17): ``"int8"`` / ``"bf16"`` route through
+    :func:`core.quant.quant_knn_graph` (bit-identical results),
+    ``"off"`` forces pure f32, None defers to ``REPRO_QUANT``.  Returns
+    a :class:`KnnResult` with each row's exact top-k neighbors.
     """
+    if quant is None:
+        from .quant import quant_from_env
+        quant = quant_from_env()
+    if quant != "off":
+        from . import quant as quant_mod
+        return quant_mod.quant_knn_graph(
+            corpus, mesh, topk=topk, quant=quant, axis_name=axis_name,
+            metric=metric, mode=mode, placement=placement,
+            use_kernel=use_kernel)
     corpus = np.asarray(corpus, np.float32)
     N, d = corpus.shape
     P = mesh.shape[axis_name]

@@ -607,7 +607,8 @@ def similarity_join(corpus, mesh, *, threshold: float, axis_name: str = "q",
                     metric: str = "dot", mode: str = "auto", placement=None,
                     capacity: int | None = None, prefilter: bool = True,
                     use_kernel: bool = False, escalate: bool = True,
-                    max_doublings: int = 16) -> JoinResult:
+                    max_doublings: int = 16,
+                    quant: str | None = None) -> JoinResult:
     """All pairs of ``corpus`` rows with score >= threshold, exactly once.
 
     The host entry point (DESIGN.md section 11): pads the [N, d] corpus
@@ -622,9 +623,24 @@ def similarity_join(corpus, mesh, *, threshold: float, axis_name: str = "q",
 
     ``use_kernel`` routes the batched inner step through the fused Pallas
     kernel (kernels/pairwise_threshold.py); ``prefilter`` toggles the
-    norm-bound block-pair skip.  Returns a :class:`JoinResult` with pairs
-    sorted by (i, j).
+    norm-bound block-pair skip.  ``quant`` selects the quantized
+    band-emit + exact-rescoring path (DESIGN.md section 17): ``"int8"``
+    / ``"bf16"`` route through :func:`core.quant.quant_similarity_join`
+    (bit-identical results; ``prefilter`` does not apply there — the
+    certified band is the selectivity mechanism), ``"off"`` forces the
+    pure f32 path, and None defers to ``REPRO_QUANT``.  Returns a
+    :class:`JoinResult` with pairs sorted by (i, j).
     """
+    if quant is None:
+        from .quant import quant_from_env
+        quant = quant_from_env()
+    if quant != "off":
+        from . import quant as quant_mod
+        return quant_mod.quant_similarity_join(
+            corpus, mesh, threshold=threshold, quant=quant,
+            axis_name=axis_name, metric=metric, mode=mode,
+            placement=placement, capacity=capacity, use_kernel=use_kernel,
+            escalate=escalate, max_doublings=max_doublings)
     corpus = np.asarray(corpus, np.float32)
     N, d = corpus.shape
     if N >= MAX_ROWS_F32_EXACT:

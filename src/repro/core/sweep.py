@@ -189,12 +189,16 @@ def _tree_nbytes(tree) -> int:
     return sum(obs_trace.nbytes_of(leaf) for leaf in jax.tree.leaves(tree))
 
 
-def quorum_gather(x: jax.Array, schedule: PairSchedule, axis_name: str,
-                  *, overlap_fn: Callable[[int, jax.Array], Any] | None = None):
+def quorum_gather(x, schedule: PairSchedule, axis_name: str,
+                  *, overlap_fn: Callable[[int, Any], Any] | None = None):
     """Gather this device's quorum blocks (DESIGN.md section 2, phase 1).
 
     Args:
-      x: the local block, shape [block, ...] (inside shard_map).
+      x: the local block, shape [block, ...] (inside shard_map), or an
+        arbitrary pytree of per-block arrays — every leaf rides the same
+        cyclic shifts, which is how the quantized corpus threads its
+        per-block scale/norm side arrays through the data plane
+        (core/quant.py, DESIGN.md section 17).
       schedule: PairSchedule for the quorum axis size P.
       axis_name: mesh axis the blocks are sharded over.
       overlap_fn: optional ``f(slot, block)`` called as each block lands —
@@ -203,34 +207,37 @@ def quorum_gather(x: jax.Array, schedule: PairSchedule, axis_name: str,
         independent ppermutes and per-slot compute).
 
     Returns:
-      stacked quorum blocks [k, block, ...]; slot s holds global block
-      (i + shifts[s]) % P.  If overlap_fn is given, returns the list of its
-      results instead.
+      stacked quorum blocks [k, block, ...] (pytree x: each leaf gains the
+      leading slot axis); slot s holds global block (i + shifts[s]) % P.
+      If overlap_fn is given, returns the list of its results instead.
     """
     P = schedule.P
     shifts = [int(s) for s in schedule.shifts]
     # comm accounting fires at jit-trace time: shapes are static, so the
-    # counted bytes are exact, once per compiled program (DESIGN.md 14.2)
+    # counted bytes are exact, once per compiled program (DESIGN.md 14.2);
+    # _tree_nbytes degenerates to nbytes_of for a plain array
     tr = obs_trace.get_tracer()
     if tr:
         nz = sum(1 for a in shifts if a % P != 0)
         tr.count("comm.ppermute.gather_hops", nz)
-        tr.count("comm.ppermute.gather_bytes", nz * obs_trace.nbytes_of(x))
+        tr.count("comm.ppermute.gather_bytes", nz * _tree_nbytes(x))
     span = tr.span("sweep.gather", P=P, k=len(shifts)) if tr \
         else obs_trace.NOOP.span("")
     with span:
         blocks = []
         results = []
         for slot, a in enumerate(shifts):
-            blk = x if a == 0 else lax.ppermute(x, axis_name,
-                                                _shift_perm(P, a))
+            blk = x if a == 0 else jax.tree.map(
+                lambda leaf, a=a: lax.ppermute(leaf, axis_name,
+                                               _shift_perm(P, a)), x)
             if overlap_fn is not None:
                 results.append(overlap_fn(slot, blk))
             else:
                 blocks.append(blk)
         if overlap_fn is not None:
             return results
-        return jnp.stack(blocks, axis=0)
+        return jax.tree.map(lambda *leaves: jnp.stack(leaves, axis=0),
+                            *blocks)
 
 
 def quorum_scatter(partials, schedule: PairSchedule, axis_name: str,
@@ -538,7 +545,7 @@ def _pair_sweep_impl(emitter: SweepEmitter, *, schedule: PairSchedule,
             quorum_gather(x, schedule, axis_name, overlap_fn=on_land)
         else:
             for slot in range(schedule.k):
-                on_land(slot, stack[slot])
+                on_land(slot, jax.tree.map(lambda l: l[slot], stack))
         return emitter.overlap_finalize(state)
 
     quorum = stack if stack is not None else quorum_gather(x, schedule,

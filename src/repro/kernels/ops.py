@@ -42,21 +42,33 @@ def _interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
+# hooks that already warned about a missing kernel this process — the
+# warn-once keyset (the core/env.py ``_seen_env_keys`` pattern, keyed on
+# the hook name so it survives ``warnings.simplefilter('always')``);
+# tests reset it between cases (tests/test_ops_dispatch.py)
+_warned_fallback: set = set()
+
+
 def _call_with_fallback(kernel_thunk, ref_thunk, name: str):
     """Run a Pallas engine-hook kernel, degrading to its ref.py oracle.
 
     Only ``ImportError`` / ``NotImplementedError`` — the "kernel is
     absent on this backend" signals raised at trace time by the Pallas
     machinery — trigger the fallback; anything else (shape errors,
-    numeric asserts) propagates so real kernel bugs stay visible.
+    numeric asserts) propagates so real kernel bugs stay visible.  The
+    warning fires once per hook per process (every retrace of a hot
+    engine loop hits this path, and a per-call warning floods the log
+    without adding information).
     """
     try:
         return kernel_thunk()
     except (ImportError, NotImplementedError) as e:
-        warnings.warn(
-            f"Pallas kernel {name!r} unavailable on this backend "
-            f"({type(e).__name__}: {e}); falling back to the jnp "
-            "reference implementation", RuntimeWarning, stacklevel=2)
+        if name not in _warned_fallback:
+            _warned_fallback.add(name)
+            warnings.warn(
+                f"Pallas kernel {name!r} unavailable on this backend "
+                f"({type(e).__name__}: {e}); falling back to the jnp "
+                "reference implementation", RuntimeWarning, stacklevel=2)
         return ref_thunk()
 
 
@@ -231,6 +243,77 @@ def pairwise_topk(quorum, lo, hi, meta, *, topk, block_rows, metric="dot"):
         lambda: ref.pairwise_topk(q, lo, hi, meta, topk=topk,
                                   block_rows=block_rows, metric=metric),
         "pairwise_topk")
+    return vals[:, :block], idx[:, :block]
+
+
+@functools.partial(jax.jit, static_argnames=("threshold", "capacity",
+                                             "block_rows", "metric"))
+def pairwise_threshold_q(q, sd, l1, sq, lo, hi, meta, *, threshold,
+                         capacity, block_rows, metric="dot"):
+    """Quantized thresholded-join step for the quant engine's
+    ``batch_fn`` hook (core/quant.py; DESIGN.md section 17.3).
+
+    q: [k, block, d] int8/bf16 quantized blocks; sd: [k, 2] f32
+    per-block (scale, delta); l1/sq: [k, block] f32 row L1 norms and
+    exact squared norms; lo/hi/meta and the static args as in
+    :func:`pairwise_threshold`.  Emits the widened ``s_q >= threshold -
+    eps`` band under the same overflow contract; the host rescoring pass
+    resolves it exactly.
+
+    Pads block rows up to the 8-sublane multiple with zero rows (zero
+    quantized values and zero norms — the valid-row bounds in ``meta``
+    already reject them) and capacity up to the 128-lane multiple,
+    slicing back.  Falls back to ref.pairwise_threshold_q when the
+    Pallas lowering is absent (see module docstring).
+    """
+    from .pairwise_batch_q import pairwise_threshold_q_pallas
+    qp, _ = _pad_to(q, 8, 1)
+    l1p, _ = _pad_to(l1, 8, 1)
+    sqp, _ = _pad_to(sq, 8, 1)
+    capp = -(-capacity // 128) * 128
+    vals, gi, gj, count = _call_with_fallback(
+        lambda: pairwise_threshold_q_pallas(
+            qp, sd, l1p, sqp, lo, hi, meta, threshold=threshold,
+            capacity=capp, block_rows=block_rows, metric=metric,
+            interpret=_interpret()),
+        lambda: ref.pairwise_threshold_q(
+            qp, sd[:, 0], sd[:, 1], l1p, sqp, lo, hi, meta,
+            threshold=threshold, capacity=capp, block_rows=block_rows,
+            metric=metric),
+        "pairwise_threshold_q")
+    return (vals[:capacity], gi[:capacity], gj[:capacity],
+            count.reshape(()))
+
+
+@functools.partial(jax.jit, static_argnames=("topk", "block_rows", "metric"))
+def pairwise_topk_q(q, sd, sq, lo, hi, meta, *, topk, block_rows,
+                    metric="dot"):
+    """Quantized pair-scoring top-k step for the quant engine's
+    ``batch_fn`` hook (core/quant.py; DESIGN.md section 17.3).
+
+    q: [k, block, d] int8/bf16 quantized blocks; sd: [k, 2] f32
+    per-block (scale, delta); sq: [k, block] exact f32 squared row
+    norms; lo/hi/meta and the static args as in :func:`pairwise_topk`.
+    Returns the per-slot running *quantized* top-k — the host certifies
+    and rescores the lists exactly.
+
+    Pads block rows up to the 8-sublane multiple with zero rows (zero
+    quantized values and zero norms — the valid-row bounds in ``meta``
+    already reject them as candidates and padded rows' own lists are
+    sliced back off).  Falls back to ref.pairwise_topk_q when the
+    Pallas lowering is absent (see module docstring).
+    """
+    from .pairwise_batch_q import pairwise_topk_q_pallas
+    qp, block = _pad_to(q, 8, 1)
+    sqp, _ = _pad_to(sq, 8, 1)
+    vals, idx = _call_with_fallback(
+        lambda: pairwise_topk_q_pallas(
+            qp, sd, sqp, lo, hi, meta, topk=topk, block_rows=block_rows,
+            metric=metric, interpret=_interpret()),
+        lambda: ref.pairwise_topk_q(
+            qp, sd[:, 0], sqp, lo, hi, meta, topk=topk,
+            block_rows=block_rows, metric=metric),
+        "pairwise_topk_q")
     return vals[:, :block], idx[:, :block]
 
 

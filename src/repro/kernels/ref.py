@@ -15,6 +15,42 @@ NEG_INF = -1e30
 # them using this exact value
 IDX_SENTINEL = np.int32(np.iinfo(np.int32).max)
 QUERY_METRICS = ("dot", "l2")
+# relative float32-accumulation slack folded into the certified
+# quantization error bound (core/quant.py; DESIGN.md section 17) — a few
+# hundred ulps, orders of magnitude above what a <=2^13-term f32 dot can
+# actually accumulate at the repo's block sizes, and still orders of
+# magnitude below any real quantization error
+FP_REL = 1e-6
+
+
+def quant_eps_tile(delta_lo, delta_hi, l1_lo, l1_hi, *, dim: int,
+                   metric: str = "dot") -> jax.Array:
+    """Certified per-entry error bound of one quantized score tile
+    (DESIGN.md section 17.2).
+
+    For rows quantized with per-block steps ``delta`` (max per-entry
+    rounding error) and f32 row L1 norms ``l1``,
+
+      |s_q - s_f32| <= d_lo*l1_hi + d_hi*l1_lo + 3*dim*d_lo*d_hi
+                       + FP_REL*(l1_lo*l1_hi + 1)
+
+    per (row, col) entry; the ``3*dim*d_lo*d_hi`` term absorbs the
+    |x_hat|_1 <= |x|_1 + dim*delta slack of bounding via the quantized
+    operands, and the FP_REL term covers f32 accumulation order.  L2
+    scores are ``2*dot - |a|^2 - |b|^2`` with exact f32 norms carried as
+    side arrays, so their bound is exactly twice the dot bound.
+
+    delta_lo/delta_hi: scalars (or [1]); l1_lo/l1_hi: [block] f32.
+    Returns the [block, block] bound, rows = lo side, cols = hi side.
+    """
+    delta_lo = jnp.asarray(delta_lo, jnp.float32).reshape(())
+    delta_hi = jnp.asarray(delta_hi, jnp.float32).reshape(())
+    eps = (delta_lo * l1_hi[None, :] + delta_hi * l1_lo[:, None]
+           + 3.0 * dim * delta_lo * delta_hi
+           + FP_REL * (l1_lo[:, None] * l1_hi[None, :] + 1.0))
+    if metric == "l2":
+        eps = 2.0 * eps
+    return eps
 
 
 def pairwise_corr(xs_i: jax.Array, xs_j: jax.Array) -> jax.Array:
@@ -162,6 +198,153 @@ def pairwise_threshold(quorum, lo, hi, meta, *, threshold: float,
             jnp.where(used, ibuf, jnp.int32(IDX_SENTINEL)),
             jnp.where(used, jbuf, jnp.int32(IDX_SENTINEL)),
             count)
+
+
+def pairwise_threshold_q(q, scale, delta, l1, sq, lo, hi, meta, *,
+                         threshold: float, capacity: int, block_rows: int,
+                         metric: str = "dot"):
+    """Quantized sparse-join compaction oracle with the widened keep band
+    (kernels/pairwise_batch_q.py; DESIGN.md section 17.3).
+
+    q: [k, block, d] int8 or bf16 quantized blocks; scale/delta: [k] (or
+    [k, 1]) f32 per-block dequant scale and rounding step; l1/sq: [k,
+    block] f32 row L1 norms and exact squared L2 norms of the *original*
+    f32 rows; lo/hi/meta as in :func:`pairwise_threshold`.  Scores are
+    the dequantized ``(qi_f32 @ qj_f32.T) * (s_lo * s_hi)`` (l2: ``(2 s -
+    sq_hi) - sq_lo`` with the exact norms), and an entry is emitted when
+    ``s_q >= threshold - eps`` with eps from :func:`quant_eps_tile` — the
+    sound over-approximation the host-side exact rescoring pass then
+    resolves.  Buffer layout, compaction order, overflow contract, and
+    sentinels match :func:`pairwise_threshold` exactly.
+    """
+    if metric not in QUERY_METRICS:
+        raise ValueError(f"metric must be one of {QUERY_METRICS}, "
+                         f"got {metric!r}")
+    qf = jnp.asarray(q).astype(jnp.float32)
+    d = qf.shape[-1]
+    scale = jnp.asarray(scale, jnp.float32).reshape(-1)
+    delta = jnp.asarray(delta, jnp.float32).reshape(-1)
+    l1 = jnp.asarray(l1, jnp.float32)
+    sq = jnp.asarray(sq, jnp.float32)
+    lo = jnp.asarray(lo, jnp.int32)
+    hi = jnp.asarray(hi, jnp.int32)
+    meta = jnp.asarray(meta, jnp.int32)
+    lhs = jnp.take(qf, lo, axis=0)              # [n_pairs, block, d]
+    rhs = jnp.take(qf, hi, axis=0)
+    s_lo = jnp.take(scale, lo)                  # [n_pairs]
+    s_hi = jnp.take(scale, hi)
+    dots = jnp.einsum("pbd,pcd->pbc", lhs, rhs) * (s_lo * s_hi)[:, None, None]
+    if metric == "l2":
+        scores = (2.0 * dots
+                  - jnp.take(sq, hi, axis=0)[:, None, :]) \
+            - jnp.take(sq, lo, axis=0)[:, :, None]
+    else:
+        scores = dots
+    d_lo = jnp.take(delta, lo)[:, None, None]
+    d_hi = jnp.take(delta, hi)[:, None, None]
+    l1_lo = jnp.take(l1, lo, axis=0)[:, :, None]
+    l1_hi = jnp.take(l1, hi, axis=0)[:, None, :]
+    eps = (d_lo * l1_hi + d_hi * l1_lo + 3.0 * d * d_lo * d_hi
+           + FP_REL * (l1_lo * l1_hi + 1.0))
+    if metric == "l2":
+        eps = 2.0 * eps
+    active, is_self, ga, gb, nv_lo, nv_hi = (meta[:, c] for c in range(6))
+    r = jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
+    s = jax.lax.broadcasted_iota(jnp.int32, scores.shape, 2)
+    keep = (scores >= threshold - eps) & (active == 1)[:, None, None]
+    keep &= (r < nv_lo[:, None, None]) & (s < nv_hi[:, None, None])
+    keep &= jnp.where((is_self == 1)[:, None, None], r < s, True)
+    gi = ga[:, None, None] * block_rows + r
+    gj = gb[:, None, None] * block_rows + s
+    ei = jnp.minimum(gi, gj).reshape(-1)
+    ej = jnp.maximum(gi, gj).reshape(-1)
+    keep = keep.reshape(-1)
+    vals = scores.reshape(-1).astype(jnp.float32)
+    pos = jnp.cumsum(keep.astype(jnp.int32)) - 1
+    pos = jnp.where(keep, pos, capacity)
+    count = jnp.sum(keep.astype(jnp.int32))
+    vbuf = jnp.full((capacity,), NEG_INF, jnp.float32
+                    ).at[pos].set(vals, mode="drop")
+    ibuf = jnp.full((capacity,), jnp.int32(IDX_SENTINEL)
+                    ).at[pos].set(ei, mode="drop")
+    jbuf = jnp.full((capacity,), jnp.int32(IDX_SENTINEL)
+                    ).at[pos].set(ej, mode="drop")
+    used = jnp.arange(capacity) < count
+    return (jnp.where(used, vbuf, NEG_INF),
+            jnp.where(used, ibuf, jnp.int32(IDX_SENTINEL)),
+            jnp.where(used, jbuf, jnp.int32(IDX_SENTINEL)),
+            count)
+
+
+def pairwise_topk_q(q, scale, sq, lo, hi, meta, *, topk: int,
+                    block_rows: int, metric: str = "dot"):
+    """Quantized per-slot batch top-k oracle
+    (kernels/pairwise_batch_q.py; DESIGN.md section 17.3).
+
+    q: [k, block, d] int8 or bf16 quantized blocks; scale: [k] (or
+    [k, 1]) f32 dequant scales; sq: [k, block] exact f32 squared row
+    norms (l2 only); lo/hi/meta as in :func:`pairwise_topk`.  Tiles are
+    the dequantized ``(qi_f32 @ qj_f32.T) * (s_lo * s_hi)`` with the l2
+    orientation formulas substituting the exact norms; the merge order,
+    sentinels, and output layout match :func:`pairwise_topk` exactly.
+    No error band is applied here — the caller certifies and rescores
+    the quantized lists host-side (core/quant.py).
+    """
+    if metric not in QUERY_METRICS:
+        raise ValueError(f"metric must be one of {QUERY_METRICS}, "
+                         f"got {metric!r}")
+    qf = jnp.asarray(q).astype(jnp.float32)
+    k, block, d = qf.shape
+    scale = jnp.asarray(scale, jnp.float32).reshape(-1)
+    sq = jnp.asarray(sq, jnp.float32)
+    lo = jnp.asarray(lo, jnp.int32)
+    hi = jnp.asarray(hi, jnp.int32)
+    meta = jnp.asarray(meta, jnp.int32)
+    sent = jnp.int32(IDX_SENTINEL)
+
+    def merge(cv, ci, sv, si):
+        v = jnp.concatenate([cv, sv], axis=-1)
+        i = jnp.concatenate([ci, si], axis=-1)
+        nv, ni = jax.lax.sort((-v, i), num_keys=2)
+        return -nv[..., :topk], ni[..., :topk]
+
+    def body(carry, inp):
+        vals, idx = carry
+        lo_p, hi_p, m = inp
+        active, is_self, ga, gb, nv_lo, nv_hi = (m[c] for c in range(6))
+        bi = jnp.take(qf, lo_p, axis=0)
+        bj = jnp.take(qf, hi_p, axis=0)
+        dots = (bi @ bj.T) * (scale[lo_p] * scale[hi_p])  # [block, block]
+        if metric == "l2":
+            bin2 = jnp.take(sq, lo_p, axis=0)
+            bjn2 = jnp.take(sq, hi_p, axis=0)
+            t_lo = (2.0 * dots - bjn2[None, :]) - bin2[:, None]
+            t_hi = (2.0 * dots - bin2[:, None]) - bjn2[None, :]
+        else:
+            t_lo = t_hi = dots
+        r = jax.lax.broadcasted_iota(jnp.int32, (block, block), 0)
+        s = jax.lax.broadcasted_iota(jnp.int32, (block, block), 1)
+        keep = ((active == 1) & (s < nv_hi)
+                & jnp.where(is_self == 1, r != s, True))
+        cv = jnp.where(keep, t_lo, NEG_INF)
+        ci = jnp.where(keep, gb * block_rows + s, sent)
+        mv, mi = merge(jnp.take(vals, lo_p, axis=0),
+                       jnp.take(idx, lo_p, axis=0), cv, ci)
+        vals = vals.at[lo_p].set(mv)
+        idx = idx.at[lo_p].set(mi)
+        keep_t = ((active == 1) & (is_self == 0) & (r < nv_lo)).T
+        cv_t = jnp.where(keep_t, t_hi.T, NEG_INF)
+        ci_t = jnp.where(keep_t, (ga * block_rows + r).T, sent)
+        mv2, mi2 = merge(jnp.take(vals, hi_p, axis=0),
+                         jnp.take(idx, hi_p, axis=0), cv_t, ci_t)
+        vals = vals.at[hi_p].set(mv2)
+        idx = idx.at[hi_p].set(mi2)
+        return (vals, idx), None
+
+    init = (jnp.full((k, block, topk), NEG_INF, jnp.float32),
+            jnp.full((k, block, topk), sent, jnp.int32))
+    (vals, idx), _ = jax.lax.scan(body, init, (lo, hi, meta))
+    return vals, idx
 
 
 def pairwise_topk(quorum, lo, hi, meta, *, topk: int, block_rows: int,

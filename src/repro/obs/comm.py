@@ -39,12 +39,34 @@ from . import trace as trace_mod
 
 __all__ = [
     "SweepComm",
+    "block_bytes_of",
+    "quant_block_bytes",
     "predict_sweep_comm",
     "predict_tree_merge_comm",
     "predict_ring_gather_comm",
     "traced_sweep_comm",
     "verify_dense_comm",
+    "verify_quant_comm",
 ]
+
+
+def block_bytes_of(block: int, dim: int, dtype: str = "float32") -> int:
+    """One [block, dim] quorum block's payload bytes under ``dtype``
+    (DESIGN.md section 14.3) — the predictor's dtype-itemsize
+    parametrization; ``int8``/``bfloat16`` stacks shrink every gather
+    hop by the same 4x/2x their residency shrinks."""
+    return block * dim * np.dtype(dtype).itemsize
+
+
+def quant_block_bytes(block: int, dim: int, mode: str) -> int:
+    """One quantized block's per-hop gather payload (DESIGN.md section
+    17.1): the [block, dim] codes at the mode's itemsize plus the side
+    arrays that ride the same shifts — scale + delta (two f32 scalars)
+    and the l1 + sq f32 rows.  Mirrors core.quant's QuantBlocks pytree
+    leaf-for-leaf, so the traced gather bytes of a quantized sweep
+    equal ``nonzero_shifts * quant_block_bytes`` exactly."""
+    from ..core.quant import quant_itemsize
+    return block * dim * quant_itemsize(mode) + 8 + 8 * block
 
 
 @dataclasses.dataclass(frozen=True)
@@ -148,7 +170,7 @@ def traced_sweep_comm(tracer) -> Dict[str, int]:
 def verify_dense_comm(P: Optional[int] = None,
                       placements: Optional[Sequence[str]] = None,
                       *, block: int = 4, dim: int = 3,
-                      mode: str = "batched",
+                      mode: str = "batched", dtype: str = "float32",
                       verbose: bool = True) -> List[Dict[str, int]]:
     """Run one dense sweep per registered placement under a fresh tracer
     and assert the traced ppermute / all-gather bytes equal the
@@ -158,7 +180,10 @@ def verify_dense_comm(P: Optional[int] = None,
     Needs ``P`` jax devices (fake-device subprocesses in tests).  The
     toy pair function emits block-shaped partials, so
     ``partial_bytes == block_bytes`` and the default prediction is
-    exact.  Returns one traced-actuals dict per placement checked.
+    exact.  ``dtype`` parametrizes the block itemsize
+    (:func:`block_bytes_of`) — ``bfloat16``/``int8`` stacks must trace
+    to proportionally smaller hops.  Returns one traced-actuals dict
+    per placement checked.
     """
     import jax
     import jax.numpy as jnp
@@ -172,12 +197,15 @@ def verify_dense_comm(P: Optional[int] = None,
         raise RuntimeError(f"need {Pn} devices, have {len(devs)}")
     mesh = jax.make_mesh((Pn,), ("q",), devices=devs[:Pn])
     rng = np.random.default_rng(0)
-    x = rng.normal(size=(Pn * block, dim)).astype(np.float32)
-    block_bytes = block * dim * 4
+    x = jnp.asarray(rng.normal(size=(Pn * block, dim)) * 10).astype(dtype)
+    block_bytes = block_bytes_of(block, dim, dtype)
 
     def pair_fn(bi, bj):
-        # out_j(bi, bj) == out_i(bj, bi): the engine's symmetry contract
-        return bi * jnp.sum(bj * bj), bj * jnp.sum(bi * bi)
+        # out_j(bi, bj) == out_i(bj, bi): the engine's symmetry contract;
+        # cast back to the stack dtype (jnp.sum promotes int8 -> int32)
+        # so partial_bytes == block_bytes holds at every swept dtype
+        return ((bi * jnp.sum(bj * bj)).astype(bi.dtype),
+                (bj * jnp.sum(bi * bi)).astype(bj.dtype))
 
     out: List[Dict[str, int]] = []
     try:
@@ -211,15 +239,86 @@ def verify_dense_comm(P: Optional[int] = None,
     finally:
         trace_mod.reset()
     if verbose:
-        print(f"comm predictor OK: {len(out)} placement(s) at P={Pn}, "
-              f"traced == predicted exactly")
+        print(f"comm predictor OK: {len(out)} placement(s) at P={Pn} "
+              f"dtype={dtype}, traced == predicted exactly")
+    return out
+
+
+def verify_quant_comm(P: Optional[int] = None,
+                      placements: Optional[Sequence[str]] = None,
+                      *, block: int = 4, dim: int = 3,
+                      qmode: str = "int8",
+                      verbose: bool = True) -> List[Dict[str, int]]:
+    """Gather one quantized QuantBlocks stack per registered placement
+    under a fresh tracer and assert the traced ppermute gather bytes
+    equal ``nonzero_shifts * quant_block_bytes`` exactly (DESIGN.md
+    sections 14.3, 17.1) — the quantized twin of
+    :func:`verify_dense_comm`, pinning the side arrays' payload
+    accounting to the predictor formula.
+    """
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as PS
+
+    from ..core import sweep as sweep_mod
+    from ..core.quant import QuantBlocks, quantize_corpus
+
+    devs = jax.devices()
+    Pn = P or len(devs)
+    if len(devs) < Pn:
+        raise RuntimeError(f"need {Pn} devices, have {len(devs)}")
+    mesh = jax.make_mesh((Pn,), ("q",), devices=devs[:Pn])
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(Pn * block, dim)).astype(np.float32)
+    qc = quantize_corpus(x, Pn, block, qmode)
+    leaves = qc.device_arrays()
+    payload = quant_block_bytes(block, dim, qmode)
+
+    out: List[Dict[str, int]] = []
+    try:
+        for plc in supported_placements(Pn):
+            if placements is not None and plc.name not in placements:
+                continue
+            sched = plc.schedule()
+            tracer = trace_mod.configure()
+
+            def f(q, s, d_, l1, sq):
+                qb = QuantBlocks(q=q, scale=s, delta=d_, l1=l1, sq=sq)
+                g = sweep_mod.quorum_gather(qb, sched, "q")
+                return g.q
+
+            spec = PS("q")
+            run = jax.jit(jax.shard_map(f, mesh=mesh, in_specs=(spec,) * 5,
+                                        out_specs=spec))
+            np.asarray(run(*leaves))
+            got = traced_sweep_comm(tracer)
+            nz = sum(1 for a in sched.shifts if int(a) % plc.P != 0)
+            want = nz * payload
+            assert got["gather_bytes"] == want, (
+                f"{plc.name} P={Pn} quant={qmode}: traced gather_bytes="
+                f"{got['gather_bytes']} != predicted {want}")
+            assert got["gather_hops"] == nz, (
+                f"{plc.name} P={Pn} quant={qmode}: traced gather_hops="
+                f"{got['gather_hops']} != {nz}")
+            out.append({"placement": plc.name, "qmode": qmode, **got})
+            if verbose:
+                print(f"  quant comm {plc.name:10s} P={Pn:<3d} "
+                      f"quant={qmode}: gather={got['gather_bytes']}B "
+                      f"x{got['gather_hops']} == predicted")
+    finally:
+        trace_mod.reset()
+    if verbose:
+        print(f"quant comm predictor OK: {len(out)} placement(s) at "
+              f"P={Pn} quant={qmode}, traced == predicted exactly")
     return out
 
 
 def _main(argv=None) -> int:
     """CLI: ``python -m repro.obs.comm [--P N] [--placements ...]
-    [--mode batched]`` — the predictor-vs-traced equality check
-    (DESIGN.md section 14.3)."""
+    [--mode batched] [--dtype float32] [--quant int8]`` — the
+    predictor-vs-traced equality check (DESIGN.md section 14.3); with
+    ``--quant`` it also pins the quantized-stack gather payload
+    (DESIGN.md section 17.1)."""
     import argparse
     ap = argparse.ArgumentParser(
         description="assert traced ppermute bytes == analytical "
@@ -228,8 +327,14 @@ def _main(argv=None) -> int:
     ap.add_argument("--placements", nargs="*", default=None)
     ap.add_argument("--mode", default="batched",
                     choices=["batched", "overlap", "scan"])
+    ap.add_argument("--dtype", default="float32",
+                    choices=["float32", "bfloat16", "int8"])
+    ap.add_argument("--quant", default=None, choices=["int8", "bf16"])
     args = ap.parse_args(argv)
-    verify_dense_comm(args.P, args.placements, mode=args.mode)
+    verify_dense_comm(args.P, args.placements, mode=args.mode,
+                      dtype=args.dtype)
+    if args.quant is not None:
+        verify_quant_comm(args.P, args.placements, qmode=args.quant)
     return 0
 
 

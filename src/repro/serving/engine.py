@@ -603,15 +603,21 @@ class ServingCorpus:
         self.d = state.shard.shape[1]
         self.schedule = self.placement.schedule()
         self.plan = build_cover(self.P, self.placement)
+        self.quant = None        # QuantServing when built with quant != off
 
     @classmethod
     def build(cls, corpus: np.ndarray, mesh, axis_name: str = "q",
-              block: int | None = None, placement=None) -> "ServingCorpus":
+              block: int | None = None, placement=None,
+              quant: str | None = None) -> "ServingCorpus":
         """``block`` (optional) reserves a larger per-block row capacity
         than ceil(N/P), leaving empty slots for streamed appends.
         ``placement`` picks the residency layer (a Placement or spec
         name); None defers to ``REPRO_PLACEMENT`` (default auto ==
-        cyclic)."""
+        cyclic).  ``quant`` additionally keeps a quantized resident
+        stack (core/quant.py QuantServing; DESIGN.md section 17.4) the
+        :meth:`query` path scores against with certified exact
+        rescoring — ``"int8"``/``"bf16"`` enable it, ``"off"`` stays
+        pure f32, None defers to ``REPRO_QUANT``."""
         P = mesh.shape[axis_name]
         plc = (placement_from_env(P) if placement is None
                else resolve_placement(placement, P))
@@ -620,7 +626,15 @@ class ServingCorpus:
         block = state.shard.shape[0] // P
         N = corpus.shape[0]
         filled = np.clip(N - block * np.arange(P), 0, block).astype(np.int64)
-        return cls(mesh, axis_name, state, filled, placement=plc)
+        out = cls(mesh, axis_name, state, filled, placement=plc)
+        from ..core.quant import QuantServing, quant_from_env
+        qmode = quant_from_env() if quant is None else quant
+        if qmode != "off":
+            rows = np.zeros((P * block, corpus.shape[1]), np.float32)
+            rows[:N] = np.asarray(corpus, np.float32)
+            out.quant = QuantServing(qmode, mesh, axis_name, out.schedule,
+                                     block, rows)
+        return out
 
     @property
     def n_valid(self) -> int:
@@ -641,9 +655,24 @@ class ServingCorpus:
         With tracing on, each call is a ``serving.query`` host span
         (blocked until the result is device-complete, so the span is
         true end-to-end latency) and a ``serving.queries`` counter
-        (DESIGN.md section 14.2)."""
+        (DESIGN.md section 14.2).
+
+        A corpus built with ``quant != "off"`` scores against its
+        quantized resident stack and rescores the certified candidates
+        exactly (core/quant.py serving_query; DESIGN.md section 17.4) —
+        bit-identical results; the fused f32 kernel does not apply
+        there."""
         if topk < 1:
             raise ValueError(f"topk must be >= 1, got {topk}")
+        if self.quant is not None:
+            if use_kernel:
+                raise ValueError(
+                    "use_kernel applies to the f32 serving path only; "
+                    "the quantized path has no fused kernel (rebuild "
+                    "with quant='off' for kernel queries)")
+            from ..core.quant import serving_query
+            return serving_query(self, queries, topk=topk, mode=mode,
+                                 metric=metric)
         kq = quantize_pow2(topk)
         run = query_fn(self.mesh, self.axis_name, kq, mode, metric,
                        use_kernel, self.placement)
@@ -750,6 +779,8 @@ class ServingCorpus:
                                    b, data, nvalid,
                                    placement=self.placement)
         self.filled[b] = (data.shape[0] if nvalid is None else nvalid)
+        if self.quant is not None:
+            self.quant.update_block(b, data, int(self.filled[b]))
 
     def append_block(self, data) -> int:
         """Stream ``data`` (rows <= block capacity, validated at this

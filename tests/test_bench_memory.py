@@ -1,0 +1,84 @@
+"""bench_memory's quantized-vs-f32 resident-bytes accounting (DESIGN.md
+section 17.1): the jax-free formula mirror is pinned against the
+engine's own ``corpus_bytes_per_device``, the BENCH_engine.json
+``memory`` section has the committed shape with the >= 2x int8
+reduction, and the read-modify-write contract between bench_memory and
+bench_engine keeps the two writers of that file from clobbering each
+other.
+"""
+
+import importlib
+import json
+import sys
+from pathlib import Path
+
+import pytest
+
+ROOT = Path(__file__).resolve().parents[1]
+if str(ROOT) not in sys.path:
+    sys.path.insert(0, str(ROOT))
+
+bench_memory = importlib.import_module("benchmarks.bench_memory")
+
+from repro.core.quant import corpus_bytes_per_device  # noqa: E402
+from repro.core.scheduler import build_schedule  # noqa: E402
+
+
+@pytest.mark.parametrize("mode", ["off", "int8", "bf16"])
+@pytest.mark.parametrize("N,d,P", [(4096, 256, 4), (4096, 256, 13),
+                                   (1000, 32, 8), (77, 5, 5)])
+def test_resident_bytes_mirror_matches_engine(N, d, P, mode):
+    """The benchmark's jax-free formula and core/quant's byte accounting
+    are the same function — a drift here would make BENCH numbers lie
+    about the engine."""
+    k = build_schedule(P).k
+    assert (bench_memory.quant_resident_bytes(N, d, P, k, mode)
+            == corpus_bytes_per_device(N, d, P, k, mode))
+
+
+def test_quant_memory_stats_shape_and_reduction():
+    mem = bench_memory.quant_memory_stats(N=4096, d=256, Ps=(4, 8, 13))
+    assert set(mem) == {"N", "d", "per_P"}
+    assert set(mem["per_P"]) == {"4", "8", "13"}
+    for P, entry in mem["per_P"].items():
+        assert entry["k"] == build_schedule(int(P)).k
+        assert entry["int8_reduction_x"] >= 2.0, (P, entry)
+        assert entry["bf16_reduction_x"] > 1.0
+        assert (entry["f32_bytes_per_device"]
+                > entry["bf16_bytes_per_device"]
+                > entry["int8_bytes_per_device"])
+
+
+def test_run_read_modify_writes_engine_json(tmp_path, monkeypatch):
+    """bench_memory.run only touches the ``memory`` key of
+    BENCH_engine.json, preserving everything bench_engine wrote; a
+    missing file is created from scratch."""
+    target = tmp_path / "BENCH_engine.json"
+    monkeypatch.setattr(bench_memory, "ENGINE_JSON", target)
+    rows = []
+    bench_memory.run(rows)                       # file absent -> created
+    obj = json.loads(target.read_text())
+    assert set(obj) == {"memory"}
+    assert obj["memory"]["per_P"]["8"]["int8_reduction_x"] >= 2.0
+    assert any(name.startswith("pcit_memory_P") for name, *_ in rows)
+    assert any(name.startswith("quant_memory_P") for name, *_ in rows)
+
+    target.write_text(json.dumps(
+        {"timings_s": {"8": {"batched": 1.0}}, "memory": {"stale": True}}))
+    bench_memory.run([])                         # file present -> merged
+    obj = json.loads(target.read_text())
+    assert obj["timings_s"] == {"8": {"batched": 1.0}}   # preserved
+    assert "stale" not in obj["memory"]                   # replaced
+    assert obj["memory"]["N"] == 4096
+
+
+def test_bench_engine_carries_memory_key():
+    """The other half of the contract: bench_engine.run's full rewrite
+    re-reads and carries the ``memory`` section forward (source-level
+    pin; running bench_engine spawns minute-long fake-device children,
+    so the committed BENCH_engine.json is asserted instead)."""
+    committed = json.loads((ROOT / "BENCH_engine.json").read_text())
+    assert "memory" in committed, (
+        "BENCH_engine.json lost its memory section — bench_engine.run "
+        "must carry it across rewrites (see bench_engine.run)")
+    assert committed["memory"]["per_P"]["8"]["int8_reduction_x"] >= 2.0

@@ -13,8 +13,9 @@ import pytest
 
 from repro.core.placement import get_placement
 from repro.obs import trace as trace_mod
-from repro.obs.comm import (predict_ring_gather_comm, predict_sweep_comm,
-                            predict_tree_merge_comm, traced_sweep_comm)
+from repro.obs.comm import (block_bytes_of, predict_ring_gather_comm,
+                            predict_sweep_comm, predict_tree_merge_comm,
+                            quant_block_bytes, traced_sweep_comm)
 
 SRC = Path(__file__).resolve().parents[1] / "src"
 
@@ -109,3 +110,47 @@ def test_predictor_matches_traced_all_placements(P):
     out = run_sub(["repro.obs.comm", "--P", str(P)], devices=P)
     assert "comm predictor OK" in out, out
     assert f"P={P}" in out
+
+
+def test_block_bytes_of_itemsize():
+    """The predictor's dtype parametrization: payload bytes scale with
+    the element itemsize (DESIGN.md section 17.3)."""
+    assert block_bytes_of(4, 3) == 4 * 3 * 4
+    assert block_bytes_of(4, 3, "bfloat16") == 4 * 3 * 2
+    assert block_bytes_of(4, 3, "int8") == 4 * 3
+    assert block_bytes_of(7, 5, "float64") == 7 * 5 * 8
+
+
+def test_quant_block_bytes_counts_side_arrays():
+    """The quantized gather payload = codes at the quant itemsize plus
+    the per-block scale/delta f32 scalars (8 B) and the per-row f32
+    l1/sq side arrays (8 B per row) — the eps bound rides the gather
+    (DESIGN.md section 17.3)."""
+    block, dim = 6, 10
+    assert quant_block_bytes(block, dim, "int8") == block * dim + 8 + 8 * block
+    assert (quant_block_bytes(block, dim, "bf16")
+            == block * dim * 2 + 8 + 8 * block)
+    with pytest.raises(ValueError):
+        quant_block_bytes(block, dim, "fp4")
+
+
+@pytest.mark.parametrize("P,dtype", [(5, "bfloat16"), (8, "int8")])
+def test_predictor_matches_traced_nondefault_dtype(P, dtype):
+    """The dense predictor stays exact when the swept payload is not
+    f32: traced bytes == nz * block * dim * itemsize."""
+    out = run_sub(["repro.obs.comm", "--P", str(P), "--dtype", dtype],
+                  devices=P)
+    assert "comm predictor OK" in out, out
+    assert f"dtype={dtype}" in out
+
+
+@pytest.mark.parametrize("P,qmode", [(5, "int8"), (8, "bf16"), (13, "int8")])
+def test_quant_predictor_matches_traced(P, qmode):
+    """The quantized-stack gather (a 5-leaf QuantBlocks pytree through
+    quorum_gather) moves exactly nz * quant_block_bytes per device —
+    the predictor and the trace counters agree for every placement
+    defined at P (DESIGN.md section 17.3)."""
+    out = run_sub(["repro.obs.comm", "--P", str(P), "--quant", qmode],
+                  devices=P)
+    assert "quant comm predictor OK" in out, out
+    assert f"quant={qmode}" in out

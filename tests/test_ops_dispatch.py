@@ -32,6 +32,47 @@ from repro.kernels import query_score as qs_mod
 RNG = np.random.default_rng(7)
 
 
+@pytest.fixture(autouse=True)
+def _fresh_fallback_warnings():
+    """The kernel-absent fallback warns once per hook per process
+    (ops._warned_fallback); clear the keyset so every test here sees its
+    own first warning regardless of execution order."""
+    ops._warned_fallback.clear()
+    yield
+    ops._warned_fallback.clear()
+
+
+def test_fallback_warns_once_per_hook(monkeypatch):
+    """The RuntimeWarning fires on the first kernel-absent call of a
+    hook and stays silent on repeats (a hot engine loop retraces the
+    hook constantly — per-call warnings flood the log), while a
+    *different* hook still gets its own first warning."""
+    monkeypatch.setattr(
+        ops, "pairwise_batch_pallas",
+        lambda *a, **k: (_ for _ in ()).throw(ImportError("no pallas")))
+    quorum, lo, hi, wi, wj = _forces_args(block=17)
+    with pytest.warns(RuntimeWarning, match="falling back"):
+        ops.pairwise_batch_forces(quorum, lo, hi, wi, wj)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")          # second call: no warning
+        out = ops.pairwise_batch_forces(quorum, lo, hi, wi, wj)
+    want = ref.pairwise_batch_forces(quorum, lo, hi, wi, wj)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)
+    # an unrelated hook is keyed separately: its first failure warns
+    monkeypatch.setattr(
+        qs_mod, "query_topk_pallas",
+        lambda *a, **k: (_ for _ in ()).throw(ImportError("no pallas")))
+    k, block, d, Q, topk = 3, 12, 6, 5, 4
+    stack = jnp.asarray(RNG.normal(size=(k, block, d)), jnp.float32)
+    queries = jnp.asarray(RNG.normal(size=(Q, d)), jnp.float32)
+    mask = jnp.ones((k, block), jnp.float32)
+    gidx = jnp.asarray(
+        np.arange(k * block, dtype=np.int32).reshape(k, block))
+    with pytest.warns(RuntimeWarning, match="query_topk"):
+        ops.query_topk(stack, queries, mask, gidx, topk=topk)
+
+
 def _forces_args(k=5, block=9, n_pairs=7):
     quorum = jnp.asarray(np.concatenate(
         [RNG.normal(size=(k, block, 3)),

@@ -1,0 +1,229 @@
+"""Quantized scoring path tests (DESIGN.md section 17).
+
+The acceptance sweep: ``repro.core.quant`` selfcheck — the rescored
+join, k-NN graph, and serving query must be **bit-identical** to the
+f32 oracles across every execution mode (batched / overlap / scan /
+fused kernel), both metrics, including after a streamed serving block
+replace — for **every registered placement** at P in {4, 5, 7, 8, 12,
+13} where the placement is defined (the test_sparse.py sweep, extended
+to the quantized pipeline).  The parametrized sweep pins the CI
+placement-matrix cell's configuration (``REPRO_QUANT=int8``); anchor
+cases cover bf16 and the both-qmodes default.  Runs in fake-device
+subprocesses (dry-run isolation rule, see tests/test_distributed.py).
+
+Host-level pieces — the per-block quantizer's error contract, the
+certified eps bounds, the byte accounting, and the ``REPRO_QUANT``
+routing of the public workload entry points — are covered in-process
+or in a single small subprocess.
+"""
+
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.core.placement import registered_placements
+from repro.core.quant import (corpus_bytes_per_device, eps_pairs,
+                              quant_itemsize, quantize_corpus)
+
+SRC = Path(__file__).resolve().parents[1] / "src"
+
+P_SWEEP = (4, 5, 7, 8, 12, 13)
+
+QUANT_CASES = [
+    (P, name)
+    for P in P_SWEEP
+    for name, cls in sorted(registered_placements().items())
+    if cls.supports(P)
+]
+
+
+def run_sub(code: str, devices: int, env_extra: dict | None = None) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = str(SRC)
+    env.update(env_extra or {})
+    r = subprocess.run([sys.executable, "-c", code], env=env,
+                       capture_output=True, text=True, timeout=600)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    return r.stdout
+
+
+@pytest.mark.parametrize("P,name", QUANT_CASES,
+                         ids=[f"{n}-P{P}" for P, n in QUANT_CASES])
+def test_quant_selfcheck_matches_oracle(P, name):
+    """The CI-cell configuration: REPRO_QUANT=int8 restricts the swept
+    quant modes (the knob's routing is itself under test) and the
+    selfcheck asserts bit-exact join / k-NN / serving results across
+    every engine mode plus the fused kernel."""
+    out = run_sub(
+        f"from repro.core.quant import selfcheck_main; "
+        f"selfcheck_main({P}, placement={name!r})", P,
+        env_extra={"REPRO_QUANT": "int8"})
+    assert "quant selfcheck OK" in out
+    assert f"P={P} placement={name}" in out
+    assert "quant=int8 " in out
+    assert "modes=batched,overlap,scan,kernel" in out
+
+
+def test_quant_selfcheck_bf16_anchor():
+    """bf16 through the same full-mode selfcheck (one anchor — the
+    parametrized sweep runs int8, the cheaper and tighter-band mode)."""
+    out = run_sub(
+        "from repro.core.quant import selfcheck_main; "
+        "selfcheck_main(8, placement='cyclic')", 8,
+        env_extra={"REPRO_QUANT": "bf16"})
+    assert "quant selfcheck OK" in out
+    assert "quant=bf16 " in out
+
+
+def test_quant_selfcheck_default_sweeps_both_modes():
+    """Without REPRO_QUANT the selfcheck sweeps both quant modes."""
+    out = run_sub(
+        "from repro.core.quant import selfcheck_main; "
+        "selfcheck_main(4, modes=('batched', 'scan'))", 4)
+    assert "quant selfcheck OK" in out
+    assert "quant=int8,bf16 " in out
+
+
+def test_env_quant_routing():
+    """REPRO_QUANT=int8 routes the public f32 entry points
+    (similarity_join / knn_graph / ServingCorpus) through the quantized
+    pipeline with bit-identical results, and ``quant='off'`` opts back
+    out per call (DESIGN.md section 17.5)."""
+    code = """
+import numpy as np, jax
+from repro.core.sparse import (brute_force_join, similarity_join,
+                               threshold_for_selectivity)
+from repro.core.knn import brute_force_knn, knn_graph
+from repro.serving.engine import ServingCorpus
+
+rng = np.random.default_rng(5)
+corpus = rng.normal(size=(45, 12)).astype(np.float32)
+thr = threshold_for_selectivity(corpus, 0.1)
+mesh = jax.make_mesh((4,), ("q",), axis_types=(jax.sharding.AxisType.Auto,))
+
+res = similarity_join(corpus, mesh, threshold=thr)      # env -> int8 path
+wi, wj, ws = brute_force_join(corpus, thr)
+assert np.array_equal(res.i, wi) and np.array_equal(res.j, wj)
+assert np.allclose(res.scores, ws, rtol=1e-6, atol=1e-5)  # f32 rescore
+off = similarity_join(corpus, mesh, threshold=thr, quant="off")
+assert np.array_equal(off.i, wi) and np.array_equal(off.j, wj)
+
+g = knn_graph(corpus, mesh, topk=3)                     # env -> int8 path
+ref = brute_force_knn(corpus, 3)
+assert np.array_equal(g.indices, ref.indices)
+assert np.array_equal(knn_graph(corpus, mesh, topk=3, quant="off").indices,
+                      ref.indices)
+
+sc = ServingCorpus.build(corpus, mesh)                  # env -> int8 path
+assert sc.quant is not None
+vals, idx = sc.query(corpus[:3] * 0.9, topk=3)
+rq = brute_force_knn(corpus, 3)  # queries are scaled rows: just sanity
+assert idx.shape == (3, 3)
+off_sc = ServingCorpus.build(corpus, mesh, quant="off")
+assert off_sc.quant is None
+ov, oi = off_sc.query(corpus[:3] * 0.9, topk=3)
+assert np.array_equal(idx, oi)
+assert np.allclose(vals, ov, rtol=1e-6, atol=1e-5)
+print("QUANT-ENV-OK")
+"""
+    out = run_sub(code, 4, env_extra={"REPRO_QUANT": "int8"})
+    assert "QUANT-ENV-OK" in out
+
+
+def test_quantize_corpus_error_contract():
+    """Per-block symmetric int8: reconstruction error of every element
+    is within the block's certified delta; bf16 within maxabs * 2^-8;
+    all-zero blocks get scale 1 / delta 0 (no NaNs, exact zeros)."""
+    rng = np.random.default_rng(0)
+    P, block, d = 4, 8, 6
+    x = rng.normal(size=(P * block, d)).astype(np.float32)
+    x[:block] *= 0.01                       # small-scale block
+    x[block:2 * block] = 0.0                # all-zero block
+    for mode in ("int8", "bf16"):
+        qc = quantize_corpus(x, P, block, mode)
+        assert qc.scale.shape == (P,) and qc.delta.shape == (P,)
+        assert qc.delta[1] == 0.0 and qc.scale[1] == 1.0
+        deq = np.zeros_like(x)
+        for b in range(P):
+            rows = slice(b * block, (b + 1) * block)
+            deq[rows] = (np.asarray(qc.q[rows], np.float32)
+                         * float(qc.scale[b]))
+            err = np.abs(deq[rows] - x[rows])
+            assert err.max() <= float(qc.delta[b]) + 1e-12, (mode, b)
+        assert np.all(deq[block:2 * block] == 0.0)
+        # side arrays are exact f32 stats of the ORIGINAL rows
+        np.testing.assert_allclose(qc.l1, np.abs(x).sum(1), rtol=1e-6)
+        np.testing.assert_allclose(qc.sq, (x * x).sum(1), rtol=1e-6)
+
+
+@pytest.mark.parametrize("mode", ["int8", "bf16"])
+@pytest.mark.parametrize("metric", ["dot", "l2"])
+def test_eps_pairs_bounds_true_error(mode, metric):
+    """The certified bound: |score_q - score_f32| <= eps(i, j) for the
+    host mirror of the device scoring formula, on data with mixed
+    per-block scales."""
+    rng = np.random.default_rng(2)
+    P, block, d = 5, 16, 24
+    x = rng.normal(size=(P * block, d)).astype(np.float32)
+    x[:block] *= 0.03
+    x[2 * block:3 * block] *= 40.0
+    qc = quantize_corpus(x, P, block, mode)
+    deq = np.zeros_like(x)
+    for b in range(P):
+        rows = slice(b * block, (b + 1) * block)
+        deq[rows] = np.asarray(qc.q[rows], np.float32) * float(qc.scale[b])
+    ai = rng.integers(0, P * block, 400).astype(np.int64)
+    aj = rng.integers(0, P * block, 400).astype(np.int64)
+    if metric == "dot":
+        s_f = np.einsum("nd,nd->n", x[ai], x[aj])
+        s_q = np.einsum("nd,nd->n", deq[ai], deq[aj])
+    else:
+        n2 = (x * x).sum(1)
+        dots_f = np.einsum("nd,nd->n", x[ai], x[aj])
+        dots_q = np.einsum("nd,nd->n", deq[ai], deq[aj])
+        s_f = (2.0 * dots_f - n2[aj]) - n2[ai]
+        s_q = (2.0 * dots_q - n2[aj]) - n2[ai]
+    eps = eps_pairs(qc, ai, aj, metric)
+    assert np.all(np.abs(s_q - s_f) <= eps), (
+        mode, metric, float(np.max(np.abs(s_q - s_f) - eps)))
+    assert np.all(eps > 0)
+
+
+def test_quant_itemsize_and_bytes():
+    assert quant_itemsize("int8") == 1
+    assert quant_itemsize("bf16") == 2
+    assert quant_itemsize("off") == 4
+    with pytest.raises(ValueError, match="quant mode"):
+        quant_itemsize("fp8")
+    # int8 resident bytes clear the >=2x reduction bar at every swept P
+    for P in P_SWEEP:
+        from repro.core.scheduler import build_schedule
+        k = build_schedule(P).k
+        f32 = corpus_bytes_per_device(4096, 128, P, k, "off")
+        i8 = corpus_bytes_per_device(4096, 128, P, k, "int8")
+        assert f32 / i8 >= 2.0, (P, f32 / i8)
+
+
+def test_bad_quant_value_rejected():
+    """Both the env knob and the explicit argument reject unknown
+    modes."""
+    code = """
+import numpy as np, jax, pytest, warnings
+from repro.core.sparse import similarity_join
+corpus = np.eye(8, 4, dtype=np.float32)
+mesh = jax.make_mesh((4,), ("q",), axis_types=(jax.sharding.AxisType.Auto,))
+try:
+    similarity_join(corpus, mesh, threshold=0.5, quant="fp4")
+except ValueError as e:
+    assert "quant" in str(e), e
+else:
+    raise AssertionError("unknown quant mode must raise")
+print("QUANT-REJECT-OK")
+"""
+    out = run_sub(code, 4)
+    assert "QUANT-REJECT-OK" in out
